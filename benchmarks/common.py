@@ -1,0 +1,88 @@
+"""Shared benchmark harness: builds the federated testbed (pretrained base +
+memory-budgeted clients + Dirichlet partitions) and runs any method to
+convergence, returning (accuracy, wall, comm) — the measurements behind every
+paper-table benchmark.
+
+Scale note (EXPERIMENTS.md): models/datasets are CPU-reduced; the *claims*
+validated are ordering/trend claims, not absolute accuracies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import (DATASETS, classification_batch,
+                                  make_classification)
+from repro.fed.baselines import BASELINES
+from repro.fed.chainfed import ChainFed
+from repro.fed.engine import FedSim, run_rounds
+from repro.models.config import ChainConfig, FedConfig
+from repro.train.pretrain import pretrained_base
+
+DEFAULT_ROUNDS = 14
+PRETRAIN_STEPS = 300
+
+
+@dataclasses.dataclass
+class Result:
+    name: str
+    acc: float
+    rounds: int
+    wall_s: float
+    comm_bytes: int
+    aux: dict
+
+
+def make_sim(dataset: str, iid: bool, cfg, seed=0, n_clients=12,
+             clients_per_round=4, batch_size=8, memory_constrained=True):
+    spec = DATASETS[dataset]
+    spec = dataclasses.replace(spec, vocab=cfg.vocab_size)
+    tokens, labels = make_classification(spec)
+    fed = FedConfig(n_clients=n_clients, clients_per_round=clients_per_round,
+                    iid=iid, dirichlet_alpha=1.0, seed=seed)
+    batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
+                            classification_batch(spec, tokens, labels, idx).items()}
+    sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=batch_size,
+                 memory_constrained=memory_constrained)
+    return sim, tokens, labels, spec
+
+
+def base_params(cfg, tokens, steps=PRETRAIN_STEPS):
+    return pretrained_base(cfg, tokens, steps=steps)
+
+
+def run_method(method: str, cfg, chain: ChainConfig, sim, params,
+               rounds=DEFAULT_ROUNDS, seed=0, chainfed_kw=None) -> Result:
+    key = jax.random.PRNGKey(seed)
+    if method == "chainfed":
+        strat = ChainFed(cfg, chain, key, **(chainfed_kw or {}))
+        strat.trainer.set_params(params)
+    elif method == "no_ft":
+        strat = BASELINES["full_adapters"](cfg, chain, key)
+        strat.params = params
+        loss, acc = strat.evaluate(sim.eval_batch())
+        return Result("no_ft", acc, 0, 0.0, 0, {})
+    else:
+        strat = BASELINES[method](cfg, chain, key)
+        strat.params = params
+    t0 = time.time()
+    hist = run_rounds(sim, strat, rounds, eval_every=max(1, rounds // 3))
+    wall = time.time() - t0
+    best = max((h.acc for h in hist), default=0.0)
+    return Result(method, best, rounds, wall,
+                  strat.comm_bytes_per_round(),
+                  {"final": hist[-1].acc if hist else 0.0,
+                   "participants": hist[-1].n_participants if hist else 0})
+
+
+def csv_row(table: str, r: Result, derived_extra=""):
+    us = (r.wall_s / max(1, r.rounds)) * 1e6
+    derived = f"acc={r.acc:.4f};comm={r.comm_bytes}"
+    if derived_extra:
+        derived += ";" + derived_extra
+    return f"{table}/{r.name},{us:.0f},{derived}"

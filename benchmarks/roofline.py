@@ -1,0 +1,130 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms from
+every dry-run artifact in experiments/dryrun/ and identify each case's
+dominant bottleneck.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for the train shape;
+the ratio MODEL_FLOPS / (chips·HLO_FLOPs) flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.core.memory import total_param_count, layer_param_count
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+SHAPE_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def active_params(cfg) -> int:
+    """Activated parameters per token (MoE: shared + top-k routed)."""
+    if cfg.n_experts:
+        dense_like = cfg.replace(n_experts=0, n_shared_experts=0)
+        attn_side = layer_param_count(dense_like) - 3 * cfg.d_model * cfg.d_ff
+        expert = 3 * cfg.d_model * cfg.expert_d_ff
+        per_layer = (attn_side + (cfg.top_k + cfg.n_shared_experts) * expert
+                     + cfg.d_model * cfg.n_experts)
+        return cfg.padded_vocab * cfg.d_model + cfg.n_layers * per_layer
+    return total_param_count(cfg)
+
+
+def analyze(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    chips = rec["chips"]
+    flops = rec["cost"]["flops_per_chip"]
+    hbytes = rec["cost"]["bytes_per_chip"]
+    cbytes = rec["collectives"]["total_bytes"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbytes / HBM_BW
+    t_coll = cbytes / ICI_BW
+    dominant = max([("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)], key=lambda kv: kv[1])[0]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    n_active = active_params(cfg)
+    mult = 6 if rec["shape"] == "train_4k" else 2   # fwd+bwd vs fwd-only
+    model_flops = mult * n_active * tokens
+    useful = model_flops / max(1.0, flops * chips)
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "chips")},
+        "seq_shard": rec.get("seq_shard", False),
+        "step": rec.get("step", "chain"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops, "useful_ratio": useful,
+        "peak_gib": rec["memory"]["peak_per_chip"] / 2 ** 30,
+    }
+
+
+def load_records(mesh=None, step="chain", seq_shard=None, optimized=False):
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if step and r.get("step", "chain") != step:
+            continue
+        if seq_shard is not None and r.get("seq_shard", False) != seq_shard:
+            continue
+        is_opt = bool(r.get("ssm_ckpt") or r.get("decode_align")
+                      or r.get("gpo_seq"))
+        if is_opt != optimized:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(rounds=0, fast=False):
+    rows, table = [], {}
+    recs = [r for r in load_records(mesh="16x16", step="chain",
+                                    seq_shard=False)
+            if not r.get("cost_unroll")]
+    cost = {(r["arch"], r["shape"]): r
+            for r in load_records(mesh="16x16", step="chain", seq_shard=False)
+            if r.get("cost_unroll")}
+    for r in recs:
+        key = (r["arch"], r["shape"])
+        if key in cost:   # memory from scan compile, cost from unrolled
+            r = {**r, "cost": cost[key]["cost"],
+                 "collectives": cost[key]["collectives"]}
+        a = analyze(r)
+        key = f"{a['arch']}/{a['shape']}"
+        table[key] = a
+        rows.append(
+            f"roofline/{key},0,"
+            f"t_comp={a['t_compute_s']:.3e};t_mem={a['t_memory_s']:.3e};"
+            f"t_coll={a['t_collective_s']:.3e};dom={a['dominant']};"
+            f"useful={a['useful_ratio']:.3f};peak_gib={a['peak_gib']:.2f}")
+    return rows, table
+
+
+def markdown_table(recs):
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | useful FLOP ratio | peak GiB/chip |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        a = analyze(r)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute_s']:.2e} | {a['t_memory_s']:.2e} "
+            f"| {a['t_collective_s']:.2e} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.2f} | {a['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows, _ = run()
+    print("\n".join(rows))

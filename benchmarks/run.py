@@ -1,0 +1,57 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run              # full suite
+    PYTHONPATH=src python -m benchmarks.run --fast       # reduced sweep
+    PYTHONPATH=src python -m benchmarks.run --only table1,fig9
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig3_memory, fig8_window, fig9_lambda, roofline, table1_main,
+               table2_threshold, table3_instruction, table4_ablation)
+
+SUITES = {
+    "fig3": fig3_memory,
+    "roofline": roofline,
+    "table1": table1_main,
+    "table2": table2_threshold,
+    "table3": table3_instruction,
+    "table4": table4_ablation,
+    "fig8": fig8_window,
+    "fig9": fig9_lambda,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+
+    names = list(SUITES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        mod = SUITES[name]
+        t0 = time.time()
+        try:
+            rows, _ = mod.run(fast=args.fast)
+            for r in rows:
+                print(r, flush=True)
+            print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 3: instruction tuning with varying co-tuning window Q —
+CHAINFED vs Full Adapters† on the causal-LM task, with memory reduction.
+
+Claims validated: CHAINFED matches/exceeds the upper bound at a multiple
+lower peak memory; larger Q trades memory for accuracy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import csv_row
+from repro.configs import get_config
+from repro.core.memory import peak_memory
+from repro.data.synthetic import lm_batch, make_instruction
+from repro.fed.baselines import BASELINES
+from repro.fed.chainfed import ChainFed
+from repro.fed.engine import FedSim, run_rounds
+from repro.models.config import ChainConfig, FedConfig
+from repro.train.pretrain import pretrained_base
+
+
+def run(rounds=24, fast=False):
+    cfg = get_config("llama_100m").replace(
+        n_layers=8, d_model=256, n_heads=4, n_kv_heads=4, d_ff=512,
+        vocab_size=4096)
+    # pretrain on mapping 0; the federated task carries NEW associations
+    # (mapping 1) that adapters must memorize — instruction-tuning semantics
+    pt_tokens, _ = make_instruction(n_samples=2048, seq_len=32,
+                                    vocab=cfg.vocab_size, n_keys=32,
+                                    mapping_seed=0)
+    tokens, labels2d = make_instruction(n_samples=2048, seq_len=32,
+                                        vocab=cfg.vocab_size, n_keys=32,
+                                        seed=8, mapping_seed=1)
+    labels = np.zeros(len(tokens), np.int64)
+    fed = FedConfig(n_clients=10, clients_per_round=4, iid=True)
+    batch_fn = lambda idx: {k: jnp.asarray(v)
+                            for k, v in lm_batch(tokens, labels2d, idx).items()}
+    sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=16,
+                 memory_constrained=False)
+    params = pretrained_base(cfg, pt_tokens, steps=300)
+    chain0 = ChainConfig(window=3, lam=0.2, local_steps=2, lr=3e-3,
+                         optimizer="adamw", train_head=True)
+
+    rows, table = [], {}
+    # upper bound
+    fa = BASELINES["full_adapters"](cfg, chain0, jax.random.PRNGKey(0))
+    fa.params = params
+    t0 = time.time()
+    hist = run_rounds(sim, fa, rounds, eval_every=3)
+    fa_acc = max(h.acc for h in hist)
+    fa_mem = peak_memory(cfg, "full_adapters", 16, 32)["total"]
+    table["full_adapters"] = {"acc": fa_acc, "mem_red": 1.0}
+    rows.append(f"table3/full_adapters,{(time.time()-t0)/rounds*1e6:.0f},"
+                f"acc={fa_acc:.4f};mem_red=1.0")
+
+    for Q in ([3] if fast else [2, 3, 4]):
+        chain = dataclasses.replace(chain0, window=Q)
+        strat = ChainFed(cfg, chain, jax.random.PRNGKey(0))
+        strat.trainer.set_params(params)
+        t0 = time.time()
+        hist = run_rounds(sim, strat, rounds, eval_every=3)
+        acc = max(h.acc for h in hist)
+        mem = peak_memory(cfg, "chainfed", 16, 32, window=Q,
+                          l_start=strat.trainer.l_start)["total"]
+        red = fa_mem / mem
+        table[f"Q={Q}"] = {"acc": acc, "mem_red": red}
+        rows.append(f"table3/chainfed_Q{Q},{(time.time()-t0)/rounds*1e6:.0f},"
+                    f"acc={acc:.4f};mem_red={red:.2f}")
+    return rows, table

@@ -1,0 +1,83 @@
+"""End-to-end driver (deliverable b): federated instruction tuning of the
+~100M-parameter LLaMA-class model for a few hundred local steps.
+
+Mirrors the paper's §5.7 protocol at CPU scale: Alpaca-style next-token
+supervision (synthetic key-value recall corpus), AdamW, 10% client
+participation, CHAINFED chain optimization vs the Full Adapters† upper
+bound — and reports accuracy + analytic peak memory for both.
+
+    PYTHONPATH=src python examples/federated_instruction_tuning.py           # fast preset
+    PYTHONPATH=src python examples/federated_instruction_tuning.py --full    # ~100M, hundreds of steps
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.memory import peak_memory
+from repro.data.synthetic import lm_batch, make_instruction
+from repro.fed.baselines import BASELINES
+from repro.fed.chainfed import ChainFed
+from repro.fed.engine import FedSim, run_rounds
+from repro.models.config import ChainConfig, FedConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 40 rounds x 4 clients x 2 steps")
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("llama_100m")
+    if not args.full:   # fast preset for CI-style runs
+        cfg = cfg.replace(n_layers=4, d_model=256, n_heads=4, n_kv_heads=4,
+                          d_ff=512, vocab_size=4096)
+    rounds = args.rounds or (40 if args.full else 12)
+
+    chain = ChainConfig(window=3, lam=0.2, foat_threshold=0.8,
+                        local_steps=2, lr=1e-3, optimizer="adamw")
+    fed = FedConfig(n_clients=20, clients_per_round=2, iid=True)  # 10% of 20
+
+    pt_tokens, _ = make_instruction(n_samples=2048, seq_len=32,
+                                    vocab=cfg.vocab_size, n_keys=32,
+                                    mapping_seed=0)
+    tokens, labels2d = make_instruction(n_samples=2048, seq_len=32,
+                                        vocab=cfg.vocab_size, n_keys=32,
+                                        seed=8, mapping_seed=1)
+    labels = np.zeros(len(tokens), np.int64)
+    batch_fn = lambda idx: {k: jnp.asarray(v)
+                            for k, v in lm_batch(tokens, labels2d, idx).items()}
+    sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=16,
+                 memory_constrained=False)
+
+    from repro.train.pretrain import pretrained_base
+    base = pretrained_base(cfg, pt_tokens, steps=400 if args.full else 200)
+
+    results = {}
+    for name, make in [("chainfed", lambda k: ChainFed(cfg, chain, k)),
+                       ("full_adapters", lambda k: BASELINES["full_adapters"](cfg, chain, k))]:
+        t0 = time.time()
+        strat = make(jax.random.PRNGKey(0))
+        if name == "chainfed":
+            strat.trainer.set_params(base)
+        else:
+            strat.params = base
+        hist = run_rounds(sim, strat, rounds, eval_every=max(2, rounds // 5),
+                          verbose=True)
+        mem = peak_memory(cfg, "chainfed" if name == "chainfed" else "full_adapters",
+                          batch=16, seq=32, window=chain.window)
+        results[name] = (hist[-1].acc, mem["total"], time.time() - t0)
+        print(f"[{name}] acc={hist[-1].acc:.3f} "
+              f"peak-mem={mem['total']/2**20:.0f} MiB  ({results[name][2]:.0f}s)")
+
+    cf, fa = results["chainfed"], results["full_adapters"]
+    print(f"\nmemory reduction: ×{fa[1] / cf[1]:.2f}   "
+          f"accuracy delta: {cf[0] - fa[0]:+.3f} (paper: CHAINFED ≥ upper bound)")
+
+
+if __name__ == "__main__":
+    main()

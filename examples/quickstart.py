@@ -1,0 +1,49 @@
+"""Quickstart: CHAINFED in ~40 lines of public API.
+
+Fine-tunes a tiny BERT-class model on a synthetic 4-class task with the full
+paper protocol — FOAT boundary selection, DLCT sliding-window co-tuning, GPO
+dual loss, federated aggregation — and prints the accuracy trajectory.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import DATASETS, classification_batch, make_classification
+from repro.fed.chainfed import ChainFed
+from repro.fed.engine import FedSim, run_rounds
+from repro.models.config import ChainConfig, FedConfig
+
+
+def main():
+    cfg = get_config("bert_tiny")
+    chain = ChainConfig(window=2, lam=0.2, foat_threshold=0.8,
+                        local_steps=2, lr=3e-3, optimizer="adamw")
+    fed = FedConfig(n_clients=12, clients_per_round=4, iid=False,
+                    dirichlet_alpha=1.0)
+
+    spec = DATASETS["agnews"]
+    tokens, labels = make_classification(spec)
+    batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
+                            classification_batch(spec, tokens, labels, idx).items()}
+    sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=8)
+
+    strat = ChainFed(cfg, chain, jax.random.PRNGKey(0))
+    # stand-in for a pretrained checkpoint: label-free LM pretraining on the
+    # corpus bodies (the paper fine-tunes pretrained BERT/LLaMA backbones)
+    from repro.train.pretrain import pretrained_base
+    strat.trainer.set_params(pretrained_base(cfg, tokens, steps=300, verbose=True))
+    strat.maybe_setup_foat(sim)
+    print(f"FOAT picked L_start = {strat.trainer.l_start} "
+          f"(threshold T = {chain.foat_threshold})")
+    print(f"DLCT schedule: offsets {strat.trainer.schedule.offsets}, "
+          f"window Q = {chain.window}")
+
+    hist = run_rounds(sim, strat, rounds=20, eval_every=4, verbose=True)
+    print(f"\nfinal accuracy: {hist[-1].acc:.3f} "
+          f"(comm {hist[-1].comm_bytes / 1024:.0f} KiB/round/client)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Batched serving demo (deliverable b): prefill + KV-cached greedy decode
+for three architecture families — dense (GQA), SSM (Mamba state), and MoE —
+verifying the incremental path against the full forward.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import generate
+from repro.models import transformer as T
+
+
+def run(arch, batch=4, prompt_len=12, gen=12):
+    cfg = get_smoke_config(arch)
+    if cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=None)
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts))
+    key = jax.random.PRNGKey(1)
+    params = T.init_lm(key, cfg)
+    adapters = T.init_adapters(key, cfg)
+    prompts = jax.random.randint(key, (batch, prompt_len), 4, cfg.vocab_size)
+
+    t0 = time.time()
+    toks = generate(params, adapters, cfg, prompts, gen)
+    dt = time.time() - t0
+
+    # verify the first generated token against the non-cached forward
+    full, _ = T.forward_full(params, adapters, {"tokens": prompts}, cfg,
+                             remat=False)
+    expect = jnp.argmax(full[:, -1], axis=-1)
+    ok = bool(jnp.all(toks[:, 0] == expect))
+    print(f"{arch:20s} {batch}×({prompt_len}+{gen})  {batch*gen/dt:6.1f} tok/s  "
+          f"cache-vs-full first-token match: {ok}")
+    assert ok, arch
+
+
+def main():
+    for arch in ["qwen2_0_5b", "falcon_mamba_7b", "olmoe_1b_7b"]:
+        run(arch)
+
+
+if __name__ == "__main__":
+    main()

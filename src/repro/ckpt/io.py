@@ -1,0 +1,66 @@
+"""msgpack pytree checkpointing (host-local; restore re-shards under the
+current mesh via device_put with the ruleset's NamedShardings)."""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    x = np.asarray(x)
+    dt = str(x.dtype)
+    if dt == "bfloat16":
+        return {"__nd__": True, "dtype": "bfloat16",
+                "shape": list(x.shape),
+                "data": x.view(np.uint16).tobytes()}
+    return {"__nd__": True, "dtype": dt, "shape": list(x.shape),
+            "data": x.tobytes()}
+
+
+def _unpack_leaf(d):
+    if d["dtype"] == "bfloat16":
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return jnp.asarray(np.frombuffer(d["data"], d["dtype"]).reshape(d["shape"]))
+
+
+def save_pytree(path, tree, step: int = 0, meta: dict | None = None):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "step": step,
+        "meta": meta or {},
+        "treedef": str(treedef),
+        "leaves": [_pack_leaf(jax.device_get(l)) for l in leaves],
+    }
+    tmp = path.with_suffix(".tmp")
+    tmp.write_bytes(msgpack.packb(payload, use_bin_type=True))
+    tmp.replace(path)                        # atomic swap
+    return path
+
+
+def load_pytree(path, like):
+    """Restore into the structure of ``like`` (shape-checked)."""
+    payload = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    got = [_unpack_leaf(d) for d in payload["leaves"]]
+    assert len(got) == len(leaves), (len(got), len(leaves))
+    for g, l in zip(got, leaves):
+        assert tuple(g.shape) == tuple(l.shape), (g.shape, l.shape)
+    return jax.tree_util.tree_unflatten(treedef, got), payload["step"]
+
+
+def save_train_state(path, params, adapters, round_idx, extra=None):
+    return save_pytree(path, {"params": params, "adapters": adapters},
+                       step=round_idx, meta=extra or {})
+
+
+def load_train_state(path, params_like, adapters_like):
+    tree, step = load_pytree(path, {"params": params_like,
+                                    "adapters": adapters_like})
+    return tree["params"], tree["adapters"], step

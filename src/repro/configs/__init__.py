@@ -1,0 +1,35 @@
+"""Architecture registry: every assigned arch is a selectable config
+(``--arch <id>``); each file cites its source."""
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = [
+    "gemma_2b", "olmoe_1b_7b", "deepseek_67b", "qwen2_0_5b",
+    "deepseek_moe_16b", "hymba_1_5b", "qwen2_1_5b", "falcon_mamba_7b",
+    "seamless_m4t_large_v2", "qwen2_vl_72b",
+    # paper-side reproduction configs (BERT-class + LLaMA-class)
+    "bert_tiny", "llama_100m",
+]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+_ALIASES.update({"qwen2-0.5b": "qwen2_0_5b", "qwen2-1.5b": "qwen2_1_5b",
+                 "olmoe-1b-7b": "olmoe_1b_7b", "deepseek-moe-16b": "deepseek_moe_16b",
+                 "hymba-1.5b": "hymba_1_5b", "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+                 "qwen2-vl-72b": "qwen2_vl_72b"})
+
+ASSIGNED = ARCH_IDS[:10]
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f".{arch}", __name__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f".{arch}", __name__)
+    return mod.SMOKE

@@ -1,0 +1,12 @@
+"""Paper-side reproduction config: BERT-class bidirectional encoder
+classifier (the paper's text-classification testbed, scaled to CPU).
+Classification is cast as label-token prediction at the final position."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="bert-tiny", family="dense", source="paper §5.1 (DistilBERT/BERT family)",
+    n_layers=6, d_model=128, n_heads=4, n_kv_heads=4, d_ff=512,
+    vocab_size=1024, activation="gelu", qkv_bias=True, norm="layernorm",
+    causal=False, param_dtype="float32", compute_dtype="float32",
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,12 @@
+"""DeepSeek 67B [arXiv:2401.02954]: llama-arch, 95L, d_model=8192, 64H GQA
+kv=8, d_ff=22016, vocab 102400."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-67b", family="dense", source="arXiv:2401.02954",
+    n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab_size=102400, activation="swiglu", qkv_bias=False,
+    rope_theta=10000.0, param_dtype="bfloat16", compute_dtype="bfloat16",
+    sliding_window=4096,
+)
+SMOKE = CONFIG.reduced()

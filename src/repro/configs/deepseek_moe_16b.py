@@ -1,0 +1,16 @@
+"""DeepSeekMoE 16B [arXiv:2401.06066]: 28L, d_model=2048, 16H GQA kv=16,
+fine-grained MoE: 2 shared + 64 routed experts top-6, expert d_ff=1408,
+vocab 102400.  (Deviation noted in DESIGN: the published model uses a dense
+FFN in layer 0; we keep a homogeneous MoE stack for scan-over-layers.)"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-moe-16b", family="moe", source="arXiv:2401.06066",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab_size=102400, activation="swiglu", qkv_bias=False,
+    n_experts=64, n_shared_experts=2, top_k=6, expert_d_ff=1408,
+    capacity_factor=1.25, rope_theta=10000.0,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    sliding_window=4096,
+)
+SMOKE = CONFIG.reduced()

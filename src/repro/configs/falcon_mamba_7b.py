@@ -1,0 +1,12 @@
+"""FalconMamba 7B [arXiv:2410.05355]: mamba-1 arch, attention-free, 64L,
+d_model=4096, ssm_state=16, vocab 65024."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="falcon-mamba-7b", family="ssm", source="arXiv:2410.05355",
+    n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1, d_ff=0,
+    vocab_size=65024, activation="swiglu", qkv_bias=False,
+    ssm_state=16, ssm_expand=2,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,12 @@
+"""Gemma 2B [arXiv:2403.08295]: 18L, d_model=2048, 8 heads with head_dim=256,
+MQA (1 KV head), GeGLU d_ff=16384, vocab 256000."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma-2b", family="dense", source="arXiv:2403.08295",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=256000, activation="geglu", qkv_bias=False,
+    rope_theta=10000.0, param_dtype="bfloat16", compute_dtype="bfloat16",
+    sliding_window=4096,  # SWA variant enables the long_500k decode shape
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,13 @@
+"""Hymba 1.5B [arXiv:2411.13676]: 32L, d_model=1600, 25H GQA kv=5, d_ff=5504,
+vocab 32001 (padded to 32128), parallel attn+mamba heads, ssm_state=16."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hymba-1.5b", family="hybrid", source="arXiv:2411.13676",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab_size=32001, activation="swiglu", qkv_bias=False,
+    ssm_state=16, ssm_expand=2, rope_theta=10000.0,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    sliding_window=4096,  # Hymba interleaves SWA attention in most layers
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,11 @@
+"""Paper-side reproduction config: ~100M-param LLaMA-class causal LM for the
+end-to-end instruction-tuning driver (paper §5.7 scaled to CPU)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama-100m", family="dense", source="paper §5.7 (LLaMA family, scaled)",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=2048,
+    vocab_size=8192, activation="swiglu", qkv_bias=False,
+    param_dtype="float32", compute_dtype="float32",
+)
+SMOKE = CONFIG.reduced()

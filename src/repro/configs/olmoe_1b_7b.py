@@ -1,0 +1,13 @@
+"""OLMoE-1B-7B [arXiv:2409.02060]: 16L, d_model=2048, 16H GQA kv=16,
+MoE 64 experts top-8, expert d_ff=1024, vocab 50304."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="olmoe-1b-7b", family="moe", source="arXiv:2409.02060",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1024,
+    vocab_size=50304, activation="swiglu", qkv_bias=False,
+    n_experts=64, top_k=8, expert_d_ff=1024, capacity_factor=1.25,
+    rope_theta=10000.0, param_dtype="bfloat16", compute_dtype="bfloat16",
+    sliding_window=4096,
+)
+SMOKE = CONFIG.reduced()

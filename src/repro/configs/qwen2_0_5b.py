@@ -1,0 +1,12 @@
+"""Qwen2 0.5B [arXiv:2407.10671]: 24L, d_model=896, 14H GQA kv=2, d_ff=4864,
+vocab 151936, QKV bias."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-0.5b", family="dense", source="arXiv:2407.10671",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+    vocab_size=151936, activation="swiglu", qkv_bias=True,
+    rope_theta=1000000.0, param_dtype="bfloat16", compute_dtype="bfloat16",
+    sliding_window=4096,
+)
+SMOKE = CONFIG.reduced()

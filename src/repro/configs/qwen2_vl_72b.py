@@ -1,0 +1,16 @@
+"""Qwen2-VL 72B [arXiv:2409.12191] — language decoder backbone: 80L,
+d_model=8192, 64H GQA kv=8, d_ff=29568, vocab 152064, M-RoPE, dynamic
+resolution.  The ViT vision encoder + projector is a STUB per spec:
+input_specs provide pre-projected patch embeddings."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-vl-72b", family="vlm", source="arXiv:2409.12191",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29568,
+    vocab_size=152064, activation="swiglu", qkv_bias=True,
+    mrope=True, mrope_sections=(16, 24, 24), rope_theta=1000000.0,
+    frontend="vision_stub",
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    sliding_window=4096,
+)
+SMOKE = CONFIG.reduced()

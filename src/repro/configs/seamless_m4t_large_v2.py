@@ -1,0 +1,14 @@
+"""SeamlessM4T-large v2 [arXiv:2308.11596] — transformer BACKBONE only:
+24L encoder + 24L decoder, d_model=1024, 16H kv=16, d_ff=8192, vocab 256206
+(padded to 256256).  The mel-spectrogram/conv audio frontend is a STUB per
+spec: input_specs provide precomputed frame embeddings."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="seamless-m4t-large-v2", family="encdec", source="arXiv:2308.11596",
+    n_layers=24, n_encoder_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=256206, activation="gelu", qkv_bias=True,
+    norm="layernorm", frontend="audio_stub",
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+)
+SMOKE = CONFIG.reduced()

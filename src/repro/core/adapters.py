@@ -1,0 +1,68 @@
+"""Bottleneck adapters (paper §3.1, Eq. 1) and LoRA (for the FLoRA baseline).
+
+Adapters are kept in their own stacked pytree, separate from the base model:
+the chain optimizer slices this stack into frozen-prefix / trainable-window /
+aux-suffix segments (DLCT + GPO), and FedAvg communicates only these leaves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.module import ACTIVATIONS, normal_init
+
+
+def adapter_init(key, cfg: ModelConfig):
+    """One bottleneck adapter: h + f(h·W_down)·W_up, W_up zero-init so the
+    adapter starts as the identity (residual-safe insertion)."""
+    r = cfg.adapter.rank
+    dt = cfg.pdtype()
+    return {
+        "down": normal_init(key, (cfg.d_model, r), dt, stddev=0.02),
+        "up": jnp.zeros((r, cfg.d_model), dt),
+    }
+
+
+def adapter_stack_init(key, cfg: ModelConfig, n_layers=None):
+    """Stacked adapters (L, ...) for scan-over-layers / chain slicing."""
+    n = n_layers if n_layers is not None else cfg.total_chain_layers
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: adapter_init(k, cfg))(keys)
+
+
+def adapter_apply(p, h, cfg: ModelConfig, use_kernel: bool = False):
+    """h: (..., d_model)."""
+    if use_kernel:
+        from ..kernels import ops as kops
+        return kops.fused_adapter(h, p["down"], p["up"], activation=cfg.adapter.activation)
+    act = ACTIVATIONS[cfg.adapter.activation]
+    z = act(h @ p["down"].astype(h.dtype))
+    return h + z @ p["up"].astype(h.dtype)
+
+
+def adapter_chain_apply(stack, h, cfg: ModelConfig):
+    """Apply a stacked slice of adapters sequentially (the GPO auxiliary
+    branch: 'subsequent adapters as low-rank approximations of their layers',
+    paper §4.3).  stack leaves: (L, ...)."""
+    L = jax.tree_util.tree_leaves(stack)[0].shape[0]
+    if L == 0:
+        return h
+
+    def step(x, p):
+        return adapter_apply(p, x, cfg), None
+
+    from ..models.transformer import _unroll
+    h, _ = jax.lax.scan(step, h, stack, unroll=_unroll())
+    return h
+
+
+# ------------------------------------------------------------------ LoRA
+def lora_init(key, d_in, d_out, rank, dtype):
+    ka, _ = jax.random.split(key)
+    return {"a": normal_init(ka, (d_in, rank), dtype, stddev=0.02),
+            "b": jnp.zeros((rank, d_out), dtype)}
+
+
+def lora_apply(p, x, scale=1.0):
+    return scale * ((x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype))

@@ -1,0 +1,146 @@
+"""CHAINFED chain-optimization core (paper §4, Algorithm 1).
+
+Glues FOAT (boundary), DLCT (window schedule) and GPO (dual loss) into
+jit-compiled stage steps.  Used by the single-host federated simulation
+(benchmarks/examples) and mirrored by the pjit multi-pod step in
+``repro/train/steps.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ChainConfig, ModelConfig
+from ..models.transformer import ChainSegments, forward_chain, forward_full
+from ..optim.base import make_optimizer
+from ..train.losses import cross_entropy, gpo_loss, moe_penalty
+from .dlct import ChainSchedule, make_schedule, window_scatter, window_slice
+
+
+class ChainStage:
+    """One chain stage = (window offset k, size Q): builds the jitted GPO
+    local-update step.  Stages are cached per offset — the DLCT cyclic window
+    reuses ≤ L compilations."""
+
+    def __init__(self, cfg: ModelConfig, chain: ChainConfig, seg: ChainSegments):
+        self.cfg, self.chain, self.seg = cfg, chain, seg
+        self.final_stage = seg.prefix + seg.window >= cfg.total_chain_layers
+        self.opt = make_optimizer(chain.optimizer, chain.lr)
+        cfg_, lam, final = cfg, chain.lam, self.final_stage
+
+        def loss_fn(trainable, params, full_ad, batch):
+            # trainable = {"window": Q adapters, ["head": task head]}
+            p = params if "head" not in trainable else {**params,
+                                                        "cls_head": trainable["head"]}
+            out = forward_chain(p, trainable["window"], full_ad, batch, cfg_, seg)
+            loss, parts = gpo_loss(out, batch["labels"], cfg_, lam, final)
+            return loss, parts
+
+        @jax.jit
+        def local_step(trainable, opt_state, params, full_ad, batch):
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                trainable, params, full_ad, batch)
+            trainable, opt_state = self.opt.step(trainable, grads, opt_state)
+            return trainable, opt_state, loss, parts
+
+        self.local_step = local_step
+
+    def init_opt(self, trainable):
+        return self.opt.init(trainable)
+
+
+class ChainFedTrainer:
+    """Host-side CHAINFED driver: FOAT setup then staged federated rounds.
+
+    The per-stage jit cache means window advances don't recompile once every
+    offset has been visited (DESIGN §4)."""
+
+    def __init__(self, cfg: ModelConfig, chain: ChainConfig, params, adapters):
+        self.cfg, self.chain = cfg, chain
+        self.params, self.adapters = params, adapters
+        from ..models.transformer import init_cls_head
+        self.head = init_cls_head(params) if chain.train_head else None
+        self.l_start = 0
+        self.schedule: ChainSchedule = make_schedule(cfg, 0, chain.window)
+        self._stages = {}
+
+    @property
+    def eval_params(self):
+        if self.head is None:
+            return self.params
+        return {**self.params, "cls_head": self.head}
+
+    def set_params(self, params):
+        """Swap in a (pretrained) base; re-derives the task head."""
+        from ..models.transformer import init_cls_head
+        self.params = params
+        if self.head is not None:
+            self.head = init_cls_head(params)
+
+    # ---- Phase 1: pre-training setup (Algorithm 1, lines 1-3) ----
+    def setup_foat(self, client_batches, weights=None):
+        from .foat import run_foat
+        self.l_start, scores = run_foat(self.params, self.adapters,
+                                        client_batches, self.cfg,
+                                        self.chain.foat_threshold, weights)
+        self.schedule = make_schedule(self.cfg, self.l_start, self.chain.window)
+        return self.l_start, scores
+
+    def stage(self, round_idx: int) -> ChainStage:
+        seg = self.schedule.segments(round_idx, self.chain.advance_every)
+        if seg.prefix not in self._stages:
+            self._stages[seg.prefix] = ChainStage(self.cfg, self.chain, seg)
+        return self._stages[seg.prefix]
+
+    # ---- Phase 2: one client's local update (Algorithm 1, lines 7-9) ----
+    def client_update(self, round_idx: int, batches):
+        stage = self.stage(round_idx)
+        seg = stage.seg
+        trainable0 = {"window": window_slice(self.adapters, seg)}
+        if self.head is not None:
+            trainable0["head"] = self.head
+        trainable = trainable0
+        opt_state = stage.init_opt(trainable)
+        loss = parts = None
+        for batch in batches:
+            trainable, opt_state, loss, parts = stage.local_step(
+                trainable, opt_state, self.params, self.adapters, batch)
+        delta = jax.tree_util.tree_map(lambda w, w0: w - w0, trainable,
+                                       trainable0)
+        return delta, float(loss), parts
+
+    # ---- server aggregation (Algorithm 1, line 11) ----
+    def aggregate(self, round_idx: int, deltas, weights):
+        seg = self.stage(round_idx).seg
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / jnp.sum(w)
+        agg = jax.tree_util.tree_map(
+            lambda *ds: sum(wi * d for wi, d in zip(w, ds)), *deltas)
+        window = jax.tree_util.tree_map(
+            lambda full, d: full + d.astype(full.dtype),
+            window_slice(self.adapters, seg), agg["window"])
+        self.adapters = window_scatter(self.adapters, window, seg)
+        if self.head is not None and "head" in agg:
+            self.head = jax.tree_util.tree_map(
+                lambda h, d: (h + d).astype(h.dtype), self.head, agg["head"])
+
+    # ---- evaluation: end-to-end forward with all adapters ----
+    @functools.cached_property
+    def _eval_fn(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def ev(params, adapters, batch):
+            logits, aux = forward_full(params, adapters, batch, cfg, remat=False)
+            loss = cross_entropy(logits, batch["labels"]) + moe_penalty(aux, cfg)
+            from ..train.losses import accuracy
+            return loss, accuracy(logits, batch["labels"],
+                                  batch.get("class_tokens"))
+
+        return ev
+
+    def evaluate(self, batch):
+        loss, acc = self._eval_fn(self.eval_params, self.adapters, batch)
+        return float(loss), float(acc)

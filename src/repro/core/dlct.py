@@ -1,0 +1,74 @@
+"""DLCT — Dynamic Layer Co-Tuning (paper §4.2).
+
+A sliding window of Q adapters is co-tuned each round; the window advances by
+one layer per round (overlap Q−1), cycling over the chain [L_start, L) for
+multiple holistic passes.  For encoder-decoder models the window never
+straddles the encoder/decoder boundary (DESIGN §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from ..models.config import ModelConfig
+from ..models.transformer import ChainSegments
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSchedule:
+    """Round → ChainSegments mapping; precomputed static window offsets."""
+    offsets: tuple          # valid window start offsets, in visit order
+    window: int
+
+    def segments(self, round_idx: int, advance_every: int = 1) -> ChainSegments:
+        i = (round_idx // max(1, advance_every)) % len(self.offsets)
+        return ChainSegments(self.offsets[i], self.window)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.offsets)
+
+
+def make_schedule(cfg: ModelConfig, l_start: int, window: int) -> ChainSchedule:
+    """Enumerate the chain's window start offsets.
+
+    Dense/MoE/SSM/hybrid/VLM: k ∈ [l_start, L−Q] stepping by 1.
+    Enc-dec: same, but windows are clipped to live entirely inside one stack;
+    offsets that would straddle the boundary are snapped to the decoder start.
+    """
+    L = cfg.total_chain_layers
+    Q = max(1, min(window, L - min(l_start, L - 1)))
+    E = cfg.n_encoder_layers
+    offsets: List[int] = []
+    k = min(l_start, L - Q)
+    last = L - Q
+    while k <= last:
+        if E and k < E and k + Q > E:        # straddling → snap to decoder
+            if E not in offsets and E <= last:
+                offsets.append(E)
+            k += 1
+            continue
+        if k not in offsets:
+            offsets.append(k)
+        k += 1
+    if not offsets:
+        offsets = [max(0, L - Q)]
+    return ChainSchedule(tuple(offsets), Q)
+
+
+def window_slice(adapters, seg: ChainSegments):
+    """Extract the trainable window from the stacked adapter pytree."""
+    import jax
+    return jax.tree_util.tree_map(
+        lambda x: x[seg.prefix:seg.prefix + seg.window], adapters)
+
+
+def window_scatter(adapters, window, seg: ChainSegments):
+    """Write an updated window back into the full stack."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree_util.tree_map(
+        lambda full, w: jnp.concatenate(
+            [full[:seg.prefix], w.astype(full.dtype),
+             full[seg.prefix + seg.window:]], axis=0),
+        adapters, window)

@@ -1,0 +1,77 @@
+"""FOAT — Function-Oriented Adaptive Tuning (paper §4.4, Eq. 3, App. A).
+
+Layer functionality is quantified by CKA similarity between each layer's
+(pooled) representation and the initial embedding; the server aggregates
+client scores and picks the first layer whose CKA drops below threshold T as
+the chain's starting point ``L_start``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _center(X):
+    return X - jnp.mean(X, axis=0, keepdims=True)
+
+
+def linear_hsic(X, Y):
+    """Biased HSIC with linear kernels = ||Yᵀ X||_F² (Gram-free form).
+    X: (n, d1), Y: (n, d2), columns centered."""
+    return jnp.sum(jnp.square(X.T @ Y))
+
+
+def linear_cka(X, Y, use_kernel: bool = False):
+    """CKA(Z_i, Z_j) = HSIC(X,Y) / sqrt(HSIC(X,X)·HSIC(Y,Y))  (Eq. 3)."""
+    X = _center(X.astype(jnp.float32))
+    Y = _center(Y.astype(jnp.float32))
+    if use_kernel:
+        from ..kernels import ops as kops
+        hxy, hxx, hyy = kops.cka_gram(X, Y)
+    else:
+        hxy, hxx, hyy = linear_hsic(X, Y), linear_hsic(X, X), linear_hsic(Y, Y)
+    return hxy / jnp.sqrt(hxx * hyy + 1e-12)
+
+
+def foat_scores(layer_outputs, use_kernel: bool = False):
+    """layer_outputs: (L+1, B, d) pooled activations, Z_0 first.
+    Returns (L,) CKA(Z_i, Z_0) for i = 1..L."""
+    z0 = layer_outputs[0]
+    return jnp.stack([linear_cka(layer_outputs[i], z0, use_kernel)
+                      for i in range(1, layer_outputs.shape[0])])
+
+
+def aggregate_scores(client_scores, weights=None):
+    """Server aggregation of per-client CKA vectors (Fig. 7: upload + mean)."""
+    S = jnp.stack(client_scores)                       # (n_clients, L)
+    if weights is None:
+        return jnp.mean(S, axis=0)
+    w = jnp.asarray(weights, jnp.float32)
+    return jnp.sum(S * w[:, None], axis=0) / jnp.sum(w)
+
+
+def select_start_layer(agg_scores, threshold: float) -> int:
+    """First layer whose aggregated CKA falls below T; all layers before it
+    are considered general-purpose and stay frozen (no adapters tuned)."""
+    scores = jax.device_get(agg_scores)
+    for i, s in enumerate(scores):
+        if float(s) < threshold:
+            return i
+    return max(0, len(scores) - 1)
+
+
+def run_foat(params, adapters, client_batches, cfg, threshold: float,
+             weights=None, use_kernel: bool = False):
+    """Phase-1 setup (Algorithm 1, lines 1-2): each client one forward pass,
+    CKA scores, server aggregation, boundary selection.
+    client_batches: list of batch dicts (one per participating client)."""
+    from ..models.transformer import collect_layer_outputs
+
+    @jax.jit
+    def client_scores(batch):
+        outs = collect_layer_outputs(params, adapters, batch, cfg)
+        return foat_scores(outs, use_kernel)
+
+    scores = [client_scores(b) for b in client_batches]
+    agg = aggregate_scores(scores, weights)
+    return select_start_layer(agg, threshold), agg

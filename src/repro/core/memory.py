@@ -1,0 +1,136 @@
+"""Analytic peak-memory model (paper §3.2 Fig. 3, §5.4 Fig. 8, Table 3).
+
+Reproduces the paper's memory accounting: base parameters dominate (>90%),
+activations and adapter state are secondary; CHAINFED's chain paradigm bounds
+the live set to [executed prefix streaming + DLCT window + adapter states of
+the window].  Used by the memory-aware client sampler (the "memory wall" that
+excludes low-end devices) and by the memory benchmarks.
+"""
+from __future__ import annotations
+
+from ..models.config import ModelConfig
+
+BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def _b(cfg: ModelConfig) -> int:
+    return BYTES[cfg.param_dtype]
+
+
+def layer_param_count(cfg: ModelConfig) -> int:
+    d, hd = cfg.d_model, cfg.head_dim_
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    ffn = glu * d * cfg.d_ff
+    norms = 2 * d
+    if cfg.family == "ssm":
+        di = cfg.d_inner
+        mamba = (d * 2 * di + cfg.ssm_conv_width * di
+                 + di * (cfg.dt_rank + 2 * cfg.ssm_state)
+                 + cfg.dt_rank * di + di * cfg.ssm_state + di + di * d)
+        return mamba + d
+    if cfg.family == "hybrid":
+        di = cfg.d_inner
+        mamba = (d * 2 * di + cfg.ssm_conv_width * di
+                 + di * (cfg.dt_rank + 2 * cfg.ssm_state)
+                 + cfg.dt_rank * di + di * cfg.ssm_state + di + di * d)
+        return attn + mamba + ffn + 4 * d
+    if cfg.family == "moe":
+        experts = cfg.n_experts * 3 * d * cfg.expert_d_ff
+        shared = cfg.n_shared_experts * 3 * d * cfg.expert_d_ff
+        router = d * cfg.n_experts
+        return attn + experts + shared + router + norms
+    if cfg.family == "encdec":
+        return attn + ffn + norms  # decoder adds cross-attn, handled in total
+    return attn + ffn + norms
+
+
+def total_param_count(cfg: ModelConfig) -> int:
+    emb = cfg.padded_vocab * cfg.d_model
+    n = cfg.n_layers * layer_param_count(cfg)
+    if cfg.is_encdec:
+        d, hd = cfg.d_model, cfg.head_dim_
+        cross = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads + cfg.n_heads)
+        n += cfg.n_encoder_layers * layer_param_count(cfg) + cfg.n_layers * cross
+    return emb + n + cfg.d_model
+
+
+def adapter_param_count(cfg: ModelConfig, n_layers=None) -> int:
+    n = n_layers if n_layers is not None else cfg.total_chain_layers
+    return n * 2 * cfg.d_model * cfg.adapter.rank
+
+
+def activation_bytes_per_layer(cfg: ModelConfig, batch: int, seq: int) -> int:
+    """Saved-for-backward footprint per layer (inputs + attn/ffn intermediates
+    under input-saving remat ≈ 4·B·S·d)."""
+    return 4 * batch * seq * cfg.d_model * _b(cfg)
+
+
+def peak_memory(cfg: ModelConfig, method: str, batch: int, seq: int,
+                window: int = 3, l_start: int = 0, lora_rank: int = 8,
+                layer_offload: bool = True) -> dict:
+    """Returns {params, activations, adapter_state, total} bytes for a local
+    client step under each method's execution model."""
+    b = _b(cfg)
+    L = cfg.total_chain_layers
+    p_layer = layer_param_count(cfg) * b
+    p_emb = (cfg.padded_vocab * cfg.d_model + cfg.d_model) * b
+    p_all = total_param_count(cfg) * b
+    a_layer = activation_bytes_per_layer(cfg, batch, seq)
+    ad_layer = 2 * cfg.d_model * cfg.adapter.rank * b
+    opt_mult = 4  # grads + AdamW m/v + fp32 master ≈ 4× trainable params
+
+    if method in ("full_adapters", "fedadapter", "c2a", "flora"):
+        rank = lora_rank if method == "flora" else cfg.adapter.rank
+        ad = 2 * cfg.d_model * rank * b * L
+        return _pack(p_all, a_layer * L, ad * (1 + opt_mult))
+    if method == "linear_probing":
+        # small task classifier (paper: output layer only), not the full
+        # tied-vocab head
+        head = 128 * cfg.d_model * b
+        return _pack(p_all, a_layer, head * opt_mult)
+    if method in ("fwdllm", "fedkseed"):
+        # zeroth-order: no activation storage; FwdLLM perturbs adapters only
+        extra = ad_layer * L * 2 if method == "fwdllm" else 0
+        return _pack(p_all, a_layer, extra)
+    if method == "fedra":
+        # random subset of ~L/2 layers resident per client
+        keep = max(1, L // 2)
+        return _pack(p_emb + p_layer * keep, a_layer * keep,
+                     ad_layer * keep * (1 + opt_mult))
+    if method == "chainfed":
+        # prefix streams through (offload: one transient layer resident),
+        # window fully resident with adapter training state, suffix never
+        # executed (GPO aux branch = adapters only)
+        resident = window + (1 if layer_offload else max(l_start, 0))
+        if not layer_offload:
+            resident = l_start + window
+        suffix_ad = ad_layer * max(0, L - l_start - window)
+        return _pack(p_emb + p_layer * resident,
+                     a_layer * window,
+                     ad_layer * window * (1 + opt_mult) + ad_layer * l_start + suffix_ad)
+    raise ValueError(method)
+
+
+def _pack(params, acts, ad):
+    return {"params": int(params), "activations": int(acts),
+            "adapter_state": int(ad), "total": int(params + acts + ad)}
+
+
+def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
+                         l_start: int = 0, lora_rank: int = 8, kseeds: int = 0) -> int:
+    """Uplink bytes per client per round (paper §H.2 communication claim)."""
+    b = _b(cfg)
+    L = cfg.total_chain_layers
+    ad_layer = 2 * cfg.d_model * cfg.adapter.rank * b
+    if method == "chainfed":
+        return ad_layer * window
+    if method == "fedkseed":
+        return max(1, kseeds) * 8
+    if method == "flora":
+        return 2 * cfg.d_model * lora_rank * b * L
+    if method == "linear_probing":
+        return cfg.padded_vocab * cfg.d_model * b
+    if method == "fedra":
+        return ad_layer * (L // 2)
+    return ad_layer * L   # full adapters / fedadapter / c2a / fwdllm

@@ -1,0 +1,54 @@
+"""Federated data partitioning: IID and Dirichlet non-IID (paper §5.1,
+α = 1), plus per-client batch iteration."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def iid_partition(n_samples: int, n_clients: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_samples)
+    return [np.sort(s) for s in np.array_split(perm, n_clients)]
+
+
+def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float = 1.0,
+                        seed: int = 0, min_per_client: int = 2):
+    """Class-wise Dirichlet split: for each class, proportions over clients
+    are drawn from Dir(α); smaller α → more skew."""
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    shards = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(n_clients, alpha))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for client, part in enumerate(np.split(idx, cuts)):
+            shards[client].append(part)
+    out = [np.sort(np.concatenate(s)) if s else np.array([], np.int64) for s in shards]
+    # guarantee a floor so every client can form at least one batch
+    pool = np.concatenate(out)
+    for i, s in enumerate(out):
+        if len(s) < min_per_client:
+            extra = rng.choice(pool, min_per_client - len(s), replace=False)
+            out[i] = np.sort(np.concatenate([s, extra]))
+    return out
+
+
+class ClientSampler:
+    """Iterates minibatches from a client's shard, reshuffling per epoch."""
+
+    def __init__(self, shard: np.ndarray, batch_size: int, seed: int = 0):
+        self.shard = shard
+        self.bs = min(batch_size, max(1, len(shard)))
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(len(shard))
+        self._pos = 0
+
+    def next_indices(self) -> np.ndarray:
+        if self._pos + self.bs > len(self.shard):
+            self._order = self.rng.permutation(len(self.shard))
+            self._pos = 0
+        sel = self._order[self._pos:self._pos + self.bs]
+        self._pos += self.bs
+        return self.shard[sel]

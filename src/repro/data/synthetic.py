@@ -1,0 +1,115 @@
+"""Deterministic synthetic corpora (offline environment — no downloads).
+
+Two task families mirroring the paper's evaluation:
+
+* text classification (YELP-P-like binary … YAHOO-like 10-class): each class
+  has its own token distribution over a class-specific "topic" slice of the
+  vocabulary mixed with common tokens; the label is recoverable from token
+  statistics, so small models can learn it in a few federated rounds.
+* instruction tuning: next-token prediction on structured prompt→response
+  pairs (key-value recall patterns), learnable by a ~100M causal LM.
+
+All generation is seeded numpy — runs reproduce bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    n_classes: int
+    seq_len: int
+    n_samples: int
+    vocab: int
+    seed: int = 0
+    topic_strength: float = 0.35    # fraction of positions drawn from class topics
+
+
+# paper's four classification benchmarks, scaled
+DATASETS = {
+    "yelp_p": DatasetSpec("yelp_p", 2, 64, 4096, 1024, seed=11),
+    "agnews": DatasetSpec("agnews", 4, 32, 4096, 1024, seed=12),
+    "yahoo": DatasetSpec("yahoo", 10, 64, 4096, 1024, seed=13),
+    "news20": DatasetSpec("news20", 20, 64, 4096, 1024, seed=14),
+}
+
+IGNORE = -100
+
+
+def label_token(spec: DatasetSpec, c: int) -> int:
+    """Classes map to reserved label tokens at the top of the vocab."""
+    return spec.vocab - 1 - c
+
+
+def make_classification(spec: DatasetSpec):
+    """Returns (tokens (N, S) int32, labels (N,) int32).
+
+    Sequence layout: [body ... body, MASK_SLOT]; the model predicts the label
+    token at the final position (CLS-style readout through the LM head)."""
+    rng = np.random.default_rng(spec.seed)
+    n_reserved = spec.n_classes + 1
+    body_vocab = spec.vocab - n_reserved
+    topic_size = max(8, body_vocab // (2 * spec.n_classes))
+    common = np.arange(body_vocab - spec.n_classes * topic_size)
+    topics = [body_vocab - (c + 1) * topic_size + np.arange(topic_size)
+              for c in range(spec.n_classes)]
+
+    labels = rng.integers(0, spec.n_classes, spec.n_samples)
+    tokens = np.empty((spec.n_samples, spec.seq_len), np.int32)
+    body = spec.seq_len - 1
+    for i, c in enumerate(labels):
+        is_topic = rng.random(body) < spec.topic_strength
+        toks = np.where(is_topic,
+                        rng.choice(topics[c], body),
+                        rng.choice(common, body))
+        tokens[i, :body] = toks
+        tokens[i, body] = 0          # slot whose prediction is the class
+    return tokens.astype(np.int32), labels.astype(np.int32)
+
+
+def classification_batch(spec: DatasetSpec, tokens, labels, idx):
+    """Build a model batch: labels are IGNORE everywhere except the final
+    position, which carries the class's label token.  ``class_tokens`` lets
+    eval restrict the argmax to the label-token set (classifier semantics)."""
+    t = tokens[idx]
+    y = np.full_like(t, IGNORE)
+    y[:, -1] = np.array([label_token(spec, int(c)) for c in labels[idx]])
+    cls = np.array([label_token(spec, c) for c in range(spec.n_classes)],
+                   np.int32)
+    return {"tokens": t, "labels": y, "class_tokens": cls}
+
+
+# ------------------------------------------------------------------ instruction
+def make_instruction(n_samples=2048, seq_len=64, vocab=8192, n_keys=64, seed=7,
+                     mapping_seed=0):
+    """Instruction tuning miniature: the response value is a *memorized*
+    per-corpus function of the queried key (NOT present in the context), so
+    fine-tuning must store new associations — pretraining on a different
+    ``mapping_seed`` transfers the format but not the answers.
+
+    Sequence: [filler topic tokens …, Q, key, A, value]; loss only at the
+    answer position."""
+    rng = np.random.default_rng(seed)
+    Q, A = 2, 3
+    keys_pool = 16 + np.arange(n_keys)
+    vals_pool = 16 + n_keys + np.arange(n_keys)
+    map_rng = np.random.default_rng(10_000 + mapping_seed)
+    mapping = map_rng.permutation(vals_pool)         # key i -> mapping[i]
+    filler_pool = 16 + 2 * n_keys + np.arange(max(16, vocab // 4 - 2 * n_keys))
+    tokens = np.zeros((n_samples, seq_len), np.int32)
+    labels = np.full((n_samples, seq_len), IGNORE, np.int32)
+    for i in range(n_samples):
+        ki = rng.integers(0, n_keys)
+        fill = rng.choice(filler_pool, seq_len - 4)
+        seq = list(fill) + [Q, int(keys_pool[ki]), A, int(mapping[ki])]
+        tokens[i] = seq
+        labels[i, seq_len - 2] = int(mapping[ki])    # predict the value
+    return tokens, labels
+
+
+def lm_batch(tokens, labels, idx):
+    return {"tokens": tokens[idx], "labels": labels[idx]}

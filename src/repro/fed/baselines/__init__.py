@@ -1,0 +1,19 @@
+from .full_adapters import FullAdapters
+from .linear_probing import LinearProbing
+from .fedadapter import FedAdapter
+from .c2a import C2A
+from .fwdllm import FwdLLM
+from .fedkseed import FedKSeed
+from .flora import FLoRA
+from .fedra import FedRA
+
+BASELINES = {
+    "full_adapters": FullAdapters,
+    "linear_probing": LinearProbing,
+    "fedadapter": FedAdapter,
+    "c2a": C2A,
+    "fwdllm": FwdLLM,
+    "fedkseed": FedKSeed,
+    "flora": FLoRA,
+    "fedra": FedRA,
+}

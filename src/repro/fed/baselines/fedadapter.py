@@ -1,0 +1,20 @@
+"""FedAdapter (Cai et al., 2022): dynamic adapter configuration — the set of
+active adapter layers grows progressively over rounds to accelerate early
+convergence (shallow first, then deeper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..strategies import Strategy
+
+
+class FedAdapter(Strategy):
+    name = "fedadapter"
+    memory_method = "fedadapter"
+
+    def client_mask(self, client, round_idx):
+        L = self.cfg.total_chain_layers
+        # start with the top quarter of layers, grow one layer every 2 rounds
+        active = min(L, max(1, L // 4) + round_idx // 2)
+        mask = jnp.zeros((L,), jnp.float32)
+        return mask.at[L - active:].set(1.0)

@@ -1,0 +1,61 @@
+"""FedKSeed [arXiv:2312.06353]: zeroth-order full-parameter tuning restricted
+to K shared random seeds; each client round uploads only K scalars."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.transformer import forward_full
+from ...optim.zeroth import kseed_apply, kseed_coeffs
+from ...train.losses import cross_entropy
+from ..strategies import Strategy
+
+
+class FedKSeed(Strategy):
+    name = "fedkseed"
+    memory_method = "fedkseed"
+    K = 8
+
+    def __init__(self, cfg, chain, key):
+        super().__init__(cfg, chain, key)
+        self.seeds = list(range(1000, 1000 + self.K))
+        cfg_ = cfg
+
+        def loss_of(trainable, batch):
+            p = trainable["params"]
+            if "head" in trainable:
+                p = {**p, "cls_head": trainable["head"]}
+            logits, _ = forward_full(p, trainable["adapters"], batch, cfg_,
+                                     remat=False)
+            return cross_entropy(logits, batch["labels"])
+
+        self._loss_of = jax.jit(loss_of)
+
+    def _full_trainable(self):
+        t = {"params": self._params, "adapters": self.adapters}
+        if self.head is not None:
+            t["head"] = self.head
+        return t
+
+    def round(self, sim, clients, round_idx):
+        trainable = self._full_trainable()
+        all_coeffs, weights = [], []
+        for c in clients:
+            batch = sim.client_batches(c, 1)[0]
+            coeffs = kseed_coeffs(lambda t: self._loss_of(t, batch), trainable,
+                                  self.seeds, eps=1e-3)
+            all_coeffs.append(coeffs)
+            weights.append(c.n_samples)
+        if not all_coeffs:
+            return
+        w = jnp.asarray(weights, jnp.float32); w = w / w.sum()
+        agg = sum(wi * cc for wi, cc in zip(w, all_coeffs))
+        trainable = kseed_apply(trainable, self.seeds,
+                                [float(a) for a in agg], self.chain.lr)
+        self._params = trainable["params"]
+        self.adapters = trainable["adapters"]
+        if "head" in trainable:
+            self.head = trainable["head"]
+
+    def comm_bytes_per_round(self):
+        return self.K * 8

@@ -1,0 +1,8 @@
+"""Full Adapters† — the paper's idealized, memory-unconstrained upper bound:
+end-to-end training of every adapter (Table 1 'Upper Bound')."""
+from ..strategies import Strategy
+
+
+class FullAdapters(Strategy):
+    name = "full_adapters"
+    memory_method = "full_adapters"

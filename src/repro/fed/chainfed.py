@@ -1,0 +1,79 @@
+"""CHAINFED as a Strategy for the federated engine — wraps the chain core
+(FOAT setup → DLCT-scheduled staged rounds with GPO dual loss) so benchmarks
+drive it exactly like the baselines.
+
+Ablation switches (paper Table 4):
+  use_dlct=False → window size 1, no co-tuning overlap
+  use_gpo=False  → λ = 0 (pure local objective)
+  use_foat=False → L_start = 0 (full chain)
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.chain import ChainFedTrainer
+from ..core.memory import comm_bytes_per_round
+from ..models.config import ChainConfig, ModelConfig
+from ..models.transformer import init_adapters, init_lm
+
+
+class ChainFed:
+    name = "chainfed"
+    memory_method = "chainfed"
+
+    def __init__(self, cfg: ModelConfig, chain: ChainConfig, key,
+                 use_dlct=True, use_gpo=True, use_foat=True):
+        if not use_dlct:
+            chain = chain.replace(window=1)
+        if not use_gpo:
+            chain = chain.replace(lam=0.0)
+        self.use_foat = use_foat
+        self.cfg, self.chain = cfg, chain
+        k1, k2 = jax.random.split(key)
+        params = init_lm(k1, cfg)
+        adapters = init_adapters(k2, cfg)
+        self.trainer = ChainFedTrainer(cfg, chain, params, adapters)
+        self._foat_done = False
+
+    # FOAT runs once, before federated rounds (Algorithm 1 Phase 1)
+    def maybe_setup_foat(self, sim):
+        if self._foat_done:
+            return
+        self._foat_done = True
+        if not self.use_foat:
+            return
+        clients = sim.clients[:min(8, len(sim.clients))]
+        batches = [sim.client_batches(c, 1)[0] for c in clients]
+        weights = [c.n_samples for c in clients]
+        self.trainer.setup_foat(batches, weights)
+
+    def round(self, sim, clients, round_idx):
+        self.maybe_setup_foat(sim)
+        deltas, weights = [], []
+        for c in clients:
+            batches = sim.client_batches(c, self.chain.local_steps)
+            delta, loss, parts = self.trainer.client_update(round_idx, batches)
+            deltas.append(delta)
+            weights.append(c.n_samples)
+        if deltas:
+            self.trainer.aggregate(round_idx, deltas, weights)
+
+    def evaluate(self, batch):
+        return self.trainer.evaluate(batch)
+
+    def memory_kwargs(self, round_idx):
+        return {"window": self.chain.window,
+                "l_start": self.trainer.l_start}
+
+    def comm_bytes_per_round(self) -> int:
+        return comm_bytes_per_round(self.cfg, "chainfed",
+                                    window=self.chain.window,
+                                    l_start=self.trainer.l_start)
+
+    @property
+    def params(self):
+        return self.trainer.params
+
+    @property
+    def adapters(self):
+        return self.trainer.adapters

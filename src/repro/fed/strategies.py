@@ -1,0 +1,142 @@
+"""Strategy base + shared jitted machinery for the baseline suite (paper §5.2
+/ App. E).  Every strategy owns its global state and implements:
+
+    round(sim, clients, round_idx)   — one federated round
+    evaluate(batch) -> (loss, acc)   — end-to-end eval
+    memory_method / memory_kwargs    — ties into the memory-wall sampler
+    comm_bytes_per_round()           — uplink accounting
+
+All methods train the task output layer (``cls_head``) alongside their own
+trainables — standard fine-tuning protocol for classification backbones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.memory import comm_bytes_per_round
+from ..models.config import ChainConfig, ModelConfig
+from ..models.transformer import (forward_full, init_adapters, init_cls_head,
+                                  init_lm)
+from ..optim.base import make_optimizer
+from ..train.losses import accuracy, cross_entropy, moe_penalty
+from ..utils.tree import tree_map
+
+
+def layer_mask_apply(grads, mask):
+    """mask: (L,) float — zero out gradients of unselected layers."""
+    return tree_map(lambda g: g * mask.reshape((-1,) + (1,) * (g.ndim - 1)), grads)
+
+
+class Strategy:
+    name = "base"
+    memory_method = "full_adapters"
+
+    def __init__(self, cfg: ModelConfig, chain: ChainConfig, key):
+        self.cfg, self.chain = cfg, chain
+        k1, k2 = jax.random.split(key)
+        self._params = init_lm(k1, cfg)
+        self.adapters = init_adapters(k2, cfg)
+        self.head = init_cls_head(self._params) if chain.train_head else None
+        self.opt = make_optimizer(chain.optimizer, chain.lr)
+        self._build()
+
+    # base params are swappable (pretrained checkpoints); the head re-derives
+    @property
+    def params(self):
+        return self._params
+
+    @params.setter
+    def params(self, p):
+        self._params = p
+        if self.head is not None:
+            self.head = init_cls_head(p)
+
+    def eval_params(self):
+        if self.head is None:
+            return self._params
+        return {**self._params, "cls_head": self.head}
+
+    def _with_head(self, params, trainable):
+        if "head" in trainable:
+            return {**params, "cls_head": trainable["head"]}
+        return params
+
+    def master_trainable(self):
+        t = {"adapters": self.adapters}
+        if self.head is not None:
+            t["head"] = self.head
+        return t
+
+    def _commit(self, trainable):
+        self.adapters = trainable["adapters"]
+        if "head" in trainable:
+            self.head = trainable["head"]
+
+    # -------------------------------------------------- shared jitted pieces
+    def _build(self):
+        cfg = self.cfg
+
+        def loss_fn(trainable, params, batch):
+            p = self._with_head(params, trainable)
+            logits, aux = forward_full(p, trainable["adapters"], batch, cfg,
+                                       remat=False)
+            return (cross_entropy(logits, batch["labels"])
+                    + moe_penalty(aux, cfg))
+
+        @jax.jit
+        def local_step(trainable, opt_state, params, batch, mask):
+            loss, grads = jax.value_and_grad(loss_fn)(trainable, params, batch)
+            grads["adapters"] = layer_mask_apply(grads["adapters"], mask)
+            trainable, opt_state = self.opt.step(trainable, grads, opt_state)
+            return trainable, opt_state, loss
+
+        @jax.jit
+        def eval_fn(params, adapters, batch):
+            logits, aux = forward_full(params, adapters, batch, cfg, remat=False)
+            return (cross_entropy(logits, batch["labels"]) + moe_penalty(aux, cfg),
+                    accuracy(logits, batch["labels"],
+                             batch.get("class_tokens")))
+
+        self._local_step, self._eval = local_step, eval_fn
+
+    def full_mask(self):
+        return jnp.ones((self.cfg.total_chain_layers,), jnp.float32)
+
+    # -------------------------------------------------- default adapter FedAvg
+    def client_mask(self, client, round_idx):
+        return self.full_mask()
+
+    def round(self, sim, clients, round_idx):
+        deltas, weights = [], []
+        master = self.master_trainable()
+        for c in clients:
+            mask = self.client_mask(c, round_idx)
+            tr = master
+            opt_state = self.opt.init(tr)
+            for batch in sim.client_batches(c, self.chain.local_steps):
+                tr, opt_state, _ = self._local_step(tr, opt_state, self._params,
+                                                    batch, mask)
+            deltas.append(tree_map(lambda a, b: a - b, tr, master))
+            weights.append(c.n_samples)
+        self._fedavg(deltas, weights)
+
+    def _fedavg(self, deltas, weights):
+        if not deltas:
+            return
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / jnp.sum(w)
+        agg = tree_map(lambda *ds: sum(wi * d for wi, d in zip(w, ds)), *deltas)
+        new = tree_map(lambda a, d: (a + d).astype(a.dtype),
+                       self.master_trainable(), agg)
+        self._commit(new)
+
+    def evaluate(self, batch):
+        loss, acc = self._eval(self.eval_params(), self.adapters, batch)
+        return float(loss), float(acc)
+
+    def memory_kwargs(self, round_idx):
+        return {}
+
+    def comm_bytes_per_round(self) -> int:
+        return comm_bytes_per_round(self.cfg, self.memory_method)

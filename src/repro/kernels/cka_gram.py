@@ -1,0 +1,69 @@
+"""FOAT's measurement primitive: centered linear-CKA HSIC terms.
+
+    hxy = ‖XᵀY‖_F² = Σ_ij (XXᵀ)_ij (YYᵀ)_ij ,  hxx, hyy analogous.
+
+TPU adaptation: the naive form materialises (d×d) cross-covariances
+(d ≤ 8192 → 256 MB — far beyond VMEM).  We instead accumulate the two n×n
+Gram matrices (n = CKA sample count, ≤ a few hundred) in VMEM scratch while
+streaming feature blocks from HBM once, then reduce the three Frobenius
+inner products in the final grid step.  Activations are read exactly once.
+
+Grid: (d / bd,) sequential; scratch: Kx, Ky (n, n) float32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, y_ref, o_ref, kx_sc, ky_sc, *, n_blocks):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        kx_sc[...] = jnp.zeros_like(kx_sc)
+        ky_sc[...] = jnp.zeros_like(ky_sc)
+
+    xb = x_ref[...].astype(jnp.float32)        # (n, bd)
+    yb = y_ref[...].astype(jnp.float32)
+    kx_sc[...] += jnp.dot(xb, xb.T, preferred_element_type=jnp.float32)
+    ky_sc[...] += jnp.dot(yb, yb.T, preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_blocks - 1)
+    def _final():
+        kx, ky = kx_sc[...], ky_sc[...]
+        o_ref[0, 0] = jnp.sum(kx * ky)
+        o_ref[0, 1] = jnp.sum(kx * kx)
+        o_ref[0, 2] = jnp.sum(ky * ky)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def cka_gram(X, Y, bd=512, interpret=True):
+    """X: (n, d1), Y: (n, d2), columns centered.  Returns (hxy, hxx, hyy).
+    d1/d2 are zero-padded to a common multiple of bd (zero columns do not
+    change Gram matrices)."""
+    n = X.shape[0]
+    d = max(X.shape[1], Y.shape[1])
+    bd = min(bd, d)
+    d_pad = ((d + bd - 1) // bd) * bd
+    Xp = jnp.pad(X, ((0, 0), (0, d_pad - X.shape[1])))
+    Yp = jnp.pad(Y, ((0, 0), (0, d_pad - Y.shape[1])))
+    n_blocks = d_pad // bd
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_blocks=n_blocks),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32),
+                        pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(Xp, Yp)
+    return out[0, 0], out[0, 1], out[0, 2]

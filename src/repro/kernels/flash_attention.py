@@ -1,0 +1,98 @@
+"""Blockwise (flash) attention forward kernel: causal / sliding-window, with
+the online-softmax running max/denominator so the (Sq, Sk) score matrix never
+leaves VMEM.
+
+Grid: (B·H, Sq/bq) — one query tile per step; K/V for that head stay
+VMEM-resident (Sk·hd·2B ≈ 8 MB at Sk = 32k, hd = 128, bf16), and the kernel
+walks KV tiles with `fori_loop`, skipping tiles that the causal/window mask
+fully excludes (this is the Pallas analogue of flash-attention 2's block
+skipping, adapted to the MXU's 128-aligned tiles).
+
+Inference/prefill path only (no backward kernel): CHAINFED's training
+backward never crosses frozen-prefix attention, and trainable-window
+attention uses the jnp chunked path (see models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, causal, window, sk, scale):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale              # (bq, hd)
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    n_kv = sk // bk
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        if causal:
+            ok = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                ok &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc = acc * corr[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    hd = q_ref.shape[-1]
+    acc = jnp.zeros((bq, hd), jnp.float32)
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+
+    if causal:
+        # only KV tiles up to (and incl.) the query tile's diagonal participate
+        hi = (qi + 1) * bq
+        n_iter = (hi + bk - 1) // bk
+        lo = 0
+        if window is not None:
+            lo = jnp.maximum(0, (qi * bq - window) // bk)
+        acc, m, l = jax.lax.fori_loop(lo, n_iter, body, (acc, m, l))
+    else:
+        acc, m, l = jax.lax.fori_loop(0, n_kv, body, (acc, m, l))
+
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, causal=True, window=None, bq=128, bk=128,
+                    interpret=True):
+    """q: (B, H, Sq, hd); k/v: (B, H, Sk, hd) — GQA repeat folded by caller.
+    Returns (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale = 1.0 / (hd ** 0.5)
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * H, Sk, hd)
+    vf = v.reshape(B * H, Sk, hd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal, window=window,
+                          sk=Sk, scale=scale),
+        grid=(B * H, Sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, hd)

@@ -1,0 +1,69 @@
+"""Fused bottleneck adapter kernel — the paper's core primitive (Eq. 1):
+
+    out = h + f(h · W_down) · W_up
+
+CHAINFED executes adapters pervasively (every window layer + the whole GPO
+auxiliary branch), so on TPU we fuse both projections, the activation and the
+residual add into one VMEM pass: the hidden-state tile is read from HBM once
+and written once, instead of 3 reads + 2 writes for the unfused sequence.
+
+Tiling: grid over row blocks of the flattened (T, d) hidden state; both
+bottleneck weights stay VMEM-resident (r ≤ 128 ⇒ ≤ 2·d·r·2B ≈ 4 MB at
+d = 8192, bf16).  Row block bm is chosen so  bm·d (in+out) + 2·d·r  fits the
+~16 MB v5e VMEM; all matmul dims are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = {"gelu": jax.nn.gelu, "relu": jax.nn.relu, "silu": jax.nn.silu}
+
+
+def _kernel(h_ref, wd_ref, wu_ref, o_ref, *, activation):
+    h = h_ref[...].astype(jnp.float32)
+    z = _ACTS[activation](jnp.dot(h, wd_ref[...].astype(jnp.float32),
+                                  preferred_element_type=jnp.float32))
+    o_ref[...] = (h + jnp.dot(z, wu_ref[...].astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+def row_block(d: int, dtype_bytes: int = 4, vmem_budget: int = 12 * 2 ** 20) -> int:
+    """Largest 128-multiple row block whose in+out tiles fit the VMEM budget
+    (minus the resident bottleneck weights)."""
+    bm = vmem_budget // max(1, 2 * d * dtype_bytes)
+    return max(8, min(512, (bm // 8) * 8))
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret", "bm"))
+def fused_adapter(h, w_down, w_up, activation="gelu", interpret=True, bm=None):
+    """h: (T, d) or (..., d) — leading dims flattened; returns same shape."""
+    shape = h.shape
+    d = shape[-1]
+    h2 = h.reshape(-1, d)
+    T = h2.shape[0]
+    bm = bm or row_block(d, h2.dtype.itemsize)
+    bm = min(bm, T)
+    pad = (-T) % bm
+    if pad:
+        h2 = jnp.pad(h2, ((0, pad), (0, 0)))
+    grid = (h2.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, w_down.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((w_up.shape[0], d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(h2.shape, h.dtype),
+        interpret=interpret,
+    )(h2, w_down, w_up)
+    if pad:
+        out = out[:T]
+    return out.reshape(shape)

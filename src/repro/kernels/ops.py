@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this container (CPU host) kernels execute via ``interpret=True`` — the
+kernel body runs in Python with the exact same blocking; on a real TPU set
+``REPRO_KERNEL_INTERPRET=0`` (or pass interpret=False) to compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .cka_gram import cka_gram as _cka_gram
+from .flash_attention import flash_attention as _flash_attention
+from .fused_adapter import fused_adapter as _fused_adapter
+from .ssm_scan import ssm_scan as _ssm_scan
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def fused_adapter(h, w_down, w_up, activation="gelu", **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fused_adapter(h, w_down, w_up, activation=activation, **kw)
+
+
+def flash_attention(q, k, v, causal=True, window=None, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash_attention(q, k, v, causal=causal, window=window, **kw)
+
+
+def ssm_scan(u, dt, B, C, A, D, h0=None, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _ssm_scan(u, dt, B, C, A, D, h0=h0, **kw)
+
+
+def cka_gram(X, Y, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _cka_gram(X, Y, **kw)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth for
+the per-kernel allclose sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACTS = {"gelu": jax.nn.gelu, "relu": jax.nn.relu, "silu": jax.nn.silu}
+
+
+def fused_adapter_ref(h, w_down, w_up, activation="gelu"):
+    """h: (T, d); w_down: (d, r); w_up: (r, d)."""
+    z = ACTS[activation](h.astype(jnp.float32) @ w_down.astype(jnp.float32))
+    return (h.astype(jnp.float32) + z @ w_up.astype(jnp.float32)).astype(h.dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None):
+    """q: (B, H, Sq, hd); k/v: (B, H, Sk, hd) (GQA folded outside)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(hd)
+    if causal:
+        Sq, Sk = q.shape[2], k.shape[2]
+        i = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        j = jnp.arange(Sk)[None, :]
+        ok = j <= i
+        if window is not None:
+            ok = ok & (i - j < window)
+        s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(u, dt, B, C, A, D, h0=None):
+    """Sequential selective scan (the definitional recurrence).
+    u/dt: (Bt, S, d); B/C: (Bt, S, N); A: (d, N); D: (d,)."""
+    Bt, S, d = u.shape
+    N = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bt, d, N), jnp.float32)
+    uf, dtf = u.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(h, xs):
+        ut, dtt, bt, ct = xs
+        a = jnp.exp(dtt[..., None] * A)                       # (Bt,d,N)
+        h = a * h + (dtt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct) + D * ut
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, (jnp.moveaxis(uf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+                                    jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def cka_gram_ref(X, Y):
+    """Centered linear-kernel HSIC terms via n×n Grams.
+    X: (n, d1), Y: (n, d2) — columns already centered.
+    Returns (hxy, hxx, hyy) with hxy = ||XᵀY||_F² = Σ_ij Kx_ij·Ky_ij."""
+    Xf, Yf = X.astype(jnp.float32), Y.astype(jnp.float32)
+    Kx = Xf @ Xf.T
+    Ky = Yf @ Yf.T
+    return (jnp.sum(Kx * Ky), jnp.sum(Kx * Kx), jnp.sum(Ky * Ky))

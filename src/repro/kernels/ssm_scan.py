@@ -1,0 +1,94 @@
+"""Chunked selective-scan kernel (Mamba-1 recurrence) —
+
+    h_t = exp(dt_t · A) · h_{t-1} + dt_t · B_t · u_t ;   y_t = h_t · C_t + D·u_t
+
+TPU adaptation of the CUDA selective-scan: instead of one thread-block per
+channel slab with shared-memory state, the grid's *minor* dimension walks
+sequence chunks **sequentially** (TPU grid order guarantee), carrying the
+(d, N) state in a VMEM scratch buffer across grid steps.  The discretised
+(chunk, d, N) tensors exist only per-chunk in VMEM — HBM traffic is the
+optimal  2·S·d (read u/dt + write y)  + 2·S·N (read B/C).
+
+Grid: (B, S/chunk); the state scratch resets at chunk 0 of every batch row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref, y_ref, hout_ref,
+            h_sc, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_sc[...] = h0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)          # (chunk, d)
+    dt = dt_ref[0].astype(jnp.float32)        # (chunk, d)
+    bm = b_ref[0].astype(jnp.float32)         # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)         # (chunk, N)
+    A = a_ref[...].astype(jnp.float32)        # (d, N)
+    D = d_ref[...].astype(jnp.float32)        # (1, d)
+
+    def step(t, carry):
+        h, ys = carry
+        a_t = jnp.exp(dt[t][:, None] * A)                     # (d, N)
+        h = a_t * h + (dt[t] * u[t])[:, None] * bm[t][None, :]
+        y = h @ cm[t] + D[0] * u[t]                           # (d,)
+        ys = jax.lax.dynamic_update_slice(ys, y[None], (t, 0))
+        return h, ys
+
+    h = h_sc[...]
+    ys = jnp.zeros_like(u)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h, ys))
+    h_sc[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hout_ref[0] = h_sc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(u, dt, B, C, A, D, h0=None, chunk=128, interpret=True):
+    """u/dt: (Bt, S, d); B/C: (Bt, S, N); A: (d, N); D: (d,).
+    Returns (y (Bt, S, d) float32, h_final (Bt, d, N) float32)."""
+    Bt, S, d = u.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((Bt, d, N), jnp.float32)
+    D2 = D.reshape(1, d)
+
+    y, h_fin = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=(Bt, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((d, N), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d, N), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d, N), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, d), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, d, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, B, C, A, D2, h0)
+    return y, h_fin

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): for every (architecture × input shape),
+lower + compile the pjit step on the production mesh — 16×16 single pod and
+2×16×16 multi-pod — and extract the roofline terms from the compiled
+artifact.  No tensor is ever allocated: inputs are ShapeDtypeStructs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--seq-shard]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --step e2e   # Full Adapters† memory comparison
+
+Outputs one JSON per case under experiments/dryrun/ (consumed by
+benchmarks/roofline.py and EXPERIMENTS.md §Dry-run/§Roofline).
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import ASSIGNED, get_config
+from ..launch import input_specs as ispec
+from ..launch.mesh import make_production_mesh
+from ..models import transformer as T
+from ..models.config import ChainConfig
+from ..sharding import hooks
+from ..sharding.rules import Ruleset
+from ..train import steps as steps_mod
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+                "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip operand bytes of every collective in the partitioned HLO
+    (methodology: sum of operand tensor sizes; ring all-reduce moves ≈2× this
+    — recorded as-is and noted in EXPERIMENTS.md)."""
+    out = {c: {"bytes": 0, "count": 0} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in COLLECTIVES:
+            token = f" {c}("
+            if token in line and "-start" not in line and "-done" not in line:
+                lhs = line.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                # operand types appear in the result type (collectives are
+                # type-preserving modulo gather/scatter factor)
+                types = _SHAPE_RE.findall(lhs[1].split(c + "(")[0])
+                b = sum(_tensor_bytes(t, s) for t, s in types)
+                out[c]["bytes"] += b
+                out[c]["count"] += 1
+            # async forms: count the -start op once
+            token_s = f" {c}-start("
+            if token_s in line:
+                lhs = line.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                types = _SHAPE_RE.findall(lhs[1].split(c + "-start(")[0])
+                b = sum(_tensor_bytes(t, s) for t, s in types)
+                out[c]["bytes"] += b
+                out[c]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def build_case(arch: str, shape: str, mesh, chain_window=8, seq_shard=False,
+               step_kind="chain", decode_align=False, gpo_seq=False):
+    """Returns (jitted_fn, args, ruleset, cfg) ready to .lower()."""
+    cfg0 = get_config(arch)
+    if not ispec.supported(cfg0, shape):
+        return None
+    cfg, case, specs = ispec.input_specs(cfg0, shape)
+    rules = Ruleset(mesh, cfg, seq_shard=seq_shard)
+    hooks.set_policy(hooks.Policy(
+        mesh,
+        residual_spec_fn=rules.residual_spec if seq_shard else None,
+        logits_spec_fn=rules.logits_spec,
+        decode_q_spec_fn=rules.decode_q_spec if decode_align else None,
+        cache_entry_spec_fn=rules.cache_entry_spec if decode_align else None))
+
+    a_params = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    a_adapt = jax.eval_shape(lambda: T.init_adapters(jax.random.PRNGKey(0), cfg))
+    p_shard = rules.named(rules.params(a_params))
+    ad_shard = rules.named(rules.adapters(a_adapt))
+
+    if case.kind == "train":
+        L = cfg.total_chain_layers
+        Q = min(chain_window, L)
+        k = min(L // 3, L - Q)
+        chain = ChainConfig(window=Q, lam=0.2, optimizer="sgd", lr=1e-3)
+        if step_kind == "chain":
+            seg = T.ChainSegments(k, Q)
+            fn = steps_mod.make_fed_train_step(cfg, chain, seg,
+                                               gpo_sequential=gpo_seq)
+        else:
+            fn = steps_mod.make_e2e_train_step(cfg, chain)
+        b_shard = rules.named(rules.train_batch(specs))
+        jf = jax.jit(fn, in_shardings=(p_shard, ad_shard, b_shard),
+                     out_shardings=(ad_shard, None))
+        args = (a_params, a_adapt, specs)
+    elif case.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg)
+        b_shard = rules.named(rules.train_batch(specs))
+        jf = jax.jit(fn, in_shardings=(p_shard, ad_shard, b_shard))
+        args = (a_params, a_adapt, specs)
+    else:  # decode
+        token, cache, idx, embeds, enc_len = specs
+        fn = steps_mod.make_decode_step(cfg, enc_len=enc_len)
+        c_shard = rules.named(rules.cache(cache))
+        in_sh = [p_shard, ad_shard, None, c_shard, None]
+        args = [a_params, a_adapt, token, cache, idx]
+        if cfg.family == "vlm":
+            in_sh.append(None)
+            args.append(embeds)
+        # donate the cache: the updated cache aliases the input buffer —
+        # without this the decode step holds two full cache copies (§Perf)
+        jf = jax.jit(fn, in_shardings=tuple(in_sh),
+                     out_shardings=(None, None, c_shard, None),
+                     donate_argnums=(3,))
+        args = tuple(args)
+    return jf, args, rules, cfg
+
+
+def run_case(arch: str, shape: str, multi_pod=False, seq_shard=False,
+             step_kind="chain", verbose=True, cost_unroll=False,
+             ssm_ckpt=False, decode_align=False, gpo_seq=False):
+    """cost_unroll: unroll every structural scan so cost_analysis /
+    collective parsing carry true totals (XLA counts while bodies once);
+    memory_analysis from these runs over-counts live buffers, so the default
+    scan-mode run remains the memory source of truth."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    T.set_unroll(cost_unroll)
+    from ..models import ssm as ssm_mod
+    ssm_mod.set_ssm_chunk_ckpt(ssm_ckpt)
+    built = build_case(arch, shape, mesh, seq_shard=seq_shard,
+                       step_kind=step_kind, decode_align=decode_align,
+                       gpo_seq=gpo_seq)
+    if built is None:
+        return {"arch": arch, "shape": shape, "skipped": True,
+                "reason": "sub-quadratic decode unsupported for this family "
+                          "(DESIGN §6)"}
+    jf, args, rules, cfg = built
+    t0 = time.time()
+    lowered = jf.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    colls = collective_bytes(compiled.as_text())
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape, "step": step_kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": int(n_chips),
+        "seq_shard": seq_shard,
+        "cost_unroll": cost_unroll,
+        "ssm_ckpt": ssm_ckpt, "decode_align": decode_align,
+        "gpo_seq": gpo_seq,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_chip": (ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+        },
+        "cost": {"flops_per_chip": ca.get("flops", 0.0),
+                 "bytes_per_chip": ca.get("bytes accessed", 0.0)},
+        "collectives": colls,
+    }
+    if verbose:
+        m = rec["memory"]
+        print(f"[{arch} × {shape} | {rec['mesh']} | {step_kind}"
+              f"{' +seqshard' if seq_shard else ''}] "
+              f"compile {rec['compile_s']}s  "
+              f"args {m['argument_bytes']/2**30:.2f} GiB  "
+              f"temp {m['temp_bytes']/2**30:.2f} GiB  "
+              f"peak {m['peak_per_chip']/2**30:.2f} GiB/chip  "
+              f"flops/chip {rec['cost']['flops_per_chip']:.3e}  "
+              f"coll {colls['total_bytes']/2**20:.1f} MiB")
+    return rec
+
+
+def save(rec, tag=""):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec.get('mesh','skip')}"
+    if rec.get("step", "chain") != "chain":
+        name += f"_{rec['step']}"
+    if rec.get("seq_shard"):
+        name += "_seqshard"
+    if rec.get("ssm_ckpt"):
+        name += "_ssmckpt"
+    if rec.get("gpo_seq"):
+        name += "_gposeq"
+    if rec.get("decode_align"):
+        name += "_decalign"
+    if tag:
+        name += f"_{tag}"
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(ispec.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--step", default="chain", choices=["chain", "e2e"])
+    ap.add_argument("--gpo-seq", action="store_true",
+                    help="perf lever: sequential checkpointed GPO dual loss")
+    ap.add_argument("--ssm-ckpt", action="store_true",
+                    help="perf lever: checkpoint SSM scan chunks")
+    ap.add_argument("--decode-align", action="store_true",
+                    help="perf lever: align decode q/cache shardings")
+    ap.add_argument("--cost", action="store_true",
+                    help="unrolled cost-accounting pass (true FLOP/collective "
+                         "totals; slower compiles)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cases = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in ispec.SHAPES:
+                cases.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cases = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in cases:
+        try:
+            rec = run_case(a, s, multi_pod=args.multi_pod,
+                           seq_shard=args.seq_shard, step_kind=args.step,
+                           cost_unroll=args.cost, ssm_ckpt=args.ssm_ckpt,
+                           decode_align=args.decode_align,
+                           gpo_seq=args.gpo_seq)
+            save(rec, ("cost" if args.cost else "") + args.tag)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((a, s, repr(e)))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print(f"dry-run OK: {len(cases)} case(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) pair —
+weak-type-correct, shardable, zero allocation.  The four assigned shapes:
+
+    train_4k     seq 4096,   global_batch 256   (training, fed round)
+    prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+    decode_32k   seq 32768,  global_batch 128   (one token + 32k cache)
+    long_500k    seq 524288, global_batch 1     (sub-quadratic decode)
+
+Audio/VLM carve-out: the modality frontend is a stub — specs provide
+precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models import transformer as T
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+# cohorts for train_4k: 256 = 32 cohorts × 8 per-client batch
+TRAIN_COHORTS = 32
+LOCAL_STEPS = 1
+ENC_FRAC = 1          # encoder frames = seq_len for encdec
+DEC_TRAIN_TOKENS = 1024   # decoder-side length for encdec training/prefill
+
+
+def arch_shape_cfg(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """Shape-dependent attention variant: full attention everywhere except
+    long_500k, which requires the sub-quadratic SWA/SSM path (DESIGN §6)."""
+    if shape == "long_500k":
+        return cfg           # keep config SWA window (sub-quadratic variant)
+    if cfg.sliding_window is not None and cfg.family != "hybrid":
+        return cfg.replace(sliding_window=None)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        # needs sub-quadratic decode: SSM state, hybrid, or SWA variant.
+        # seamless (enc-dec speech) skipped — noted in DESIGN §6.
+        if cfg.is_encdec:
+            return False
+        return cfg.family in ("ssm", "hybrid") or cfg.sliding_window is not None
+    return True
+
+
+def _i32(*shape):
+    return S(shape, jnp.int32)
+
+
+def _emb(cfg, *shape):
+    return S(shape + (cfg.d_model,), cfg.cdtype())
+
+
+def train_specs(cfg: ModelConfig, case: ShapeCase):
+    C, ls = TRAIN_COHORTS, LOCAL_STEPS
+    b = case.global_batch // C
+    sl = case.seq_len
+    if cfg.family == "vlm":
+        batch = {"embeds": _emb(cfg, C, ls, b, sl),
+                 "positions": S((C, ls, 3, b, sl), jnp.int32),
+                 "labels": _i32(C, ls, b, sl)}
+    elif cfg.is_encdec:
+        batch = {"enc_embeds": _emb(cfg, C, ls, b, sl),
+                 "tokens": _i32(C, ls, b, DEC_TRAIN_TOKENS),
+                 "labels": _i32(C, ls, b, DEC_TRAIN_TOKENS)}
+    else:
+        batch = {"tokens": _i32(C, ls, b, sl), "labels": _i32(C, ls, b, sl)}
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, case: ShapeCase):
+    B, sl = case.global_batch, case.seq_len
+    if cfg.family == "vlm":
+        return {"embeds": _emb(cfg, B, sl),
+                "positions": S((3, B, sl), jnp.int32)}
+    if cfg.is_encdec:
+        return {"enc_embeds": _emb(cfg, B, sl),
+                "tokens": _i32(B, DEC_TRAIN_TOKENS)}
+    return {"tokens": _i32(B, sl)}
+
+
+def decode_specs(cfg: ModelConfig, case: ShapeCase):
+    """(token, cache, idx) shape structs; cache via eval_shape of init_cache."""
+    B, sl = case.global_batch, case.seq_len
+    enc_len = sl if cfg.is_encdec else None
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, sl, enc_len=enc_len))
+    token = _i32(B, 1)
+    embeds = _emb(cfg, B, 1) if cfg.family == "vlm" else None
+    idx = S((), jnp.int32)
+    return token, cache, idx, embeds, enc_len
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """Unified entry: returns (kind, specs...)."""
+    case = SHAPES[shape]
+    cfg = arch_shape_cfg(cfg, shape)
+    if case.kind == "train":
+        return cfg, case, train_specs(cfg, case)
+    if case.kind == "prefill":
+        return cfg, case, prefill_specs(cfg, case)
+    return cfg, case, decode_specs(cfg, case)

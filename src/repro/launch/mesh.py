@@ -1,0 +1,45 @@
+"""Production mesh builder.
+
+Defined as a FUNCTION (never a module-level constant) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init,
+and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod slice: 16×16 = 256 chips per pod; 2 pods = 512 chips.
+
+    axes: ``data``   — client cohorts / batch (FedAvg all-reduces here)
+          ``model``  — tensor/expert/sequence parallel
+          ``pod``    — cross-pod data parallel (multi-pod only)
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (CPU tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s

@@ -1,0 +1,245 @@
+"""Attention: GQA/MQA, RoPE / M-RoPE, causal / bidirectional / sliding-window,
+memory-efficient chunked softmax (the pure-JAX flash-attention used by the
+multi-pod dry-run), and single-token decode against a KV cache.
+
+Sharding notes (see repro/sharding/rules.py):
+* training/prefill activations: batch on (pod,data), heads on model when the
+  head count divides the axis, else head_dim on model;
+* decode KV cache: (B, S, KV, hd) — batch on (pod,data), and KV on model when
+  divisible else hd on model; the hd contraction then reduces over a sharded
+  dim, which GSPMD turns into the flash-decode all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .module import apply_mrope, apply_rope, dense, dense_init, normal_init
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    hd = cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cfg.pdtype()
+    return {
+        "q": dense_init(kq, cfg.d_model, cfg.n_heads * hd, dt, bias=cfg.qkv_bias),
+        "k": dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "v": dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "o": dense_init(ko, cfg.n_heads * hd, cfg.d_model, dt, bias=False,
+                        init=lambda k, s, d: normal_init(k, s, d, stddev=0.02 / max(1, cfg.n_layers) ** 0.5)),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def default_positions(cfg: ModelConfig, B, S):
+    if cfg.mrope:
+        return jnp.broadcast_to(jnp.arange(S), (3, B, S))
+    return jnp.arange(S)
+
+
+def _rope(q, k, positions, cfg: ModelConfig):
+    if positions is None:
+        return q, k
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+# ------------------------------------------------------------------ masks
+def _mask_bias(q_pos, k_pos, mode: str, window):
+    """(Sq, Sk) additive bias. q_pos/k_pos: int32 position vectors."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    if mode == "bidir":
+        return jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    ok = dk <= dq
+    if mode == "sliding" and window is not None:
+        ok = ok & (dq - dk < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ core sdpa
+def _sdpa_naive(q, k, v, bias):
+    """q: (B,Sq,KV,G,hd)  k/v: (B,Sk,KV,hd)  bias: (Sq,Sk)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd)
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, mode, window, q_chunk=1024):
+    """Online-softmax attention, scanning query chunks: never materialises the
+    (Sq, Sk) score matrix for all queries at once.  Oracle for the Pallas
+    flash_attention kernel; also the dry-run path (Pallas cannot lower on the
+    CPU host platform)."""
+    B, Sq, KV, G, hd = q.shape
+    n_chunks = Sq // q_chunk
+    assert n_chunks * q_chunk == Sq, (Sq, q_chunk)
+    qs = q.reshape(B, n_chunks, q_chunk, KV, G, hd)
+    qps = q_pos.reshape(n_chunks, q_chunk)
+
+    @jax.checkpoint
+    def step(_, inp):
+        # checkpointed: backward recomputes the (bq, Sk) scores instead of
+        # saving per-chunk softmax probs (flash-attention memory behaviour)
+        qc, qp = inp
+        bias = _mask_bias(qp, k_pos, mode, window)
+        out = _sdpa_naive(qc, k, v, bias)
+        return _, out
+
+    from .transformer import _unroll
+    _, outs = jax.lax.scan(step, None, (jnp.moveaxis(qs, 1, 0), qps),
+                           unroll=_unroll())
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, G, hd)
+
+
+# ------------------------------------------------------------------ train/prefill
+def attention(p, x, cfg: ModelConfig, positions=None, kv_x=None, mode=None,
+              q_chunk=1024):
+    """Full-sequence attention.  kv_x != None -> cross attention (no rope on kv
+    side beyond its own positions handled by caller)."""
+    hd = cfg.head_dim_
+    B, S, _ = x.shape
+    cd = cfg.cdtype()
+    q = _split_heads(dense(p["q"], x, cd), cfg.n_heads, hd)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(dense(p["k"], src, cd), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["v"], src, cd), cfg.n_kv_heads, hd)
+
+    if mode is None:
+        if kv_x is not None:
+            mode = "bidir"
+        elif cfg.sliding_window is not None:
+            mode = "sliding"
+        else:
+            mode = "causal" if cfg.causal else "bidir"
+
+    if kv_x is None:  # self-attention: rotate q and k
+        if positions is None:
+            positions = default_positions(cfg, B, S)
+        q, k = _rope(q, k, positions, cfg)
+
+    # mask positions are always contiguous arange (no sequence packing here)
+    q_pos, k_pos = jnp.arange(S), jnp.arange(src.shape[1])
+
+    G = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(B, S, cfg.n_kv_heads, G, hd)
+
+    if S > q_chunk and S % q_chunk == 0:
+        out = _sdpa_chunked(q, k, v, q_pos, k_pos, mode, cfg.sliding_window, q_chunk)
+    else:
+        out = _sdpa_naive(q, k, v, _mask_bias(q_pos, k_pos, mode, cfg.sliding_window))
+
+    out = out.reshape(B, S, cfg.n_heads * hd).astype(cd)
+    return dense(p["o"], out, cd)
+
+
+# ------------------------------------------------------------------ prefill -> cache
+def attention_prefill(p, x, cfg: ModelConfig, positions=None):
+    """Returns (out, (k_cache_entry, v_cache_entry)) with layout (B, S, KV, hd)."""
+    hd = cfg.head_dim_
+    B, S, _ = x.shape
+    cd = cfg.cdtype()
+    q = _split_heads(dense(p["q"], x, cd), cfg.n_heads, hd)
+    k = _split_heads(dense(p["k"], x, cd), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["v"], x, cd), cfg.n_kv_heads, hd)
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    q, k = _rope(q, k, positions, cfg)
+    mode = "sliding" if cfg.sliding_window is not None else ("causal" if cfg.causal else "bidir")
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, G, hd)
+    pos1d = jnp.arange(S)
+    if S > 1024 and S % 1024 == 0:
+        out = _sdpa_chunked(qg, k, v, pos1d, pos1d, mode, cfg.sliding_window)
+    else:
+        out = _sdpa_naive(qg, k, v, _mask_bias(pos1d, pos1d, mode, cfg.sliding_window))
+    out = out.reshape(B, S, cfg.n_heads * hd).astype(cd)
+    return dense(p["o"], out, cd), (k, v)
+
+
+# ------------------------------------------------------------------ decode
+def attention_decode(p, x, cache, idx, cfg: ModelConfig, cross=False):
+    """One-token decode.
+
+    x: (B, 1, d).  cache: {"k","v"}: (B, Smax, KV, hd) (ring buffer when
+    sliding-window).  idx: scalar int32 — number of tokens already in cache.
+    Returns (out (B,1,d), updated cache).
+    """
+    hd = cfg.head_dim_
+    B = x.shape[0]
+    cd = cfg.cdtype()
+    Smax = cache["k"].shape[1]
+    q = _split_heads(dense(p["q"], x, cd), cfg.n_heads, hd)      # (B,1,H,hd)
+
+    if not cross:
+        k_new = _split_heads(dense(p["k"], x, cd), cfg.n_kv_heads, hd)
+        v_new = _split_heads(dense(p["v"], x, cd), cfg.n_kv_heads, hd)
+        pos = jnp.full((1,), idx, jnp.int32)
+        if cfg.mrope:
+            pos3 = jnp.broadcast_to(pos, (3, B, 1))
+            q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k_new = apply_mrope(k_new, pos3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k_new = apply_rope(k_new, pos, cfg.rope_theta)
+        from ..sharding.hooks import constrain_cache_entry
+        slot = idx % Smax if cfg.sliding_window is not None else idx
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                               (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                               (0, slot, 0, 0))
+        cache = {"k": constrain_cache_entry(k_cache),
+                 "v": constrain_cache_entry(v_cache)}
+        # valid positions: j <= idx (and within window for SWA ring buffer)
+        j = jnp.arange(Smax)
+        if cfg.sliding_window is not None:
+            valid = (j <= idx) | (idx >= Smax)      # ring full -> all slots valid
+        else:
+            valid = j <= idx
+    else:
+        j = jnp.arange(Smax)
+        valid = j < idx  # idx == encoder length for cross attention
+        if cfg.mrope:
+            pos3 = jnp.broadcast_to(jnp.full((1,), idx, jnp.int32), (3, B, 1))
+            q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+
+    from ..sharding.hooks import constrain_decode_q
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = constrain_decode_q(q.reshape(B, 1, cfg.n_kv_heads, G, hd))
+    # keep the cache in bf16 and accumulate in f32 (flash-decode numerics):
+    # an .astype(f32) here gets hoisted by XLA into a full-cache f32 copy
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache["k"],
+                        preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(cache["v"].dtype),
+                     cache["v"], preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(cd)
+    return dense(p["o"], out, cd), cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch, max_len, dtype=None):
+    """Per-layer cache entry; the model stacks these along axis 0."""
+    hd = cfg.head_dim_
+    dt = dtype or cfg.cdtype()
+    if cfg.sliding_window is not None:
+        max_len = min(max_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+    }

@@ -1,0 +1,172 @@
+"""Transformer blocks for every assigned family.
+
+kinds: dense (incl. vlm/M-RoPE via cfg), moe, ssm (FalconMamba), hybrid
+(Hymba parallel attn+SSM heads), enc (bidirectional), xdec (decoder with
+cross-attention).  Each kind provides init / apply (full-seq) / prefill /
+decode so the same stack drives training, prefill and cached decoding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention, attention_decode, attention_prefill,
+                        init_kv_cache)
+from .config import ModelConfig
+from .mlp import mlp, mlp_init, moe, moe_init
+from .module import apply_norm, norm_init
+from .ssm import init_ssm_cache, mamba, mamba_decode, mamba_init
+from .attention import attn_init
+
+ZERO_AUX = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def block_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe", "ssm": "ssm",
+            "hybrid": "hybrid"}[cfg.family] if cfg.family != "encdec" else "xdec"
+
+
+# ------------------------------------------------------------------ init
+def block_init(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype()
+    p = {"norm1": norm_init(ks[0], cfg.d_model, dt, cfg.norm)}
+    if kind == "ssm":
+        p["mixer"] = mamba_init(ks[1], cfg)
+        return p
+    if kind == "hybrid":
+        p["attn"] = attn_init(ks[1], cfg)
+        p["ssm"] = mamba_init(ks[2], cfg)
+        p["attn_out_norm"] = norm_init(ks[3], cfg.d_model, dt, cfg.norm)
+        p["ssm_out_norm"] = norm_init(ks[4], cfg.d_model, dt, cfg.norm)
+        p["norm2"] = norm_init(ks[5], cfg.d_model, dt, cfg.norm)
+        p["ffn"] = mlp_init(ks[5], cfg)
+        return p
+    p["attn"] = attn_init(ks[1], cfg)
+    p["norm2"] = norm_init(ks[2], cfg.d_model, dt, cfg.norm)
+    if kind == "moe":
+        p["ffn"] = moe_init(ks[3], cfg)
+    else:
+        p["ffn"] = mlp_init(ks[3], cfg)
+    if kind == "xdec":
+        p["cross"] = attn_init(ks[4], cfg)
+        p["norm_cross"] = norm_init(ks[5], cfg.d_model, dt, cfg.norm)
+    return p
+
+
+# ------------------------------------------------------------------ full-seq
+def block_apply(p, x, cfg: ModelConfig, kind: str, positions=None, enc_out=None,
+                mode=None):
+    """x: (B, S, d) -> (x, aux)."""
+    aux = dict(ZERO_AUX)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "ssm":
+        mix, _ = mamba(p["mixer"], h, cfg)
+        return x + mix, aux
+    if kind == "hybrid":
+        a = attention(p["attn"], h, cfg, positions=positions, mode=mode)
+        s, _ = mamba(p["ssm"], h, cfg)
+        # Hymba: parallel heads, outputs normalised then averaged
+        mix = 0.5 * (apply_norm(p["attn_out_norm"], a, cfg.norm)
+                     + apply_norm(p["ssm_out_norm"], s, cfg.norm))
+        x = x + mix
+        x = x + mlp(p["ffn"], apply_norm(p["norm2"], x, cfg.norm), cfg)
+        return x, aux
+    x = x + attention(p["attn"], h, cfg, positions=positions, mode=mode)
+    if kind == "xdec" and enc_out is not None:
+        hc = apply_norm(p["norm_cross"], x, cfg.norm)
+        x = x + attention(p["cross"], hc, cfg, kv_x=enc_out, mode="bidir")
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "moe":
+        y, aux = moe(p["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp(p["ffn"], h2, cfg)
+    return x, aux
+
+
+# ------------------------------------------------------------------ prefill
+def block_prefill(p, x, cfg: ModelConfig, kind: str, positions=None, enc_out=None):
+    """Returns (x, cache_entry)."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "ssm":
+        mix, st = mamba(p["mixer"], h, cfg)
+        return x + mix, st
+    if kind == "hybrid":
+        a, (kc, vc) = attention_prefill(p["attn"], h, cfg, positions=positions)
+        s, st = mamba(p["ssm"], h, cfg)
+        mix = 0.5 * (apply_norm(p["attn_out_norm"], a, cfg.norm)
+                     + apply_norm(p["ssm_out_norm"], s, cfg.norm))
+        x = x + mix
+        x = x + mlp(p["ffn"], apply_norm(p["norm2"], x, cfg.norm), cfg)
+        return x, {"k": kc, "v": vc, **st}
+    a, (kc, vc) = attention_prefill(p["attn"], h, cfg, positions=positions)
+    x = x + a
+    cache = {"k": kc, "v": vc}
+    if kind == "xdec" and enc_out is not None:
+        hc = apply_norm(p["norm_cross"], x, cfg.norm)
+        x = x + attention(p["cross"], hc, cfg, kv_x=enc_out, mode="bidir")
+        # cross K/V are static per request: precompute once
+        from .attention import _split_heads
+        from .module import dense
+        hd = cfg.head_dim_
+        cache["ck"] = _split_heads(dense(p["cross"]["k"], enc_out, cfg.cdtype()),
+                                   cfg.n_kv_heads, hd)
+        cache["cv"] = _split_heads(dense(p["cross"]["v"], enc_out, cfg.cdtype()),
+                                   cfg.n_kv_heads, hd)
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "moe":
+        y, _ = moe(p["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp(p["ffn"], h2, cfg)
+    return x, cache
+
+
+# ------------------------------------------------------------------ decode
+def block_decode(p, x, cache, idx, cfg: ModelConfig, kind: str, enc_len=None):
+    """x: (B,1,d); cache: this layer's entry; idx: tokens already cached."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "ssm":
+        mix, st = mamba_decode(p["mixer"], h, cache, cfg)
+        return x + mix, st
+    if kind == "hybrid":
+        kvc = {"k": cache["k"], "v": cache["v"]}
+        a, kvc = attention_decode(p["attn"], h, kvc, idx, cfg)
+        s, st = mamba_decode(p["ssm"], h, {"conv": cache["conv"], "h": cache["h"]}, cfg)
+        mix = 0.5 * (apply_norm(p["attn_out_norm"], a, cfg.norm)
+                     + apply_norm(p["ssm_out_norm"], s, cfg.norm))
+        x = x + mix
+        x = x + mlp(p["ffn"], apply_norm(p["norm2"], x, cfg.norm), cfg)
+        return x, {**kvc, **st}
+    kvc = {"k": cache["k"], "v": cache["v"]}
+    a, kvc = attention_decode(p["attn"], h, kvc, idx, cfg)
+    x = x + a
+    new_cache = dict(kvc)
+    if kind == "xdec" and "ck" in cache:
+        hc = apply_norm(p["norm_cross"], x, cfg.norm)
+        c, _ = attention_decode(p["cross"], hc, {"k": cache["ck"], "v": cache["cv"]},
+                                enc_len, cfg, cross=True)
+        x = x + c
+        new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "moe":
+        y, _ = moe(p["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp(p["ffn"], h2, cfg)
+    return x, new_cache
+
+
+# ------------------------------------------------------------------ cache init
+def block_cache_init(cfg: ModelConfig, kind: str, batch, max_len, enc_len=None):
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch)
+    cache = init_kv_cache(cfg, batch, max_len)
+    if kind == "hybrid":
+        cache.update(init_ssm_cache(cfg, batch))
+    if kind == "xdec" and enc_len is not None:
+        hd = cfg.head_dim_
+        cache["ck"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), cfg.cdtype())
+        cache["cv"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), cfg.cdtype())
+    return cache

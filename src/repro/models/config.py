@@ -1,0 +1,187 @@
+"""Model / adapter / chain configuration dataclasses.
+
+One `ModelConfig` covers every assigned architecture family:
+dense / moe / ssm / hybrid / encdec(audio) / vlm.  Each
+``src/repro/configs/<arch>.py`` instantiates it with the exact published
+hyper-parameters (source cited there) and provides a reduced smoke variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterConfig:
+    """Houlsby bottleneck adapter (paper Eq. 1)."""
+    rank: int = 64                  # v — bottleneck width
+    activation: str = "gelu"        # f(.)
+    dropout: float = 0.0            # kept for API completeness (inference-mode in chain prefix)
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    arch_id: str = "unnamed"
+    family: str = "dense"            # dense | moe | ssm | hybrid | encdec | vlm
+    source: str = ""                 # citation for the config values
+
+    # trunk
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    activation: str = "swiglu"       # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    mrope: bool = False              # Qwen2-VL multimodal rope (3 position axes)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # per-axis head_dim halves
+    sliding_window: Optional[int] = None   # SWA variant (enables long_500k for dense)
+    causal: bool = True
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 0.001
+    moe_group_size: int = 512        # GShard dispatch group size (tokens)
+
+    # SSM (mamba-1)
+    ssm_state: int = 0
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_conv_width: int = 4
+    ssm_dt_rank: int = 0             # 0 -> ceil(d_model / 16)
+
+    # encoder-decoder (audio / seq2seq); n_layers is the DECODER depth then
+    n_encoder_layers: int = 0
+    frontend: str = "none"           # none | audio_stub | vision_stub
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    # adapter
+    adapter: AdapterConfig = dataclasses.field(default_factory=AdapterConfig)
+
+    # ----- derived -----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(1, (self.d_model + 15) // 16)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to_multiple(self.vocab_size, 128)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def uses_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def total_chain_layers(self) -> int:
+        """Layers the optimization chain runs over (enc+dec for encdec)."""
+        return self.n_layers + self.n_encoder_layers
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, n_layers: int = 2, d_model: int = 128, n_experts: int = 4,
+                vocab: int = 512) -> "ModelConfig":
+        """Smoke-test variant of the same family (<=2 layers, d_model<=512, <=4 experts)."""
+        kw = dict(
+            n_layers=n_layers,
+            d_model=min(d_model, 512),
+            n_heads=max(2, min(self.n_heads, 4)),
+            d_ff=4 * min(d_model, 512),
+            vocab_size=vocab,
+            head_dim=0,
+            param_dtype="float32",
+            compute_dtype="float32",
+            adapter=self.adapter.replace(rank=8),
+            moe_group_size=64,
+        )
+        kw["n_kv_heads"] = max(1, min(self.n_kv_heads, kw["n_heads"]))
+        if self.n_experts:
+            kw["n_experts"] = min(n_experts, 4)
+            kw["top_k"] = min(self.top_k, 2)
+            kw["n_shared_experts"] = min(self.n_shared_experts, 1)
+            kw["expert_d_ff"] = min(d_model, 512) // 2
+        if self.ssm_state:
+            kw["ssm_state"] = min(self.ssm_state, 8)
+        if self.n_encoder_layers:
+            kw["n_encoder_layers"] = 2
+        if self.sliding_window:
+            kw["sliding_window"] = 64
+        if self.mrope:
+            hd = min(d_model, 512) // kw["n_heads"]
+            s = hd // 2 // 4
+            kw["mrope_sections"] = (hd // 2 - 2 * s, s, s)
+        return self.replace(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainConfig:
+    """CHAINFED hyper-parameters (paper §4 + App. D.3)."""
+    window: int = 3                 # Q — DLCT co-tuning window size
+    lam: float = 0.2                # λ — GPO global-loss weight (Eq. 2)
+    foat_threshold: float = 0.8     # T — FOAT CKA threshold
+    local_steps: int = 1            # local optimisation steps per round
+    lr: float = 1e-3
+    optimizer: str = "adamw"        # adamw | sgd
+    advance_every: int = 1          # rounds per window advance (paper: 1)
+    cycles: int = 1                 # holistic passes over the chain
+    train_head: bool = True         # train the output layer (classification)
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 16
+    clients_per_round: int = 4
+    rounds: int = 10
+    dirichlet_alpha: float = 1.0    # non-IID partition (paper: α=1)
+    iid: bool = False
+    seed: int = 0
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,120 @@
+"""Feed-forward layers: dense GeGLU/SwiGLU/GELU MLPs and GShard-style
+top-k Mixture-of-Experts with capacity-based dispatch (+ shared experts for
+DeepSeekMoE [arXiv:2401.06066]).
+
+The MoE dispatch is expressed as dense einsums over a (groups, tokens,
+experts, capacity) one-hot so that, under pjit with experts sharded on the
+"model" mesh axis, GSPMD lowers it to the canonical all-to-all pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .module import ACTIVATIONS, dense, dense_init, normal_init
+
+
+# ------------------------------------------------------------------ dense mlp
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.pdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, cfg.d_model, d_ff, dt),
+         "down": dense_init(k2, d_ff, cfg.d_model, dt,
+                            init=lambda k, s, d: normal_init(k, s, d, 0.02 / max(1, cfg.n_layers) ** 0.5))}
+    if cfg.activation in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k3, cfg.d_model, d_ff, dt)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig, act=None):
+    cd = cfg.cdtype()
+    act = act or cfg.activation
+    if act in ("swiglu", "geglu"):
+        g = dense(p["gate"], x, cd)
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * dense(p["up"], x, cd)
+    else:
+        h = ACTIVATIONS[act](dense(p["up"], x, cd))
+    return dense(p["down"], h, cd)
+
+
+# ------------------------------------------------------------------ moe
+def moe_init(key, cfg: ModelConfig):
+    dt = cfg.pdtype()
+    kr, ke, ks = jax.random.split(key, 3)
+    E, dff = cfg.n_experts, cfg.expert_d_ff
+
+    def expert_bank(k):
+        kg, ku, kd = jax.random.split(k, 3)
+        return {
+            "gate": normal_init(kg, (E, cfg.d_model, dff), dt),
+            "up": normal_init(ku, (E, cfg.d_model, dff), dt),
+            "down": normal_init(kd, (E, dff, cfg.d_model), dt,
+                                stddev=0.02 / max(1, cfg.n_layers) ** 0.5),
+        }
+
+    p = {"router": dense_init(kr, cfg.d_model, E, dt), "experts": expert_bank(ke)}
+    if cfg.n_shared_experts:
+        keys = jax.random.split(ks, cfg.n_shared_experts)
+        p["shared"] = [mlp_init(k, cfg, d_ff=dff) for k in keys]
+    return p
+
+
+def _expert_ffn(bank, x, cfg: ModelConfig):
+    """x: (E, C_total, d) -> (E, C_total, d); SwiGLU expert MLP."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, bank["gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", x, bank["up"].astype(x.dtype))
+    return jnp.einsum("ecf,efd->ecd", g * u, bank["down"].astype(x.dtype))
+
+
+def moe(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux) where aux = {load_balance, router_z}."""
+    cd = cfg.cdtype()
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = min(cfg.moe_group_size, B * S)
+    T = B * S
+    assert T % G == 0, (T, G)
+    n_groups = T // G
+    cap = max(1, int(cfg.capacity_factor * G * K / E))
+    cap = min(cap, G)
+
+    xg = x.reshape(n_groups, G, d)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                      # (g, G, K)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)       # (g, G, K, E)
+    # flatten (token, k) assignments in token-major order for capacity ranking
+    flat = onehot.reshape(n_groups, G * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # (g, G*K, E)
+    keep = (pos < cap).astype(jnp.float32) * flat
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    disp_flat = keep[..., None] * pos_oh                      # (g, G*K, E, C)
+    disp = disp_flat.reshape(n_groups, G, K, E, cap)
+    dispatch = jnp.sum(disp, axis=2)                          # (g, G, E, C) 0/1
+    combine = jnp.sum(disp * topv[..., None, None], axis=2)   # (g, G, E, C)
+
+    # ---- all-to-all in, expert compute, all-to-all out (under GSPMD) ----
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch.astype(cd), xg.astype(cd))
+    expert_in = expert_in.reshape(E, n_groups * cap, d)
+    expert_out = _expert_ffn(p["experts"], expert_in, cfg)
+    expert_out = expert_out.reshape(E, n_groups, cap, d)
+    y = jnp.einsum("gtec,egcd->gtd", combine.astype(cd), expert_out)
+    y = y.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        for sp in p["shared"]:
+            y = y + mlp(sp, x, cfg, act="swiglu")
+
+    # ---- aux losses (GShard load-balance + router z-loss) ----
+    me = jnp.mean(probs, axis=(0, 1))                         # mean gate prob per expert
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))       # mean assignment per expert
+    load_balance = E * jnp.sum(me * ce)
+    router_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"load_balance": load_balance, "router_z": router_z}
+    return y, aux

@@ -1,0 +1,139 @@
+"""Minimal functional module layer: params are nested dicts, layers are
+(init, apply) function pairs.  No flax in the environment — this is the
+framework's own substrate, kept deliberately small and fully tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- initializers
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def lecun_init(key, shape, dtype):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    return (jax.random.normal(key, shape) / jnp.sqrt(jnp.maximum(fan_in, 1))).astype(dtype)
+
+
+# ---------------------------------------------------------------- dense
+def dense_init(key, d_in, d_out, dtype, bias=False, init=normal_init):
+    p = {"w": init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- norms
+def norm_init(_key, d, dtype, kind="rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y + 0.0  # keep float32 until scale
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(key, vocab, d, dtype):
+    return {"table": normal_init(key, (vocab, d), dtype, stddev=0.02)}
+
+
+def embed(p, ids, compute_dtype=None):
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def unembed(p, x, vocab_size=None):
+    """Tied readout.  Masks padded vocab rows to -inf."""
+    logits = x @ p["table"].astype(x.dtype).T
+    if vocab_size is not None and vocab_size < p["table"].shape[0]:
+        pad = p["table"].shape[0] - vocab_size
+        mask = jnp.concatenate([jnp.zeros((vocab_size,), logits.dtype),
+                                jnp.full((pad,), -1e9, logits.dtype)])
+        logits = logits + mask
+    return logits
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    ang = ang[..., None, :]                            # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=10000.0):
+    """Qwen2-VL M-RoPE [arXiv:2409.12191]: three position streams (temporal,
+    height, width) rotate disjoint frequency sections of each head.
+
+    x: (..., S, H, hd); positions3: (3, ..., S); sections: per-axis counts of
+    frequency pairs, sum(sections) == hd // 2.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    assert sum(sections) == hd // 2, (sections, hd)
+    # pick which position axis drives each frequency pair
+    sel = jnp.concatenate([jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        jnp.moveaxis(positions3, 0, -1),               # (..., S, 3)
+        jnp.broadcast_to(sel, positions3.shape[1:] + (hd // 2,)), axis=-1)
+    ang = pos.astype(jnp.float32) * freqs              # (..., S, hd/2)
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}

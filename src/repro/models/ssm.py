@@ -1,0 +1,173 @@
+"""Mamba-1 selective SSM (FalconMamba [arXiv:2410.05355], Hymba SSM branch
+[arXiv:2411.13676]).
+
+The training/prefill path uses a *chunked* selective scan: a `lax.scan` over
+sequence chunks carrying the (d_inner, N) state, with an associative scan
+inside each chunk.  The (B, S, d_inner, N) discretised tensors therefore only
+ever exist one chunk at a time — this is the structural adaptation of the
+CUDA selective-scan kernel to TPU memory (HBM->VMEM streaming); the Pallas
+`ssm_scan` kernel implements the same blocking explicitly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .module import dense, dense_init, normal_init
+
+# §Perf lever: checkpoint each selective-scan chunk (see chunked_selective_scan)
+SSM_CHUNK_CKPT = False
+
+
+def set_ssm_chunk_ckpt(flag: bool):
+    global SSM_CHUNK_CKPT
+    SSM_CHUNK_CKPT = bool(flag)
+
+
+# ------------------------------------------------------------------ params
+def mamba_init(key, cfg: ModelConfig):
+    dt_ = cfg.pdtype()
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    R = cfg.dt_rank
+    ks = jax.random.split(key, 7)
+    # S4D-real initialisation for A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, N))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_in, dt_),
+        "conv_w": normal_init(ks[1], (cfg.ssm_conv_width, d_in), dt_, stddev=0.1),
+        "conv_b": jnp.zeros((d_in,), dt_),
+        "x_proj": dense_init(ks[2], d_in, R + 2 * N, dt_),
+        "dt_proj": {"w": normal_init(ks[3], (R, d_in), dt_, stddev=R ** -0.5),
+                    "b": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01, jnp.float32))).astype(dt_)},
+        "A_log": jnp.log(A).astype(dt_),
+        "D": jnp.ones((d_in,), dt_),
+        "out_proj": dense_init(ks[4], d_in, cfg.d_model, dt_,
+                               init=lambda k, s, d: normal_init(k, s, d, 0.02 / max(1, cfg.n_layers) ** 0.5)),
+    }
+
+
+def _ssm_inputs(p, u, cfg: ModelConfig):
+    """u: (B, S, d_inner) post-conv activations -> (dt, Bm, Cm)."""
+    N, R = cfg.ssm_state, cfg.dt_rank
+    xdbc = dense(p["x_proj"], u, jnp.float32)
+    dt_r, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]["w"].astype(jnp.float32)
+                         + p["dt_proj"]["b"].astype(jnp.float32))     # (B,S,d_in)
+    return dt, Bm, Cm
+
+
+def _causal_conv(p, x, cfg: ModelConfig, init_state=None):
+    """Depthwise causal conv1d.  x: (B, S, d_inner).  init_state: (B, W-1, d)
+    tail of previous tokens (decode/prefill continuation)."""
+    W = cfg.ssm_conv_width
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    out = sum(xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i] for i in range(W))
+    return (out + p["conv_b"].astype(jnp.float32)).astype(x.dtype), xp[:, -(W - 1):]
+
+
+def chunked_selective_scan(u, dt, Bm, Cm, A, D, h0=None, chunk=256):
+    """Selective scan  h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = h_t·C_t + D u_t.
+
+    u/dt: (B, S, d);  Bm/Cm: (B, S, N);  A: (d, N);  D: (d,);  h0: (B, d, N).
+    Returns (y (B,S,d), h_final (B,d,N)).  All math float32.
+    """
+    Bsz, S, d = u.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    n_chunks = max(1, S // chunk)
+    assert n_chunks * chunk == S, (S, chunk)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, d, N), jnp.float32)
+
+    u_c = u.reshape(Bsz, n_chunks, chunk, d)
+    dt_c = dt.reshape(Bsz, n_chunks, chunk, d)
+    B_c = Bm.reshape(Bsz, n_chunks, chunk, N)
+    C_c = Cm.reshape(Bsz, n_chunks, chunk, N)
+
+    def chunk_step(h, xs):  # noqa: ANN001  (checkpointed below when enabled)
+        uc, dtc, bc, cc = xs                                   # (B, chunk, ...)
+        dA = dtc[..., None] * A                                # (B,chunk,d,N)  A<0
+        a = jnp.exp(dA)
+        b = (dtc * uc)[..., None] * bc[:, :, None, :]          # (B,chunk,d,N)
+
+        def op(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+
+        a_sc, b_sc = jax.lax.associative_scan(op, (a, b), axis=1)
+        h_all = b_sc + a_sc * h[:, None]                       # (B,chunk,d,N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cc) + D * uc
+        return h_all[:, -1], y
+
+    if SSM_CHUNK_CKPT:
+        # §Perf iteration (EXPERIMENTS.md): without this, backward through the
+        # chunk scan saves the (B, chunk, d_inner, N) discretised tensors of
+        # EVERY chunk (≈ S·d_inner·N floats per layer) — checkpointing the
+        # chunk recomputes them, saving only the (B, d_inner, N) carries.
+        chunk_step = jax.checkpoint(chunk_step)
+
+    from .transformer import _unroll
+    h_fin, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(u_c, 1, 0), jnp.moveaxis(dt_c, 1, 0),
+         jnp.moveaxis(B_c, 1, 0), jnp.moveaxis(C_c, 1, 0)),
+        unroll=_unroll())
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, d)
+    return y, h_fin
+
+
+# ------------------------------------------------------------------ block apply
+def mamba(p, x, cfg: ModelConfig, state=None, use_kernel=False):
+    """Full-sequence mamba mixer.  x: (B, S, d_model).
+    state: optional {"conv": (B,W-1,d_in), "h": (B,d_in,N)} to continue from.
+    Returns (out (B,S,d_model), new_state)."""
+    cd = cfg.cdtype()
+    xz = dense(p["in_proj"], x, cd)
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_in = None if state is None else state["conv"]
+    u, conv_tail = _causal_conv(p, u, cfg, conv_in)
+    u = jax.nn.silu(u.astype(jnp.float32))
+    dt, Bm, Cm = _ssm_inputs(p, u, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    D = p["D"].astype(jnp.float32)
+    h0 = None if state is None else state["h"]
+    if use_kernel:
+        from ..kernels import ops as kops
+        y, h_fin = kops.ssm_scan(u, dt, Bm, Cm, A, D, h0=h0)
+    else:
+        y, h_fin = chunked_selective_scan(u, dt, Bm, Cm, A, D, h0=h0)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(cd), cd)
+    return out, {"conv": conv_tail, "h": h_fin}
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig):
+    """Single-token recurrence.  x: (B, 1, d_model)."""
+    cd = cfg.cdtype()
+    xz = dense(p["in_proj"], x, cd)
+    u, z = jnp.split(xz, 2, axis=-1)                           # (B,1,d_in)
+    W = cfg.ssm_conv_width
+    conv_buf = jnp.concatenate([state["conv"], u], axis=1)     # (B,W,d_in)
+    w = p["conv_w"].astype(jnp.float32)
+    u1 = sum(conv_buf[:, i].astype(jnp.float32) * w[i] for i in range(W))
+    u1 = jax.nn.silu(u1 + p["conv_b"].astype(jnp.float32))[:, None]  # (B,1,d_in)
+    dt, Bm, Cm = _ssm_inputs(p, u1, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A)                         # (B,d_in,N)
+    b = (dt[:, 0] * u1[:, 0])[..., None] * Bm[:, 0, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0]) + p["D"].astype(jnp.float32) * u1[:, 0]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None]
+    out = dense(p["out_proj"], y.astype(cd), cd)
+    return out, {"conv": conv_buf[:, 1:], "h": h}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner), cfg.cdtype()),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

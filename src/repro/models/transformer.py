@@ -1,0 +1,420 @@
+"""Model assembly: scan-over-layers stacks for all families, with four entry
+points —
+
+* ``forward_full``   : end-to-end logits (Full Adapters† baseline, eval)
+* ``forward_chain``  : CHAINFED's staged forward — frozen prefix → DLCT
+                       window → local head + GPO auxiliary branch
+* ``prefill``        : full-sequence forward building the decode cache
+* ``decode_step``    : one-token cached decode (serve path)
+
+plus ``collect_layer_outputs`` for FOAT's CKA profiling.
+Base params and adapters are separate pytrees; adapters are stacked (L, ...)
+so the chain can slice them with static bounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.adapters import adapter_apply, adapter_chain_apply, adapter_stack_init
+from ..sharding.hooks import constrain_logits, constrain_residual
+from .blocks import (block_apply, block_cache_init, block_decode, block_init,
+                     block_prefill)
+from .config import ModelConfig
+from .module import apply_norm, embed, embed_init, norm_init, unembed
+from .attention import default_positions
+
+ZERO = jnp.float32(0.0)
+
+# Dry-run cost-accounting mode: XLA's cost_analysis counts while-loop bodies
+# ONCE, so roofline FLOPs/bytes/collectives would be ~L× under-counted with
+# scan-over-layers.  Setting UNROLL_SCANS=True (repro.models.set_unroll)
+# unrolls every structural scan so the compiled HLO carries the true totals.
+UNROLL_SCANS = False
+
+
+def set_unroll(flag: bool):
+    global UNROLL_SCANS
+    UNROLL_SCANS = bool(flag)
+
+
+def _unroll():
+    return True if UNROLL_SCANS else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSegments:
+    """Static chain-stage geometry: layers [0, prefix) are frozen context,
+    [prefix, prefix+window) is the DLCT co-tuning window, the rest feeds the
+    GPO auxiliary branch."""
+    prefix: int
+    window: int
+
+    def clip(self, n_layers: int) -> "ChainSegments":
+        p = max(0, min(self.prefix, n_layers - 1))
+        w = max(1, min(self.window, n_layers - p))
+        return ChainSegments(p, w)
+
+
+# =================================================================== init
+def _stack_init(key, cfg: ModelConfig, kind: str, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, cfg, kind))(keys)
+
+
+def _kinds(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return "enc", "xdec"
+    k = {"dense": "dense", "vlm": "dense", "moe": "moe", "ssm": "ssm",
+         "hybrid": "hybrid"}[cfg.family]
+    return None, k
+
+
+def init_lm(key, cfg: ModelConfig):
+    k_emb, k_enc, k_dec, k_nrm = jax.random.split(key, 4)
+    params = {"embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model, cfg.pdtype()),
+              "final_norm": norm_init(k_nrm, cfg.d_model, cfg.pdtype(), cfg.norm)}
+    enc_kind, dec_kind = _kinds(cfg)
+    if cfg.is_encdec:
+        params["enc_layers"] = _stack_init(k_enc, cfg, enc_kind, cfg.n_encoder_layers)
+        params["enc_norm"] = norm_init(k_nrm, cfg.d_model, cfg.pdtype(), cfg.norm)
+    params["layers"] = _stack_init(k_dec, cfg, dec_kind, cfg.n_layers)
+    return params
+
+
+def init_adapters(key, cfg: ModelConfig):
+    return adapter_stack_init(key, cfg, cfg.total_chain_layers)
+
+
+# =================================================================== embed
+def embed_inputs(params, batch, cfg: ModelConfig):
+    """Returns (x, positions).  Audio/VLM frontends are stubbed per spec:
+    ``embeds`` are precomputed frame/patch embeddings of the right shape."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.cdtype())
+    else:
+        x = embed(params["embed"], batch["tokens"], cfg.cdtype())
+    B, S = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    return x, positions
+
+
+def head(params, x, cfg: ModelConfig):
+    """Readout: tied embedding by default; a trainable task head (``cls_head``,
+    (d, V)) overrides it when present — classification fine-tuning trains the
+    output layer in every method (paper Fig. 4 'output layer')."""
+    h = apply_norm(params["final_norm"], x, cfg.norm)
+    if "cls_head" in params:
+        logits = h @ params["cls_head"]["w"].astype(h.dtype)
+        V = params["cls_head"]["w"].shape[1]
+        if cfg.vocab_size < V:
+            mask = jnp.concatenate([jnp.zeros((cfg.vocab_size,), logits.dtype),
+                                    jnp.full((V - cfg.vocab_size,), -1e9,
+                                             logits.dtype)])
+            logits = logits + mask
+        return constrain_logits(logits)
+    return constrain_logits(unembed(params["embed"], h, cfg.vocab_size))
+
+
+def init_cls_head(params):
+    """Task head initialized from the (pretrained) tied embedding — identical
+    logits at step 0, trainable thereafter."""
+    return {"w": params["embed"]["table"].T.copy()}
+
+
+# =================================================================== scans
+def _scan_layers(stack, adapters, x, cfg: ModelConfig, kind, positions,
+                 enc_out=None, remat=False, mode=None, collect=False):
+    """Scan a (possibly empty) stacked segment; adapters may be None."""
+    n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+    if n == 0:
+        return x, (ZERO, ZERO), None
+
+    def body(carry, xs):
+        h, lb, rz = carry
+        lp, ap = xs
+        h, aux = block_apply(lp, h, cfg, kind, positions=positions,
+                             enc_out=enc_out, mode=mode)
+        h = adapter_apply(ap, h, cfg)
+        h = constrain_residual(h)
+        # FOAT profiles *pooled* per-layer features (B, d): CKA treats the
+        # batch as the sample dimension, which also keeps collection O(L·B·d)
+        out = h.mean(axis=1) if collect else None
+        return (h, lb + aux["load_balance"], rz + aux["router_z"]), out
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, lb, rz), ys = jax.lax.scan(body, (x, ZERO, ZERO), (stack, adapters),
+                                   unroll=_unroll())
+    return x, (lb, rz), ys
+
+
+def _require_adapters(adapters):
+    assert adapters is not None, "all stacks carry adapters in this framework"
+
+
+# =================================================================== full fwd
+def forward_full(params, adapters, batch, cfg: ModelConfig, remat=True,
+                 collect=False):
+    """End-to-end forward with every adapter active.  Returns (logits, aux)
+    or (logits, aux, layer_outputs[L+1, B, S, d]) when collect=True."""
+    _require_adapters(adapters)
+    x, positions = embed_inputs(params, batch, cfg)
+    enc_kind, dec_kind = _kinds(cfg)
+    E = cfg.n_encoder_layers
+    enc_out = None
+    outs = []
+    lb = rz = ZERO
+    if cfg.is_encdec:
+        xe, _ = _enc_embed(params, batch, cfg)
+        enc_ad = _slice(adapters, 0, E)
+        xe, (lb1, rz1), ys = _scan_layers(params["enc_layers"], enc_ad, xe, cfg,
+                                          enc_kind, None, remat=remat,
+                                          mode="bidir", collect=collect)
+        enc_out = apply_norm(params["enc_norm"], xe, cfg.norm)
+        lb, rz = lb + lb1, rz + rz1
+        if collect:
+            outs.append(ys)
+        dec_ad = _slice(adapters, E, E + cfg.n_layers)
+    else:
+        dec_ad = adapters
+    x, (lb2, rz2), ys = _scan_layers(params["layers"], dec_ad, x, cfg, dec_kind,
+                                     positions, enc_out=enc_out, remat=remat,
+                                     collect=collect)
+    lb, rz = lb + lb2, rz + rz2
+    logits = head(params, x, cfg)
+    aux = {"load_balance": lb, "router_z": rz}
+    if collect:
+        outs.append(ys)
+        return logits, aux, jnp.concatenate([o for o in outs if o is not None], axis=0)
+    return logits, aux
+
+
+def _enc_embed(params, batch, cfg: ModelConfig):
+    if "enc_embeds" in batch:
+        return batch["enc_embeds"].astype(cfg.cdtype()), None
+    return embed(params["embed"], batch["enc_tokens"], cfg.cdtype()), None
+
+
+def _slice(tree, a, b):
+    return jax.tree_util.tree_map(lambda x: x[a:b], tree)
+
+
+# =================================================================== chain fwd
+def forward_chain(params, window_adapters, frozen_adapters, batch,
+                  cfg: ModelConfig, seg: ChainSegments, remat=True,
+                  loss_ctx=None):
+    """CHAINFED staged forward (paper §4).
+
+    ``window_adapters`` — stacked (Q, ...) trainable adapters (the DLCT window).
+    ``frozen_adapters`` — the full (L, ...) stack *as constants*; prefix and
+    suffix segments are read from it (stop-gradient semantics come from taking
+    grads only w.r.t. ``window_adapters``).
+
+    Returns {"local_logits", "global_logits", "aux"}.
+    Suffix base layers are never executed: the GPO auxiliary branch applies
+    only the suffix adapters + final output layer.
+    """
+    if cfg.is_encdec:
+        assert loss_ctx is None, "sequential GPO: single-stack models only"
+        return _forward_chain_encdec(params, window_adapters, frozen_adapters,
+                                     batch, cfg, seg, remat)
+    L = cfg.n_layers
+    seg = seg.clip(L)
+    k, Q = seg.prefix, seg.window
+    x, positions = embed_inputs(params, batch, cfg)
+    _, kind = _kinds(cfg)
+
+    # frozen prefix: inference mode, activations never saved for backward
+    pre_layers = _slice(params["layers"], 0, k)
+    pre_ad = _slice(frozen_adapters, 0, k)
+    x, (lb0, rz0), _ = _scan_layers(pre_layers, pre_ad, x, cfg, kind, positions,
+                                    remat=False)
+    x = jax.lax.stop_gradient(x)
+
+    # DLCT window: the only segment holding gradients / optimizer state
+    win_layers = _slice(params["layers"], k, k + Q)
+    x, (lb1, rz1), _ = _scan_layers(win_layers, window_adapters, x, cfg, kind,
+                                    positions, remat=remat)
+
+    aux = {"load_balance": lb0 + lb1, "router_z": rz0 + rz1}
+    suf_ad = _slice(frozen_adapters, k + Q, L)
+
+    if loss_ctx is not None:
+        # §Perf lever (GPO_SEQUENTIAL): the dual objective normally keeps BOTH
+        # vocab-sized logits tensors (+f32 softmax temps) live for backward —
+        # dominant for big-vocab models.  Checkpointing each CE branch holds
+        # only the (B,S,d) window output; logits are recomputed per branch.
+        from ..train.losses import cross_entropy
+        labels, lam, final = loss_ctx
+
+        @jax.checkpoint
+        def local_branch(xw):
+            return cross_entropy(head(params, xw, cfg), labels)
+
+        @jax.checkpoint
+        def global_branch(xw):
+            xa = adapter_chain_apply(suf_ad, xw, cfg)
+            return cross_entropy(head(params, xa, cfg), labels)
+
+        local = local_branch(x)
+        if final:
+            return {"loss": local, "local": local, "global": local, "aux": aux}
+        glob = global_branch(x)
+        return {"loss": local + lam * glob, "local": local, "global": glob,
+                "aux": aux}
+
+    local_logits = head(params, x, cfg)
+
+    # GPO auxiliary branch: suffix adapters as low-rank layer approximations
+    xa = adapter_chain_apply(suf_ad, x, cfg)
+    global_logits = head(params, xa, cfg)
+
+    return {"local_logits": local_logits, "global_logits": global_logits,
+            "aux": aux}
+
+
+def _forward_chain_encdec(params, window_adapters, frozen_adapters, batch,
+                          cfg: ModelConfig, seg: ChainSegments, remat=True):
+    """Chain over the concatenated [encoder ‖ decoder] layer list.  The stage
+    scheduler guarantees the window never straddles the enc/dec boundary."""
+    E, D = cfg.n_encoder_layers, cfg.n_layers
+    k, Q = seg.prefix, seg.window
+    if k < E and k + Q > E:   # snap straddling windows to the decoder start
+        k = E
+    Q = min(Q, E + D - k)
+    xd, positions = embed_inputs(params, batch, cfg)
+    xe, _ = _enc_embed(params, batch, cfg)
+
+    if k + Q <= E:  # ---- window inside the encoder
+        pre = _slice(params["enc_layers"], 0, k)
+        xe, _, _ = _scan_layers(pre, _slice(frozen_adapters, 0, k), xe, cfg,
+                                "enc", None, mode="bidir")
+        xe = jax.lax.stop_gradient(xe)
+        win = _slice(params["enc_layers"], k, k + Q)
+        xe, (lb, rz), _ = _scan_layers(win, window_adapters, xe, cfg, "enc",
+                                       None, mode="bidir", remat=remat)
+        # cross-modal GPO bridge (DESIGN §6): pooled encoder state injected
+        # into the decoder token stream; no downstream base layer executes.
+        pool = jnp.mean(xe, axis=1, keepdims=True)
+        local_logits = head(params, jax.lax.stop_gradient(xd) + pool, cfg)
+        suf_enc = _slice(frozen_adapters, k + Q, E)
+        xs = adapter_chain_apply(suf_enc, xe, cfg)
+        pool_g = jnp.mean(xs, axis=1, keepdims=True)
+        dec_ad = _slice(frozen_adapters, E, E + D)
+        xg = adapter_chain_apply(dec_ad, jax.lax.stop_gradient(xd) + pool_g, cfg)
+        global_logits = head(params, xg, cfg)
+        return {"local_logits": local_logits, "global_logits": global_logits,
+                "aux": {"load_balance": lb, "router_z": rz}}
+
+    # ---- window inside the decoder: full frozen encoder provides cross-attn
+    enc_ad = _slice(frozen_adapters, 0, E)
+    xe, _, _ = _scan_layers(params["enc_layers"], enc_ad, xe, cfg, "enc", None,
+                            mode="bidir")
+    enc_out = jax.lax.stop_gradient(apply_norm(params["enc_norm"], xe, cfg.norm))
+    kd = k - E
+    pre = _slice(params["layers"], 0, kd)
+    xd, _, _ = _scan_layers(pre, _slice(frozen_adapters, E, E + kd), xd, cfg,
+                            "xdec", positions, enc_out=enc_out)
+    xd = jax.lax.stop_gradient(xd)
+    win = _slice(params["layers"], kd, kd + Q)
+    xd, (lb, rz), _ = _scan_layers(win, window_adapters, xd, cfg, "xdec",
+                                   positions, enc_out=enc_out, remat=remat)
+    local_logits = head(params, xd, cfg)
+    suf_ad = _slice(frozen_adapters, E + kd + Q, E + D)
+    xa = adapter_chain_apply(suf_ad, xd, cfg)
+    global_logits = head(params, xa, cfg)
+    return {"local_logits": local_logits, "global_logits": global_logits,
+            "aux": {"load_balance": lb, "router_z": rz}}
+
+
+# =================================================================== FOAT
+def collect_layer_outputs(params, adapters, batch, cfg: ModelConfig):
+    """(L+1, B, d): pooled embedding output followed by every layer's pooled
+    output — FOAT computes CKA(Z_i, Z_0) from these (paper §4.4, Fig. 7)."""
+    x, _ = embed_inputs(params, batch, cfg)
+    logits, aux, ys = forward_full(params, adapters, batch, cfg, remat=False,
+                                   collect=True)
+    if cfg.is_encdec:
+        xe, _ = _enc_embed(params, batch, cfg)
+        # chain order: encoder first — prepend the *encoder* embedding as Z_0
+        return jnp.concatenate([xe.mean(axis=1)[None], ys], axis=0)
+    return jnp.concatenate([x.mean(axis=1)[None], ys], axis=0)
+
+
+# =================================================================== serving
+def prefill(params, adapters, batch, cfg: ModelConfig, max_len=None):
+    """Full-sequence forward building the decode cache.
+    Returns (last_logits (B, V), cache, n_prefilled)."""
+    _require_adapters(adapters)
+    x, positions = embed_inputs(params, batch, cfg)
+    B, S = x.shape[0], x.shape[1]
+    enc_kind, dec_kind = _kinds(cfg)
+    enc_out = None
+    if cfg.is_encdec:
+        xe, _ = _enc_embed(params, batch, cfg)
+        enc_ad = _slice(adapters, 0, cfg.n_encoder_layers)
+        xe, _, _ = _scan_layers(params["enc_layers"], enc_ad, xe, cfg, enc_kind,
+                                None, mode="bidir")
+        enc_out = apply_norm(params["enc_norm"], xe, cfg.norm)
+        dec_ad = _slice(adapters, cfg.n_encoder_layers,
+                        cfg.n_encoder_layers + cfg.n_layers)
+    else:
+        dec_ad = adapters
+
+    def body(carry, xs):
+        h = carry
+        lp, ap = xs
+        h, cache = block_prefill(lp, h, cfg, dec_kind, positions=positions,
+                                 enc_out=enc_out)
+        h = adapter_apply(ap, h, cfg)
+        return h, cache
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], dec_ad),
+                            unroll=_unroll())
+    logits = head(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, cache, S
+
+
+def init_cache(cfg: ModelConfig, batch, max_len, enc_len=None):
+    """Stacked (L, ...) decode cache."""
+    _, kind = _kinds(cfg)
+    one = block_cache_init(cfg, kind, batch, max_len, enc_len=enc_len)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def decode_step(params, adapters, token, cache, idx, cfg: ModelConfig,
+                enc_len=None, embeds=None):
+    """One greedy decode step.
+
+    token: (B, 1) int32 (or ``embeds`` (B,1,d) for stub-frontend archs);
+    cache: stacked (L, ...); idx: scalar count of cached tokens.
+    Returns (logits (B, V), cache, idx+1).
+    """
+    _require_adapters(adapters)
+    if embeds is not None:
+        x = embeds.astype(cfg.cdtype())
+    else:
+        x = embed(params["embed"], token, cfg.cdtype())
+    _, kind = _kinds(cfg)
+    dec_ad = (_slice(adapters, cfg.n_encoder_layers,
+                     cfg.n_encoder_layers + cfg.n_layers)
+              if cfg.is_encdec else adapters)
+
+    def body(carry, xs):
+        h = carry
+        lp, ap, cc = xs
+        h, cc = block_decode(lp, h, cc, idx, cfg, kind, enc_len=enc_len)
+        h = adapter_apply(ap, h, cfg)
+        return h, cc
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], dec_ad, cache),
+                            unroll=_unroll())
+    logits = head(params, x, cfg)[:, 0]
+    return logits, cache, idx + 1

@@ -1,0 +1,104 @@
+"""Optimizers (no optax in env): SGD(+momentum), AdamW, schedules, clipping.
+
+API mirrors optax minimally:
+    opt = make_optimizer("adamw", lr=1e-3)
+    state = opt.init(params)
+    params, state = opt.step(params, grads, state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..utils.tree import global_norm, tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    step: Callable          # (params, grads, state) -> (params, state)
+    name: str = ""
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return tree_map(lambda g: g * scale, grads), gn
+
+
+def _resolve_lr(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr, momentum=0.0, clip=None):
+    def init(params):
+        st = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return st
+
+    def step(params, grads, state):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        lr_t = _resolve_lr(lr, state["count"])
+        if momentum:
+            mu = tree_map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+            new_p = tree_map(lambda p, m: (p - lr_t * m).astype(p.dtype), params, mu)
+            return new_p, {"count": state["count"] + 1, "mu": mu}
+        new_p = tree_map(lambda p, g: (p - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                         params, grads)
+        return new_p, {"count": state["count"] + 1}
+
+    return Optimizer(init, step, "sgd")
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01, clip=1.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": tree_map(z, params), "nu": tree_map(z, params)}
+
+    def step(params, grads, state):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        c = state["count"] + 1
+        lr_t = _resolve_lr(lr, state["count"])
+        mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["mu"], grads)
+        nu = tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return (p - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                                + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+        return tree_map(upd, params, mu, nu), {"count": c, "mu": mu, "nu": nu}
+
+    return Optimizer(init, step, "adamw")
+
+
+def make_optimizer(name, lr, **kw):
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(name)
+
+
+# ------------------------------------------------------------------ schedules
+def cosine_schedule(base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = c / jnp.maximum(1.0, warmup_steps)
+        prog = jnp.clip((c - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(c < warmup_steps, warm, cos)
+    return sched

@@ -1,0 +1,59 @@
+"""Zeroth-order / forward-gradient optimizers for the memory-aware baselines.
+
+* FwdLLM [arXiv:2308.13894]: backprop-free fine-tuning via forward-mode
+  directional derivatives (here the SPSA central-difference estimator with
+  antithetic perturbations — activation-free like the paper's forward grads).
+* FedKSeed [arXiv:2312.06353]: zeroth-order steps restricted to K shared
+  random seeds; a client round is summarised by K scalar coefficients
+  ("communication under 18 KB").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..utils.tree import tree_axpy, tree_map
+
+
+def _perturbation(key, params):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    vs = [jax.random.normal(k, l.shape, jnp.float32) for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vs)
+
+
+def spsa_grad(loss_fn, params, key, eps=1e-3, n_samples=1):
+    """SPSA gradient estimate: mean over antithetic direction pairs.
+    loss_fn: params -> scalar.  Two forward passes per sample, no backprop."""
+    def one(key):
+        v = _perturbation(key, params)
+        lp = loss_fn(tree_axpy(eps, v, params))
+        lm = loss_fn(tree_axpy(-eps, v, params))
+        coeff = (lp - lm) / (2 * eps)
+        return tree_map(lambda u: coeff * u, v), coeff
+
+    keys = jax.random.split(key, n_samples)
+    grads, coeffs = jax.vmap(one)(keys)
+    g = tree_map(lambda u: jnp.mean(u, axis=0), grads)
+    return g, coeffs
+
+
+def kseed_coeffs(loss_fn, params, seeds, eps=1e-3):
+    """FedKSeed client step: for each of K fixed seeds, estimate the
+    directional derivative.  Returns (K,) coefficients — the entire client
+    upload."""
+    def one(seed):
+        v = _perturbation(jax.random.PRNGKey(seed), params)
+        lp = loss_fn(tree_axpy(eps, v, params))
+        lm = loss_fn(tree_axpy(-eps, v, params))
+        return (lp - lm) / (2 * eps)
+
+    return jnp.stack([one(int(s)) for s in seeds])
+
+
+def kseed_apply(params, seeds, coeffs, lr):
+    """Server/client replay: θ ← θ − lr Σ_k c_k v_k (seed-reconstructed)."""
+    for s, c in zip(seeds, coeffs):
+        v = _perturbation(jax.random.PRNGKey(int(s)), params)
+        params = tree_axpy(-lr * c, v, params)
+    return params

@@ -1,0 +1,74 @@
+"""Activation-sharding hooks: a process-global policy consulted by the model
+forward loop (models stay mesh-agnostic; the launch layer installs the
+policy).  No-op by default — single-host tests and benchmarks never pay for
+it."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+_POLICY: Optional["Policy"] = None
+
+
+@dataclasses.dataclass
+class Policy:
+    mesh: object
+    residual_spec_fn: object = None   # (ndim, seq_len) -> PartitionSpec
+    logits_spec_fn: object = None     # (ndim,) -> PartitionSpec
+    decode_q_spec_fn: object = None   # ((B,1,KV,G,hd)) -> PartitionSpec
+    cache_entry_spec_fn: object = None  # ((B,S,KV,hd)) -> PartitionSpec
+
+    def _apply(self, x, spec):
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def constrain_residual(self, x):
+        if self.residual_spec_fn is None:
+            return x
+        return self._apply(x, self.residual_spec_fn(x.ndim, x.shape[-2]))
+
+    def constrain_logits(self, x):
+        if self.logits_spec_fn is None:
+            return x
+        return self._apply(x, self.logits_spec_fn(x.ndim))
+
+    def constrain_decode_q(self, x):
+        if self.decode_q_spec_fn is None:
+            return x
+        return self._apply(x, self.decode_q_spec_fn(x.shape))
+
+    def constrain_cache_entry(self, x):
+        if self.cache_entry_spec_fn is None:
+            return x
+        return self._apply(x, self.cache_entry_spec_fn(x.shape))
+
+
+def set_policy(policy: Optional[Policy]):
+    global _POLICY
+    _POLICY = policy
+
+
+def constrain_residual(x):
+    if _POLICY is None:
+        return x
+    return _POLICY.constrain_residual(x)
+
+
+def constrain_logits(x):
+    if _POLICY is None:
+        return x
+    return _POLICY.constrain_logits(x)
+
+
+def constrain_decode_q(x):
+    if _POLICY is None:
+        return x
+    return _POLICY.constrain_decode_q(x)
+
+
+def constrain_cache_entry(x):
+    if _POLICY is None:
+        return x
+    return _POLICY.constrain_cache_entry(x)

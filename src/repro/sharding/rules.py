@@ -1,0 +1,182 @@
+"""GSPMD partition rules for every pytree in the system.
+
+Scheme (DESIGN §3): batch/cohorts on (pod, data); Megatron tensor parallel on
+``model`` (attention head projections, d_ff, experts, mamba d_inner, vocab);
+decode KV caches batch- + (KV-or-head_dim)-sharded; dims that don't divide
+the axis fall back to replication (``maybe``).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .hooks import set_policy, Policy  # noqa: F401  (re-export for launch)
+
+
+def _maybe(dim: int, axis, axes_size: int):
+    """Shard only when the dim divides the axis extent."""
+    return axis if dim % axes_size == 0 and dim > 0 else None
+
+
+class Ruleset:
+    def __init__(self, mesh, cfg: ModelConfig, seq_shard: bool = False):
+        self.mesh, self.cfg = mesh, cfg
+        self.dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        self.tp = "model"
+        self.dp_size = 1
+        for a in self.dp:
+            self.dp_size *= mesh.shape[a]
+        self.tp_size = mesh.shape["model"]
+        self.seq_shard = seq_shard
+
+    # ------------------------------------------------------------ leaves
+    def param_spec(self, path: str, shape) -> P:
+        c, t = self.cfg, self.tp
+        ts = self.tp_size
+        stacked = path.startswith(("layers/", "enc_layers/"))
+        lead = (None,) if stacked else ()
+        parts = path.split("/")
+        name = "/".join(parts[1:]) if stacked else path
+
+        def spec(*dims):
+            return P(*(lead + dims))
+
+        if path == "embed/table":
+            return P(_maybe(shape[0], t, ts), None)
+        if "norm" in parts[-2] or parts[-1] in ("scale", "bias") and "norm" in path:
+            return P(*((None,) * len(shape)))
+        # attention projections
+        if name in ("attn/q/w", "attn/k/w", "attn/v/w", "cross/q/w",
+                    "cross/k/w", "cross/v/w"):
+            return spec(None, _maybe(shape[-1], t, ts))
+        if name in ("attn/q/b", "attn/k/b", "attn/v/b", "cross/q/b",
+                    "cross/k/b", "cross/v/b"):
+            return spec(_maybe(shape[-1], t, ts))
+        if name in ("attn/o/w", "cross/o/w"):
+            return spec(_maybe(shape[-2], t, ts), None)
+        # dense mlp / shared experts
+        if name.endswith(("ffn/up/w", "ffn/gate/w")) or "/shared/" in name and name.endswith(("up/w", "gate/w")):
+            return spec(None, _maybe(shape[-1], t, ts))
+        if name.endswith("ffn/down/w") or ("/shared/" in name and name.endswith("down/w")):
+            return spec(_maybe(shape[-2], t, ts), None)
+        # router / experts
+        if name.endswith("router/w"):
+            return spec(None, None)
+        if "experts/" in name:   # (L, E, d, f) or (L, E, f, d)
+            return spec(_maybe(shape[-3], t, ts), None, None)
+        # mamba mixer (also hybrid 'ssm/')
+        if name.endswith(("mixer/in_proj/w", "ssm/in_proj/w")):
+            return spec(None, _maybe(shape[-1], t, ts))
+        if name.endswith(("mixer/conv_w", "ssm/conv_w")):
+            return spec(None, _maybe(shape[-1], t, ts))
+        if name.endswith(("mixer/conv_b", "ssm/conv_b", "mixer/D", "ssm/D",
+                          "mixer/dt_proj/b", "ssm/dt_proj/b")):
+            return spec(_maybe(shape[-1], t, ts))
+        if name.endswith(("mixer/x_proj/w", "ssm/x_proj/w", "mixer/out_proj/w",
+                          "ssm/out_proj/w", "mixer/A_log", "ssm/A_log")):
+            return spec(_maybe(shape[-2], t, ts), None)
+        if name.endswith(("mixer/dt_proj/w", "ssm/dt_proj/w")):
+            return spec(None, _maybe(shape[-1], t, ts))
+        # fallback: replicate
+        return P(*((None,) * len(shape)))
+
+    def adapter_spec(self, path: str, shape) -> P:
+        ts = self.tp_size
+        if path.endswith("down"):       # (L, d, r)
+            return P(None, _maybe(shape[1], self.tp, ts), None)
+        return P(None, None, _maybe(shape[2], self.tp, ts))   # up (L, r, d)
+
+    # ------------------------------------------------------------ trees
+    def _tree_specs(self, tree, fn):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs = []
+        for path, leaf in flat:
+            p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            specs.append(fn(p, leaf.shape))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def params(self, abstract_params):
+        return self._tree_specs(abstract_params, self.param_spec)
+
+    def adapters(self, abstract_adapters):
+        return self._tree_specs(abstract_adapters, self.adapter_spec)
+
+    # ------------------------------------------------------------ batches
+    def batch_spec(self, shape, has_cohorts: bool) -> P:
+        """tokens (C, ls, b, S) / (B, S) / embeds (+d) / positions (3, B, S)."""
+        n = len(shape)
+        lead = _maybe(shape[0], self.dp, self.dp_size)
+        rest = (None,) * (n - 1)
+        return P(lead, *rest)
+
+    def train_batch(self, batch_tree):
+        # all train-batch leaves lead with the cohort axis C (M-RoPE positions
+        # use layout (C, ls, 3, b, S))
+        return self._tree_specs(batch_tree,
+                                lambda _p, shape: self.batch_spec(shape, True))
+
+    # ------------------------------------------------------------ caches
+    def cache_spec(self, path: str, shape) -> P:
+        """Stacked decode caches:
+        k/v (L, B, S, KV, hd): batch→dp, then KV→model if divisible else
+        hd→model (the hd contraction becomes the flash-decode all-reduce);
+        conv (L, B, W-1, di): di→model;  h (L, B, di, N): di→model."""
+        ts = self.tp_size
+        b_ax = _maybe(shape[1], self.dp, self.dp_size)
+        leaf = path.split("/")[-1]
+        if leaf in ("k", "v", "ck", "cv"):
+            kv_ax = _maybe(shape[3], self.tp, ts)
+            hd_ax = _maybe(shape[4], self.tp, ts) if kv_ax is None else None
+            return P(None, b_ax, None, kv_ax, hd_ax)
+        if leaf == "conv":
+            return P(None, b_ax, None, _maybe(shape[3], self.tp, ts))
+        if leaf == "h":
+            return P(None, b_ax, _maybe(shape[2], self.tp, ts), None)
+        return P(*((None,) * len(shape)))
+
+    def cache(self, abstract_cache):
+        return self._tree_specs(abstract_cache, self.cache_spec)
+
+    # ------------------------------------------------------------ activations
+    def residual_spec(self, ndim: int, seq_len: int = 0) -> P:
+        """(B, S, d) or (C, b, S, d) residual-stream constraint between
+        blocks.  seq_shard=True adds Megatron-style sequence parallelism."""
+        seq_ax = (self.tp if (self.seq_shard and seq_len % self.tp_size == 0
+                              and seq_len > 1) else None)
+        if ndim == 3:
+            return P(self.dp or None, seq_ax, None)
+        return P(self.dp or None, None, seq_ax, None)
+
+    def cache_entry_spec(self, shape) -> P:
+        """Per-layer cache entry inside the decode layer-scan: (B, S, KV, hd)
+        — same policy as cache_spec minus the stacked L dim."""
+        ts = self.tp_size
+        b_ax = _maybe(shape[0], self.dp, self.dp_size)
+        if len(shape) == 4:
+            kv_ax = _maybe(shape[2], self.tp, ts)
+            hd_ax = _maybe(shape[3], self.tp, ts) if kv_ax is None else None
+            return P(b_ax, None, kv_ax, hd_ax)
+        return P(*((b_ax,) + (None,) * (len(shape) - 1)))
+
+    def decode_q_spec(self, shape) -> P:
+        """Decode query (B, 1, KV, G, hd): mirror the cache contraction layout
+        so the scores dot is a partial-sum + all-reduce instead of a GSPMD
+        'involuntary full rematerialization' of the cache (§Perf iteration)."""
+        ts = self.tp_size
+        b_ax = _maybe(shape[0], self.dp, self.dp_size)
+        kv_ax = _maybe(shape[2], self.tp, ts)
+        hd_ax = _maybe(shape[4], self.tp, ts) if kv_ax is None else None
+        return P(b_ax, None, kv_ax, None, hd_ax)
+
+    def logits_spec(self, ndim: int) -> P:
+        """Vocab-sharded logits: only the trailing V dim is pinned to model —
+        batch/seq dims inherit upstream sharding (the constraint is applied
+        inside vmap'd cohort traces, where pinning batch dims would fight the
+        cohort sharding).  GSPMD inserts the distributed-softmax reductions."""
+        return P(*((None,) * (ndim - 1) + (self.tp,)))
+
+    def named(self, spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))

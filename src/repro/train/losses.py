@@ -1,0 +1,48 @@
+"""Losses: masked LM cross-entropy and the GPO dual objective (paper Eq. 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def cross_entropy(logits, labels):
+    """logits: (..., V); labels int32 with IGNORE masking.  Mean over valid."""
+    V = logits.shape[-1]
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe = jnp.where(labels == IGNORE, 0, labels)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(1.0, jnp.sum(mask))
+
+
+def accuracy(logits, labels, class_tokens=None):
+    """Token accuracy at supervised positions.  ``class_tokens`` restricts
+    the argmax to the label-token set (classification over classes, as the
+    paper's classifier heads do — untrained models then score chance level,
+    matching the paper's No-FT rows, instead of 0 over the full vocab)."""
+    mask = labels != IGNORE
+    if class_tokens is not None:
+        sel = logits[..., class_tokens]                  # (..., n_classes)
+        pred = class_tokens[jnp.argmax(sel, axis=-1)]
+    else:
+        pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred == labels) & mask) / jnp.maximum(1, jnp.sum(mask))
+
+
+def moe_penalty(aux, cfg):
+    return (cfg.router_aux_weight * aux.get("load_balance", 0.0)
+            + cfg.router_z_weight * aux.get("router_z", 0.0))
+
+
+def gpo_loss(chain_out, labels, cfg, lam: float, final_stage: bool):
+    """Loss_m = LocalLoss + λ·GlobalLoss  (Eq. 2); the final stage uses only
+    the end-to-end loss (paper §4.3)."""
+    local = cross_entropy(chain_out["local_logits"], labels)
+    penalty = moe_penalty(chain_out["aux"], cfg)
+    if final_stage:
+        # window reaches the last layer: local head IS the end-to-end output
+        return local + penalty, {"local": local, "global": local}
+    glob = cross_entropy(chain_out["global_logits"], labels)
+    return local + lam * glob + penalty, {"local": local, "global": glob}

@@ -1,0 +1,76 @@
+"""Centralized base-model pretraining — the stand-in for "download a
+pretrained checkpoint" in this offline environment.
+
+The paper fine-tunes pretrained backbones (BERT/LLaMA); CHAINFED's premises
+(general-purpose lower layers, adapters as low-rank layer approximations)
+assume feature structure already exists.  We create it by next-token LM
+pretraining on the synthetic corpus *bodies* (no label supervision — the
+classification task itself stays unseen, so No-FT stays at chance while
+features become linearly separable).
+
+Results are cached to .ckpt files keyed by (arch, corpus, steps).
+"""
+from __future__ import annotations
+
+import hashlib
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt.io import load_pytree, save_pytree
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim.base import adamw, cosine_schedule
+from ..train.losses import cross_entropy
+
+CACHE = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "pretrained"
+
+
+def lm_pretrain(params, cfg: ModelConfig, tokens: np.ndarray, steps: int = 300,
+                batch: int = 32, lr: float = 3e-3, seed: int = 0,
+                verbose: bool = False):
+    """Next-token LM training of the full base model (adapters untouched)."""
+    opt = adamw(cosine_schedule(lr, steps // 10, steps), clip=1.0)
+    state = opt.init(params)
+    rng = np.random.default_rng(seed)
+    # identity adapters as constants: pretraining is adapter-free
+    adapters = T.init_adapters(jax.random.PRNGKey(0), cfg)
+
+    @jax.jit
+    def step(params, state, toks):
+        def loss_fn(p):
+            batch_ = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+            logits, aux = T.forward_full(p, adapters, batch_, cfg, remat=False)
+            from ..train.losses import moe_penalty
+            return cross_entropy(logits, batch_["labels"]) + moe_penalty(aux, cfg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.step(params, grads, state)
+        return params, state, loss
+
+    loss = None
+    for i in range(steps):
+        idx = rng.integers(0, len(tokens), batch)
+        params, state, loss = step(params, state, jnp.asarray(tokens[idx]))
+        if verbose and (i + 1) % max(1, steps // 10) == 0:
+            print(f"  pretrain step {i+1}/{steps} loss={float(loss):.4f}")
+    return params, float(loss)
+
+
+def pretrained_base(cfg: ModelConfig, tokens: np.ndarray, steps: int = 300,
+                    seed: int = 0, verbose: bool = False):
+    """Cached pretrained params for (cfg, corpus, steps)."""
+    key = hashlib.md5(
+        f"{cfg.arch_id}-{cfg.n_layers}-{cfg.d_model}-{cfg.vocab_size}-"
+        f"{len(tokens)}-{tokens[:4].sum()}-{steps}-{seed}".encode()).hexdigest()[:12]
+    path = CACHE / f"{cfg.arch_id}_{key}.msgpack"
+    params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    if path.exists():
+        params, _ = load_pytree(path, params)
+        return params
+    params, loss = lm_pretrain(params, cfg, tokens, steps=steps, seed=seed,
+                               verbose=verbose)
+    save_pytree(path, params, meta={"loss": loss, "steps": steps})
+    return params

@@ -1,0 +1,123 @@
+"""Pod-scale step builders (pure functions for pjit):
+
+* ``make_fed_train_step``  — one CHAINFED federated round: client cohorts are
+  a leading axis sharded on (pod, data); each cohort runs ``local_steps`` GPO
+  steps on its DLCT window; FedAvg is the mean over the cohort axis (lowers
+  to the all-reduce that *is* the paper's round communication).
+* ``make_e2e_train_step``  — Full Adapters† upper bound (end-to-end), for the
+  memory comparison in §Dry-run.
+* ``make_prefill_step`` / ``make_decode_step`` — serving entry points.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dlct import window_scatter, window_slice
+from ..models.config import ChainConfig, ModelConfig
+from ..models.transformer import (ChainSegments, decode_step, forward_chain,
+                                  forward_full, prefill)
+from ..optim.base import make_optimizer
+from ..train.losses import cross_entropy, gpo_loss, moe_penalty
+from ..utils.tree import tree_map
+
+
+def make_fed_train_step(cfg: ModelConfig, chain: ChainConfig,
+                        seg: ChainSegments, gpo_sequential: bool = False):
+    """Returns step(params, adapters, batch) -> (adapters', metrics).
+
+    batch leaves: (C, local_steps, b, ...) — client cohorts × local steps ×
+    per-step microbatch.  ``positions`` (M-RoPE) carries its 3-axis first:
+    (3, C, ls, b, S).
+    """
+    opt = make_optimizer(chain.optimizer, chain.lr)
+    final = seg.prefix + seg.window >= cfg.total_chain_layers
+
+    def cohort_update(params, adapters, cohort_batch):
+        """One client cohort's local training on the window (GPO loss)."""
+        window0 = window_slice(adapters, seg)
+
+        def loss_fn(window, mb):
+            if gpo_sequential and not cfg.is_encdec:
+                out = forward_chain(params, window, adapters, mb, cfg, seg,
+                                    loss_ctx=(mb["labels"], chain.lam, final))
+                from ..train.losses import moe_penalty
+                loss = out["loss"] + moe_penalty(out["aux"], cfg)
+                return loss, {"local": out["local"], "global": out["global"]}
+            out = forward_chain(params, window, adapters, mb, cfg, seg)
+            loss, parts = gpo_loss(out, mb["labels"], cfg, chain.lam, final)
+            return loss, parts
+
+        def one_step(carry, mb):
+            window, opt_state = carry
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                window, mb)
+            window, opt_state = opt.step(window, grads, opt_state)
+            return (window, opt_state), loss
+
+        (window, _), losses = jax.lax.scan(
+            one_step, (window0, opt.init(window0)), cohort_batch)
+        delta = tree_map(lambda a, b: a - b, window, window0)
+        return delta, jnp.mean(losses)
+
+    def step(params, adapters, batch):
+        # batch leaves (C, ls, ...): vmap strips C, scan strips ls.  M-RoPE
+        # positions use layout (C, ls, 3, b, S) so each microbatch sees (3,b,S).
+        deltas, losses = jax.vmap(
+            lambda cb: cohort_update(params, adapters, cb))(batch)
+        # FedAvg: uniform-weighted mean over cohorts  ≡ cross-replica all-reduce
+        delta = tree_map(lambda d: jnp.mean(d, axis=0), deltas)
+        window = tree_map(lambda w, d: (w + d).astype(w.dtype),
+                          window_slice(adapters, seg), delta)
+        adapters = window_scatter(adapters, window, seg)
+        return adapters, {"loss": jnp.mean(losses)}
+
+    return step
+
+
+def make_e2e_train_step(cfg: ModelConfig, chain: ChainConfig):
+    """Full Adapters† — end-to-end update of every adapter (the paper's
+    memory-unconstrained upper bound).  Same batch layout as the fed step."""
+    opt = make_optimizer(chain.optimizer, chain.lr)
+
+    def cohort_update(params, adapters, cohort_batch):
+        def loss_fn(ad, mb):
+            logits, aux = forward_full(params, ad, mb, cfg, remat=True)
+            return cross_entropy(logits, mb["labels"]) + moe_penalty(aux, cfg)
+
+        def one_step(carry, mb):
+            ad, opt_state = carry
+            loss, grads = jax.value_and_grad(loss_fn)(ad, mb)
+            ad, opt_state = opt.step(ad, grads, opt_state)
+            return (ad, opt_state), loss
+
+        (ad, _), losses = jax.lax.scan(one_step, (adapters, opt.init(adapters)),
+                                       cohort_batch)
+        return tree_map(lambda a, b: a - b, ad, adapters), jnp.mean(losses)
+
+    def step(params, adapters, batch):
+        deltas, losses = jax.vmap(
+            lambda cb: cohort_update(params, adapters, cb))(batch)
+        delta = tree_map(lambda d: jnp.mean(d, axis=0), deltas)
+        adapters = tree_map(lambda a, d: (a + d).astype(a.dtype), adapters, delta)
+        return adapters, {"loss": jnp.mean(losses)}
+
+    return step
+
+
+# ------------------------------------------------------------------ serving
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, adapters, batch):
+        logits, cache, n = prefill(params, adapters, batch, cfg)
+        return logits, cache
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, enc_len=None):
+    def step(params, adapters, token, cache, idx, embeds=None):
+        logits, cache, idx = decode_step(params, adapters, token, cache, idx,
+                                         cfg, enc_len=enc_len, embeds=embeds)
+        return jnp.argmax(logits, axis=-1), logits, cache, idx
+
+    return step

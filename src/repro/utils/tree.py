@@ -1,0 +1,82 @@
+"""Pytree utilities used across the framework (no flax/optax in env)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_map(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_zeros_like(tree):
+    return tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a, b):
+    return tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(tree, s):
+    return tree_map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over pytrees."""
+    return tree_map(lambda u, v: a * u + v, x, y)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across two pytrees (global inner product)."""
+    leaves = tree_map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree_util.tree_reduce(lambda acc, x: acc + x, leaves, jnp.float32(0.0))
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.float32(0.0)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return tree_map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_paths(tree):
+    """List of (path_string, leaf) pairs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(("/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path), leaf))
+    return out
+
+
+def has_nan(tree) -> jax.Array:
+    leaves = [jnp.any(jnp.isnan(x)) for x in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.array(False)
+    return jnp.any(jnp.stack(leaves))
+
+
+def slice_stacked(tree, start: int, stop: int):
+    """Slice a stack of per-layer params [L, ...] along axis 0 with static bounds."""
+    return tree_map(lambda x: x[start:stop], tree)
+
+
+def concat_stacked(trees):
+    return tree_map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)

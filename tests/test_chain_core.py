@@ -1,0 +1,176 @@
+"""Chain-core invariants: adapters, DLCT scheduling, GPO dual loss, FOAT
+boundary selection, and the chain↔end-to-end equivalence property."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import foat
+from repro.core.adapters import adapter_apply, adapter_chain_apply, adapter_stack_init
+from repro.core.dlct import make_schedule, window_scatter, window_slice
+from repro.models import transformer as T
+from repro.models.config import ChainConfig
+from repro.train.losses import IGNORE, cross_entropy, gpo_loss
+
+CFG = get_config("bert_tiny")
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------ adapters
+def test_adapter_identity_at_init():
+    ad = adapter_stack_init(KEY, CFG)
+    h = jax.random.normal(KEY, (3, 5, CFG.d_model))
+    one = jax.tree_util.tree_map(lambda x: x[0], ad)
+    np.testing.assert_allclose(np.asarray(adapter_apply(one, h, CFG)),
+                               np.asarray(h), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(adapter_chain_apply(ad, h, CFG)),
+                               np.asarray(h), atol=1e-6)
+
+
+def test_window_slice_scatter_roundtrip():
+    ad = adapter_stack_init(KEY, CFG)
+    from repro.models.transformer import ChainSegments
+    seg = ChainSegments(2, 3)
+    win = window_slice(ad, seg)
+    win2 = jax.tree_util.tree_map(lambda x: x + 1.0, win)
+    full = window_scatter(ad, win2, seg)
+    got = window_slice(full, seg)
+    np.testing.assert_allclose(np.asarray(got["down"]),
+                               np.asarray(win["down"]) + 1.0)
+    # outside the window untouched
+    np.testing.assert_allclose(np.asarray(full["down"][:2]),
+                               np.asarray(ad["down"][:2]))
+
+
+# ------------------------------------------------------------------ DLCT
+@hypothesis.given(L=st.integers(2, 24), Q=st.integers(1, 8),
+                  l_start=st.integers(0, 20))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_schedule_windows_valid(L, Q, l_start):
+    cfg = CFG.replace(n_layers=L)
+    sched = make_schedule(cfg, min(l_start, L - 1), Q)
+    assert sched.n_stages >= 1
+    for k in sched.offsets:
+        assert 0 <= k <= L - sched.window
+    # consecutive offsets overlap by Q-1 (the DLCT conduit property)
+    offs = sched.offsets
+    for a, b in zip(offs, offs[1:]):
+        assert b - a == 1
+
+
+def test_schedule_cycles():
+    sched = make_schedule(CFG, 0, 2)       # L=6 → offsets 0..4
+    assert sched.offsets == (0, 1, 2, 3, 4)
+    segs = [sched.segments(r).prefix for r in range(7)]
+    assert segs == [0, 1, 2, 3, 4, 0, 1]   # cyclic holistic passes
+
+
+def test_schedule_encdec_never_straddles():
+    cfg = get_smoke_config("seamless_m4t_large_v2")   # E=2, D=2
+    sched = make_schedule(cfg, 0, 2)
+    E = cfg.n_encoder_layers
+    for k in sched.offsets:
+        assert not (k < E < k + sched.window), sched.offsets
+
+
+# ------------------------------------------------------------------ GPO
+def test_gpo_loss_combination():
+    B, S, V = 2, 4, 16
+    key = jax.random.PRNGKey(1)
+    out = {"local_logits": jax.random.normal(key, (B, S, V)),
+           "global_logits": jax.random.normal(jax.random.fold_in(key, 1), (B, S, V)),
+           "aux": {"load_balance": jnp.float32(0), "router_z": jnp.float32(0)}}
+    labels = jnp.zeros((B, S), jnp.int32)
+    for lam in (0.0, 0.2, 1.0):
+        loss, parts = gpo_loss(out, labels, CFG, lam, final_stage=False)
+        expect = parts["local"] + lam * parts["global"]
+        assert abs(float(loss) - float(expect)) < 1e-6
+    loss_f, parts_f = gpo_loss(out, labels, CFG, 0.5, final_stage=True)
+    assert abs(float(loss_f) - float(parts_f["local"])) < 1e-6
+
+
+def test_gradients_confined_to_window():
+    """Backward never reaches prefix/suffix adapters or base params."""
+    cfg = CFG
+    params = T.init_lm(KEY, cfg)
+    adapters = T.init_adapters(KEY, cfg)
+    seg = T.ChainSegments(2, 2)
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32),
+             "labels": jnp.ones((2, 8), jnp.int32)}
+
+    def loss(window, frozen, params):
+        out = T.forward_chain(params, window, frozen, batch, cfg, seg)
+        l, _ = gpo_loss(out, batch["labels"], cfg, 0.2, False)
+        return l
+
+    win = window_slice(adapters, seg)
+    gw, gf, gp = jax.grad(loss, argnums=(0, 1, 2))(win, adapters, params)
+    assert float(jax.tree_util.tree_reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x))), gw, 0.0)) > 0
+    # frozen stack receives gradient ONLY through suffix adapters (GPO aux
+    # branch) — prefix adapters must stay at exactly zero
+    assert float(jnp.sum(jnp.abs(gf["down"][:seg.prefix]))) == 0.0
+    assert float(jnp.sum(jnp.abs(gp["layers"]["norm1"]["scale"][:seg.prefix]))) == 0.0
+
+
+# ------------------------------------------------------------------ FOAT
+def test_foat_boundary_selection():
+    scores = jnp.array([0.99, 0.95, 0.85, 0.70, 0.55])
+    assert foat.select_start_layer(scores, 0.9) == 2
+    assert foat.select_start_layer(scores, 0.5) == 4   # never below -> last
+    assert foat.select_start_layer(scores, 1.0) == 0
+
+
+def test_foat_cka_range_and_invariance():
+    X = jax.random.normal(KEY, (32, 16))
+    Y = X @ jax.random.normal(jax.random.fold_in(KEY, 2), (16, 16))
+    c = float(foat.linear_cka(X, Y))
+    assert 0.0 <= c <= 1.0 + 1e-6
+    # CKA is invariant to isotropic scaling and orthogonal transforms
+    c2 = float(foat.linear_cka(X * 3.0, Y))
+    assert abs(c - c2) < 1e-5
+
+
+def test_foat_run_on_model():
+    cfg = CFG
+    params = T.init_lm(KEY, cfg)
+    adapters = T.init_adapters(KEY, cfg)
+    batches = [{"tokens": jax.random.randint(jax.random.fold_in(KEY, i),
+                                             (8, 12), 0, cfg.vocab_size)}
+               for i in range(3)]
+    l_start, scores = foat.run_foat(params, adapters, batches, cfg, 0.8)
+    assert 0 <= l_start < cfg.n_layers
+    assert scores.shape == (cfg.n_layers,)
+    assert bool(jnp.all(jnp.isfinite(scores)))
+
+
+# ------------------------------------------------------------------ equivalence
+def test_final_stage_local_equals_end_to_end():
+    """With the window covering the whole tail, the stage's local logits must
+    equal the end-to-end forward (paper: final stage trains on the e2e loss)."""
+    cfg = CFG
+    params = T.init_lm(KEY, cfg)
+    adapters = T.init_adapters(KEY, cfg)
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    seg = T.ChainSegments(0, cfg.n_layers)
+    out = T.forward_chain(params, adapters, adapters, batch, cfg, seg)
+    full, _ = T.forward_full(params, adapters, batch, cfg, remat=False)
+    np.testing.assert_allclose(np.asarray(out["local_logits"]),
+                               np.asarray(full), atol=1e-4, rtol=1e-4)
+
+
+def test_chain_prefix_plus_window_matches_full_when_adapters_identity():
+    """At init (identity adapters) the GPO aux branch is the identity, so
+    global logits == local logits."""
+    cfg = CFG
+    params = T.init_lm(KEY, cfg)
+    adapters = T.init_adapters(KEY, cfg)
+    batch = {"tokens": jnp.arange(16, dtype=jnp.int32).reshape(2, 8)}
+    seg = T.ChainSegments(1, 2)
+    win = window_slice(adapters, seg)
+    out = T.forward_chain(params, win, adapters, batch, cfg, seg)
+    np.testing.assert_allclose(np.asarray(out["local_logits"]),
+                               np.asarray(out["global_logits"]), atol=1e-5)

@@ -1,0 +1,115 @@
+"""Serving correctness: prefill+decode must reproduce the full forward —
+the strongest invariant for the KV cache / SSM-state plumbing, checked per
+architecture family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+
+FAMS = ["gemma_2b",          # dense (MQA + SWA config, but S < window here)
+        "qwen2_0_5b",        # dense GQA + qkv bias
+        "olmoe_1b_7b",       # moe
+        "falcon_mamba_7b",   # ssm
+        "hymba_1_5b",        # hybrid
+        "qwen2_vl_72b"]      # vlm / mrope
+
+
+def _setup(arch, B=2, S=12):
+    cfg = get_smoke_config(arch)
+    if cfg.sliding_window is not None:
+        cfg = cfg.replace(sliding_window=None)   # exact-match test: full attn
+    if cfg.family == "moe":
+        # dropless capacity: capacity-based routing otherwise truncates
+        # *differently* for batched vs incremental execution (expected),
+        # which would mask true cache bugs in this exact-match test
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts))
+    key = jax.random.PRNGKey(7)
+    params = T.init_lm(key, cfg)
+    adapters = T.init_adapters(key, cfg)
+    # make adapters non-trivial so the test also covers adapter plumbing
+    adapters = jax.tree_util.tree_map(
+        lambda x: x + 0.01 * jax.random.normal(key, x.shape, x.dtype), adapters)
+    toks = jax.random.randint(key, (B, S), 4, cfg.vocab_size)
+    return cfg, params, adapters, toks
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_decode_matches_full_forward(arch):
+    cfg, params, adapters, toks = _setup(arch)
+    B, S = toks.shape
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch = {"embeds": jax.random.normal(jax.random.PRNGKey(1),
+                                             (B, S, cfg.d_model)) * 0.1}
+    full, _ = T.forward_full(params, adapters, batch, cfg, remat=False)
+
+    # token-by-token decode from an empty cache
+    cache = T.init_cache(cfg, B, S + 2)
+    idx = 0
+    logits_steps = []
+    for t in range(S):
+        if cfg.family == "vlm":
+            emb = batch["embeds"][:, t:t + 1]
+            lg, cache, idx = T.decode_step(params, adapters, None, cache, idx,
+                                           cfg, embeds=emb)
+        else:
+            lg, cache, idx = T.decode_step(params, adapters, toks[:, t:t + 1],
+                                           cache, idx, cfg)
+        logits_steps.append(lg)
+    dec = jnp.stack(logits_steps, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "falcon_mamba_7b", "hymba_1_5b"])
+def test_prefill_then_decode_consistent(arch):
+    """prefill(tokens[:k]) + decode(tokens[k:]) == full forward logits at the
+    decoded positions."""
+    cfg, params, adapters, toks = _setup(arch)
+    B, S = toks.shape
+    k = S // 2
+    full, _ = T.forward_full(params, adapters, {"tokens": toks}, cfg, remat=False)
+
+    lg, pcache, n = T.prefill(params, adapters, {"tokens": toks[:, :k]}, cfg)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(full[:, k - 1], np.float32),
+                               atol=2e-3, rtol=2e-3)
+    # pad kv entries to S+2 and continue decoding
+    def pad(x):
+        if x.ndim >= 3 and x.shape[2] == k:      # (L, B, S, KV, hd) kv caches
+            padw = [(0, 0)] * x.ndim
+            padw[2] = (0, S + 2 - k)
+            return jnp.pad(x, padw)
+        return x
+    cache = jax.tree_util.tree_map(pad, pcache)
+    idx = k
+    for t in range(k, S):
+        lg, cache, idx = T.decode_step(params, adapters, toks[:, t:t + 1],
+                                       cache, idx, cfg)
+        if t + 1 < S:
+            np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                       np.asarray(full[:, t], np.float32),
+                                       atol=2e-3, rtol=2e-3)
+
+
+def test_sliding_window_decode_ring_buffer():
+    """SWA ring buffer: decode with window W only attends to the last W
+    tokens — must match a full-attention decode over those tokens."""
+    arch = "qwen2_0_5b"
+    cfg = get_smoke_config(arch).replace(sliding_window=4)
+    key = jax.random.PRNGKey(3)
+    params = T.init_lm(key, cfg)
+    adapters = T.init_adapters(key, cfg)
+    B, S = 1, 10
+    toks = jax.random.randint(key, (B, S), 4, cfg.vocab_size)
+    cache = T.init_cache(cfg, B, S)            # capped to window internally
+    assert cache["k"].shape[2] == 4
+    idx = 0
+    for t in range(S):
+        lg, cache, idx = T.decode_step(params, adapters, toks[:, t:t + 1],
+                                       cache, idx, cfg)
+    assert not bool(jnp.any(jnp.isnan(lg)))

@@ -1,0 +1,153 @@
+"""Per-kernel correctness: shape/dtype sweeps + hypothesis property tests,
+all against the pure-jnp oracles in repro.kernels.ref (interpret mode)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=12, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rnd(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)).astype(dtype)
+
+
+# ------------------------------------------------------------- fused adapter
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,d,r", [(8, 64, 8), (130, 256, 16), (33, 128, 64)])
+def test_fused_adapter_shapes(T, d, r, dtype):
+    h = rnd(0, (T, d), dtype)
+    wd = rnd(1, (d, r), dtype, 0.05)
+    wu = rnd(2, (r, d), dtype, 0.05)
+    out = ops.fused_adapter(h, wd, wu)
+    exp = ref.fused_adapter_ref(h, wd, wu)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+@hypothesis.given(T=st.integers(1, 80), d=st.sampled_from([32, 64, 128]),
+                  r=st.sampled_from([4, 8, 16]),
+                  act=st.sampled_from(["gelu", "relu", "silu"]))
+@hypothesis.settings(**SETTINGS)
+def test_fused_adapter_property(T, d, r, act):
+    h = rnd(T, (T, d))
+    wd = rnd(T + 1, (d, r), scale=0.05)
+    wu = rnd(T + 2, (r, d), scale=0.05)
+    out = ops.fused_adapter(h, wd, wu, activation=act)
+    exp = ref.fused_adapter_ref(h, wd, wu, activation=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_fused_adapter_identity_at_zero_up():
+    """W_up = 0 ⇒ adapter is the identity (the chain's safe insertion)."""
+    h = rnd(3, (17, 64))
+    wd = rnd(4, (64, 8), scale=0.1)
+    out = ops.fused_adapter(h, wd, jnp.zeros((8, 64)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h), atol=1e-6)
+
+
+def test_fused_adapter_leading_dims():
+    h = rnd(5, (2, 7, 64))
+    wd, wu = rnd(6, (64, 8), scale=0.1), rnd(7, (8, 64), scale=0.1)
+    out = ops.fused_adapter(h, wd, wu)
+    exp = ref.fused_adapter_ref(h.reshape(-1, 64), wd, wu).reshape(2, 7, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+# ------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,hd", [(1, 1, 128, 32), (2, 3, 256, 64)])
+def test_flash_attention_causal(B, H, S, hd, dtype):
+    q, k, v = (rnd(i, (B, H, S, hd), dtype) for i in range(3))
+    out = ops.flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+@hypothesis.given(S=st.sampled_from([64, 128, 192]),
+                  hd=st.sampled_from([16, 32]),
+                  window=st.sampled_from([None, 16, 50]),
+                  causal=st.booleans())
+@hypothesis.settings(**SETTINGS)
+def test_flash_attention_property(S, hd, window, causal):
+    if window is not None and not causal:
+        window = None
+    q, k, v = (rnd(i + 10, (1, 2, S, hd)) for i in range(3))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, bq=32, bk=32)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=3e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------------- ssm scan
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (64, 64)])
+@pytest.mark.parametrize("d,N", [(8, 4), (16, 8)])
+def test_ssm_scan_shapes(S, chunk, d, N):
+    B = 2
+    u = rnd(0, (B, S, d))
+    dt = jax.nn.softplus(rnd(1, (B, S, d)))
+    Bm, Cm = rnd(2, (B, S, N)), rnd(3, (B, S, N))
+    A = -jnp.exp(rnd(4, (d, N)))
+    D = jnp.ones((d,))
+    y, h = ops.ssm_scan(u, dt, Bm, Cm, A, D, chunk=chunk)
+    ye, he = ref.ssm_scan_ref(u, dt, Bm, Cm, A, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he), atol=1e-4, rtol=1e-4)
+
+
+@hypothesis.given(S=st.sampled_from([16, 32]), d=st.sampled_from([4, 8]),
+                  N=st.sampled_from([2, 4]), with_h0=st.booleans())
+@hypothesis.settings(**SETTINGS)
+def test_ssm_scan_property(S, d, N, with_h0):
+    B = 1
+    u = rnd(20, (B, S, d))
+    dt = jax.nn.softplus(rnd(21, (B, S, d)))
+    Bm, Cm = rnd(22, (B, S, N)), rnd(23, (B, S, N))
+    A = -jnp.exp(rnd(24, (d, N)))
+    D = rnd(25, (d,))
+    h0 = rnd(26, (B, d, N)) if with_h0 else None
+    y, h = ops.ssm_scan(u, dt, Bm, Cm, A, D, h0=h0, chunk=8)
+    ye, he = ref.ssm_scan_ref(u, dt, Bm, Cm, A, D, h0=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he), atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_scan_chunk_invariance():
+    """Chunk size must not change the result (state carry correctness)."""
+    B, S, d, N = 1, 64, 4, 4
+    u = rnd(30, (B, S, d))
+    dt = jax.nn.softplus(rnd(31, (B, S, d)))
+    Bm, Cm = rnd(32, (B, S, N)), rnd(33, (B, S, N))
+    A = -jnp.exp(rnd(34, (d, N)))
+    D = jnp.zeros((d,))
+    y8, _ = ops.ssm_scan(u, dt, Bm, Cm, A, D, chunk=8)
+    y64, _ = ops.ssm_scan(u, dt, Bm, Cm, A, D, chunk=64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y64), atol=1e-5)
+
+
+# ------------------------------------------------------------- cka gram
+@pytest.mark.parametrize("n,d1,d2", [(16, 32, 32), (64, 100, 130), (8, 512, 64)])
+def test_cka_gram(n, d1, d2):
+    X = rnd(40, (n, d1))
+    Y = rnd(41, (n, d2))
+    X, Y = X - X.mean(0), Y - Y.mean(0)
+    got = ops.cka_gram(X, Y, bd=32)
+    exp = ref.cka_gram_ref(X, Y)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(float(g), float(e), rtol=1e-4)
+
+
+def test_cka_gram_self_similarity():
+    """CKA(X, X) must be exactly 1 through the kernel path."""
+    from repro.core.foat import linear_cka
+    X = rnd(42, (32, 64))
+    assert abs(float(linear_cka(X, X, use_kernel=True)) - 1.0) < 1e-5
+    assert abs(float(linear_cka(X, X, use_kernel=False)) - 1.0) < 1e-5

@@ -1,0 +1,91 @@
+"""Sharding rules + dry-run plumbing (small fake-device mesh in a subprocess
+so the main test process keeps its single real device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch import input_specs as ispec
+from repro.sharding.rules import _maybe
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_maybe_divisibility():
+    assert _maybe(64, "model", 16) == "model"
+    assert _maybe(14, "model", 16) is None
+    assert _maybe(0, "model", 16) is None
+
+
+def test_shapes_registry():
+    assert set(ispec.SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert ispec.SHAPES["train_4k"].global_batch == 256
+    assert ispec.SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long500k_support_matrix():
+    assert ispec.supported(get_config("falcon_mamba_7b"), "long_500k")
+    assert ispec.supported(get_config("hymba_1_5b"), "long_500k")
+    assert ispec.supported(get_config("gemma_2b"), "long_500k")  # SWA variant
+    assert not ispec.supported(get_config("seamless_m4t_large_v2"), "long_500k")
+
+
+def test_train_specs_shapes():
+    cfg = get_config("qwen2_0_5b")
+    cfg2, case, specs = ispec.input_specs(cfg, "train_4k")
+    assert specs["tokens"].shape == (32, 1, 8, 4096)   # C × ls × b × S
+    assert cfg2.sliding_window is None                 # full attn off-500k
+    cfgm, _, dspecs = ispec.input_specs(get_config("deepseek_67b"), "decode_32k")
+    token, cache, idx, embeds, enc_len = dspecs
+    assert cache["k"].shape == (95, 128, 32768, 8, 128)
+
+
+def test_param_specs_cover_all_leaves():
+    """Every param/adapters leaf gets a spec of matching rank."""
+    from repro.sharding.rules import Ruleset
+    from repro.models import transformer as T
+    for arch in ("qwen2_0_5b", "olmoe_1b_7b", "falcon_mamba_7b", "hymba_1_5b",
+                 "seamless_m4t_large_v2"):
+        cfg = get_config(arch)
+        a_params = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        rules = Ruleset(FakeMesh(), cfg)
+        specs = rules.params(a_params)
+        flat_p = jax.tree_util.tree_leaves(a_params)
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            assert len(spec) <= len(leaf.shape), (arch, leaf.shape, spec)
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if ax == "model":
+                    assert dim % 16 == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_small():
+    """Full dry-run path for one (arch, shape) — isolated process because it
+    forces 512 fake devices before jax init."""
+    code = textwrap.dedent("""
+        from repro.launch.dryrun import run_case
+        rec = run_case("qwen2_1_5b", "decode_32k", verbose=False)
+        import json; print("JSON" + json.dumps({k: rec[k] for k in
+            ("arch", "shape", "chips")}))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("JSON")][0]
+    rec = json.loads(line[4:])
+    assert rec == {"arch": "qwen2_1_5b", "shape": "decode_32k", "chips": 256}
