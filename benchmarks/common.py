@@ -18,9 +18,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import (DATASETS, classification_batch,
                                   make_classification)
-from repro.fed.baselines import BASELINES
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import FedSim, run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 from repro.train.pretrain import pretrained_base
 
@@ -57,19 +56,15 @@ def base_params(cfg, tokens, steps=PRETRAIN_STEPS):
 
 
 def run_method(method: str, cfg, chain: ChainConfig, sim, params,
-               rounds=DEFAULT_ROUNDS, seed=0, chainfed_kw=None) -> Result:
+               rounds=DEFAULT_ROUNDS, seed=0, strategy_opts=None) -> Result:
     key = jax.random.PRNGKey(seed)
-    if method == "chainfed":
-        strat = ChainFed(cfg, chain, key, **(chainfed_kw or {}))
-        strat.trainer.set_params(params)
-    elif method == "no_ft":
-        strat = BASELINES["full_adapters"](cfg, chain, key)
+    if method == "no_ft":
+        strat = make_strategy("full_adapters", cfg, chain, key)
         strat.params = params
         loss, acc = strat.evaluate(sim.eval_batch())
         return Result("no_ft", acc, 0, 0.0, 0, {})
-    else:
-        strat = BASELINES[method](cfg, chain, key)
-        strat.params = params
+    strat = make_strategy(method, cfg, chain, key, **(strategy_opts or {}))
+    strat.params = params
     t0 = time.time()
     hist = run_rounds(sim, strat, rounds, eval_every=max(1, rounds // 3))
     wall = time.time() - t0

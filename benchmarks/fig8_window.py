@@ -9,8 +9,8 @@ import jax
 from .common import base_params, make_sim
 from repro.configs import get_config
 from repro.core.memory import peak_memory
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
 
@@ -22,13 +22,13 @@ def run(rounds=16, fast=False):
     for Q in ([2, 4] if fast else [1, 2, 3, 4, 5]):
         chain = ChainConfig(window=Q, lam=0.2, foat_threshold=0.8,
                             local_steps=2, lr=3e-3)
-        strat = ChainFed(cfg, chain, jax.random.PRNGKey(0))
-        strat.trainer.set_params(params)
+        strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))
+        strat.params = params
         t0 = time.time()
         hist = run_rounds(sim, strat, rounds, eval_every=3)
         acc = max(h.acc for h in hist)
         mem = peak_memory(cfg, "chainfed", 8, spec.seq_len, window=Q,
-                          l_start=strat.trainer.l_start)["total"]
+                          l_start=strat.l_start)["total"]
         table[Q] = {"acc": acc, "mem": mem}
         rows.append(f"fig8/Q={Q},{(time.time()-t0)/rounds*1e6:.0f},"
                     f"acc={acc:.4f};peak_mem={mem}")

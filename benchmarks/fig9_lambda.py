@@ -8,8 +8,8 @@ import jax
 
 from .common import base_params, make_sim
 from repro.configs import get_config
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
 
@@ -21,8 +21,8 @@ def run(rounds=16, fast=False):
     for lam in ([0.0, 0.2] if fast else [0.0, 0.1, 0.2, 0.5, 1.0]):
         chain = ChainConfig(window=2, lam=lam, foat_threshold=0.8,
                             local_steps=2, lr=3e-3)
-        strat = ChainFed(cfg, chain, jax.random.PRNGKey(0))
-        strat.trainer.set_params(params)
+        strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))
+        strat.params = params
         t0 = time.time()
         hist = run_rounds(sim, strat, rounds, eval_every=3)
         acc = max(h.acc for h in hist)

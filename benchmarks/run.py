@@ -33,7 +33,14 @@ def main(argv=None) -> None:
                     help="comma-separated subset of: " + ",".join(SUITES))
     args = ap.parse_args(argv)
 
-    names = list(SUITES) if not args.only else args.only.split(",")
+    names = list(SUITES) if args.only is None else [
+        n.strip() for n in args.only.split(",") if n.strip()]
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {', '.join(unknown)}; "
+                 f"available: {', '.join(SUITES)}")
+    if not names:
+        ap.error("--only selected no suites; available: " + ", ".join(SUITES))
     print("name,us_per_call,derived")
     failures = []
     for name in names:

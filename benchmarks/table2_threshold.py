@@ -11,8 +11,8 @@ import jax
 
 from .common import Result, base_params, csv_row, make_sim
 from repro.configs import get_config
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
 
@@ -35,15 +35,16 @@ def run(rounds=18, fast=False):
                 params = base_params(cfg, tokens)
                 chain = ChainConfig(window=3, lam=0.2, foat_threshold=T,
                                     local_steps=2, lr=3e-3)
-                strat = ChainFed(cfg, chain, jax.random.PRNGKey(0),
-                                 use_foat=(T < 1.0))
-                strat.trainer.set_params(params)
+                strat = make_strategy("chainfed", cfg, chain,
+                                      jax.random.PRNGKey(0),
+                                      use_foat=(T < 1.0))
+                strat.params = params
                 t0 = time.time()
                 hist = run_rounds(sim, strat, rounds, eval_every=2)
                 wall = time.time() - t0
                 accs[iid] = (max(h.acc for h in hist), hist, wall,
                              strat.comm_bytes_per_round(),
-                             strat.trainer.l_start)
+                             strat.l_start)
             best, hist, wall, comm, l_start = accs[True]
             if T == 1.0:
                 base_hist = hist

@@ -17,9 +17,8 @@ from .common import csv_row
 from repro.configs import get_config
 from repro.core.memory import peak_memory
 from repro.data.synthetic import lm_batch, make_instruction
-from repro.fed.baselines import BASELINES
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import FedSim, run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 from repro.train.pretrain import pretrained_base
 
@@ -48,7 +47,7 @@ def run(rounds=24, fast=False):
 
     rows, table = [], {}
     # upper bound
-    fa = BASELINES["full_adapters"](cfg, chain0, jax.random.PRNGKey(0))
+    fa = make_strategy("full_adapters", cfg, chain0, jax.random.PRNGKey(0))
     fa.params = params
     t0 = time.time()
     hist = run_rounds(sim, fa, rounds, eval_every=3)
@@ -60,13 +59,13 @@ def run(rounds=24, fast=False):
 
     for Q in ([3] if fast else [2, 3, 4]):
         chain = dataclasses.replace(chain0, window=Q)
-        strat = ChainFed(cfg, chain, jax.random.PRNGKey(0))
-        strat.trainer.set_params(params)
+        strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))
+        strat.params = params
         t0 = time.time()
         hist = run_rounds(sim, strat, rounds, eval_every=3)
         acc = max(h.acc for h in hist)
         mem = peak_memory(cfg, "chainfed", 16, 32, window=Q,
-                          l_start=strat.trainer.l_start)["total"]
+                          l_start=strat.l_start)["total"]
         red = fa_mem / mem
         table[f"Q={Q}"] = {"acc": acc, "mem_red": red}
         rows.append(f"table3/chainfed_Q{Q},{(time.time()-t0)/rounds*1e6:.0f},"

@@ -9,15 +9,16 @@ import jax
 
 from .common import base_params, make_sim
 from repro.configs import get_config
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
+# ablations are themselves registered strategies (chainfed_wo_*)
 VARIANTS = {
-    "chainfed": {},
-    "wo_dlct": {"use_dlct": False},
-    "wo_gpo": {"use_gpo": False},
-    "wo_foat": {"use_foat": False},
+    "chainfed": "chainfed",
+    "wo_dlct": "chainfed_wo_dlct",
+    "wo_gpo": "chainfed_wo_gpo",
+    "wo_foat": "chainfed_wo_foat",
 }
 
 
@@ -30,9 +31,10 @@ def run(rounds=16, fast=False):
         for iid in (True, False):
             sim, tokens, labels, spec = make_sim(ds, iid, cfg)
             params = base_params(cfg, tokens)
-            for name, kw in VARIANTS.items():
-                strat = ChainFed(cfg, chain, jax.random.PRNGKey(0), **kw)
-                strat.trainer.set_params(params)
+            for name, registered in VARIANTS.items():
+                strat = make_strategy(registered, cfg, chain,
+                                      jax.random.PRNGKey(0))
+                strat.params = params
                 t0 = time.time()
                 hist = run_rounds(sim, strat, rounds, eval_every=3)
                 acc = max(h.acc for h in hist)

@@ -19,9 +19,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.memory import peak_memory
 from repro.data.synthetic import lm_batch, make_instruction
-from repro.fed.baselines import BASELINES
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import FedSim, run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 
 
@@ -58,14 +57,10 @@ def main():
     base = pretrained_base(cfg, pt_tokens, steps=400 if args.full else 200)
 
     results = {}
-    for name, make in [("chainfed", lambda k: ChainFed(cfg, chain, k)),
-                       ("full_adapters", lambda k: BASELINES["full_adapters"](cfg, chain, k))]:
+    for name in ("chainfed", "full_adapters"):
         t0 = time.time()
-        strat = make(jax.random.PRNGKey(0))
-        if name == "chainfed":
-            strat.trainer.set_params(base)
-        else:
-            strat.params = base
+        strat = make_strategy(name, cfg, chain, jax.random.PRNGKey(0))
+        strat.params = base
         hist = run_rounds(sim, strat, rounds, eval_every=max(2, rounds // 5),
                           verbose=True)
         mem = peak_memory(cfg, "chainfed" if name == "chainfed" else "full_adapters",

@@ -11,8 +11,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.data.synthetic import DATASETS, classification_batch, make_classification
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import FedSim, run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 
 
@@ -29,15 +29,15 @@ def main():
                             classification_batch(spec, tokens, labels, idx).items()}
     sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=8)
 
-    strat = ChainFed(cfg, chain, jax.random.PRNGKey(0))
+    strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))
     # stand-in for a pretrained checkpoint: label-free LM pretraining on the
     # corpus bodies (the paper fine-tunes pretrained BERT/LLaMA backbones)
     from repro.train.pretrain import pretrained_base
-    strat.trainer.set_params(pretrained_base(cfg, tokens, steps=300, verbose=True))
+    strat.params = pretrained_base(cfg, tokens, steps=300, verbose=True)
     strat.maybe_setup_foat(sim)
-    print(f"FOAT picked L_start = {strat.trainer.l_start} "
+    print(f"FOAT picked L_start = {strat.l_start} "
           f"(threshold T = {chain.foat_threshold})")
-    print(f"DLCT schedule: offsets {strat.trainer.schedule.offsets}, "
+    print(f"DLCT schedule: offsets {strat.schedule.offsets}, "
           f"window Q = {chain.window}")
 
     hist = run_rounds(sim, strat, rounds=20, eval_every=4, verbose=True)

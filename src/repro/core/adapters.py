@@ -1,16 +1,197 @@
-"""Bottleneck adapters (paper §3.1, Eq. 1) and LoRA (for the FLoRA baseline).
+"""Bottleneck adapters (paper §3.1, Eq. 1), LoRA (for the FLoRA baseline),
+and the ``ActiveAdapters`` composition spec.
 
 Adapters are kept in their own stacked pytree, separate from the base model:
 the chain optimizer slices this stack into frozen-prefix / trainable-window /
 aux-suffix segments (DLCT + GPO), and FedAvg communicates only these leaves.
+Which slice plays which role is described declaratively by ``ActiveAdapters``
+(adapter-hub's ``active_adapters`` idea, specialized to stacked pytrees):
+forward passes and the federated plan engine select sub-stacks by spec,
+never by ad-hoc positional slicing.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..models.config import ModelConfig
 from ..models.module import ACTIVATIONS, normal_init
+
+# segment roles
+FROZEN = "frozen"    # run in inference mode; never receives gradient
+TRAIN = "train"      # the trainable sub-stack (grads + optimizer state)
+AUX = "aux"          # GPO auxiliary branch (adapters-as-layer-approximations)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterSegment:
+    """Half-open layer range [start, stop) with a name and a role."""
+    name: str
+    start: int
+    stop: int
+    role: str = TRAIN
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+
+def _seg_slice(stack, seg: AdapterSegment):
+    return jax.tree_util.tree_map(lambda x: x[seg.start:seg.stop], stack)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActiveAdapters:
+    """Declarative activation/composition spec over a stacked (L, ...) adapter
+    pytree — the single place that says which layers' adapters are trainable,
+    which provide frozen context, and which feed the GPO auxiliary branch.
+
+    Hashable (tuple of frozen segments), so it doubles as a jit-cache key:
+    one compiled step per distinct spec — the DLCT cyclic window reuses ≤ L
+    compilations exactly as the per-offset stage cache did.
+    """
+    n_layers: int
+    segments: Tuple[AdapterSegment, ...]
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def full(cls, n_layers: int) -> "ActiveAdapters":
+        """Every adapter active and trainable (Full Adapters† / baselines)."""
+        return cls(n_layers, (AdapterSegment("all", 0, n_layers, TRAIN),))
+
+    @classmethod
+    def window(cls, n_layers: int, prefix: int, size: int) -> "ActiveAdapters":
+        """CHAINFED stage geometry: frozen [0, prefix) → trainable
+        [prefix, prefix+size) → aux [prefix+size, L).  Empty prefix/suffix
+        segments are kept so lookups by name are total."""
+        prefix = max(0, min(prefix, n_layers - 1))
+        size = max(1, min(size, n_layers - prefix))
+        return cls(n_layers, (
+            AdapterSegment("prefix", 0, prefix, FROZEN),
+            AdapterSegment("window", prefix, prefix + size, TRAIN),
+            AdapterSegment("suffix", prefix + size, n_layers, AUX),
+        ))
+
+    # ------------------------------------------------------------- queries
+    def segment(self, name: str) -> AdapterSegment:
+        for s in self.segments:
+            if s.name == name:
+                return s
+        raise KeyError(f"no segment {name!r} in {self.segments}")
+
+    def by_role(self, role: str) -> Tuple[AdapterSegment, ...]:
+        return tuple(s for s in self.segments if s.role == role)
+
+    @property
+    def train_span(self) -> Tuple[int, int]:
+        """(start, stop) of the trainable range (contiguous by construction)."""
+        segs = self.by_role(TRAIN)
+        if not segs:
+            return (0, 0)
+        return (min(s.start for s in segs), max(s.stop for s in segs))
+
+    @property
+    def is_full(self) -> bool:
+        a, b = self.train_span
+        return a == 0 and b == self.n_layers
+
+    def trainable_mask(self) -> jnp.ndarray:
+        """(L,) float mask over layers — 1 where the adapter is trainable."""
+        m = jnp.zeros((self.n_layers,), jnp.float32)
+        for s in self.by_role(TRAIN):
+            m = m.at[s.start:s.stop].set(1.0)
+        return m
+
+    # ----------------------------------------------------------- selection
+    def _covers_all(self, seg: AdapterSegment) -> bool:
+        return seg.start == 0 and seg.stop == self.n_layers
+
+    def select(self, stack, name: str):
+        """Sub-stack of a named segment (possibly empty: leaves (0, ...))."""
+        seg = self.segment(name)
+        if self._covers_all(seg):   # no device copy for the full stack
+            return stack
+        return _seg_slice(stack, seg)
+
+    def select_role(self, stack, role: str):
+        """Concatenated sub-stack of all segments with the given role
+        (an empty (0, ...) sub-stack when no segment has the role)."""
+        segs = self.by_role(role)
+        if not segs:
+            return jax.tree_util.tree_map(lambda x: x[0:0], stack)
+        if len(segs) == 1:
+            if self._covers_all(segs[0]):
+                return stack
+            return _seg_slice(stack, segs[0])
+        parts = [_seg_slice(stack, s) for s in segs]
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+    def train_slice(self, stack):
+        return self.select_role(stack, TRAIN)
+
+    def scatter_train(self, stack, value):
+        """Write an updated trainable sub-stack back into the full stack."""
+        a, b = self.train_span
+        return jax.tree_util.tree_map(
+            lambda full, w: jnp.concatenate(
+                [full[:a], w.astype(full.dtype), full[b:]], axis=0),
+            stack, value)
+
+
+class AdapterLibrary:
+    """Named adapter stacks + an active composition — the adapter-hub
+    ``add_adapter`` / ``active_adapters`` surface, kept as the seam for
+    multi-task adapter fusion and per-tenant serving (each tenant loads its
+    stack once; ``resolve``/``fuse`` pick what a forward pass sees)."""
+
+    def __init__(self):
+        self._stacks: Dict[str, object] = {}
+        self._active: Tuple[str, ...] = ()
+
+    def add(self, name: str, stack) -> None:
+        self._stacks[name] = stack
+
+    def names(self):
+        return tuple(sorted(self._stacks))
+
+    @property
+    def active_adapters(self) -> Tuple[str, ...]:
+        return self._active
+
+    def set_active(self, *names: str) -> None:
+        missing = [n for n in names if n not in self._stacks]
+        if missing:
+            raise KeyError(f"unknown adapters {missing}; have {self.names()}")
+        self._active = tuple(names)
+
+    def resolve(self, name: str | None = None):
+        """The stack a forward pass should use: a single named stack, or the
+        (uniform) fusion of the active composition."""
+        if name is not None:
+            return self._stacks[name]
+        if not self._active:
+            raise ValueError("no active adapters; call set_active() first")
+        if len(self._active) == 1:
+            return self._stacks[self._active[0]]
+        return self.fuse()
+
+    def fuse(self, weights=None):
+        """AdapterFusion-style linear fusion of the active stacks."""
+        names = self._active
+        if not names:
+            raise ValueError("no active adapters; call set_active() first")
+        if weights is None:
+            weights = [1.0 / len(names)] * len(names)
+        if len(weights) != len(names):
+            raise ValueError(f"{len(weights)} weights for {len(names)} "
+                             f"active adapters {names}")
+        parts = [self._stacks[n] for n in names]
+        return jax.tree_util.tree_map(
+            lambda *xs: sum(w * x for w, x in zip(weights, xs)), *parts)
 
 
 def adapter_init(key, cfg: ModelConfig):

@@ -56,19 +56,18 @@ def make_schedule(cfg: ModelConfig, l_start: int, window: int) -> ChainSchedule:
     return ChainSchedule(tuple(offsets), Q)
 
 
+def _spec_for(adapters, seg: ChainSegments):
+    import jax
+    from .adapters import ActiveAdapters
+    L = jax.tree_util.tree_leaves(adapters)[0].shape[0]
+    return ActiveAdapters.window(L, seg.prefix, seg.window)
+
+
 def window_slice(adapters, seg: ChainSegments):
     """Extract the trainable window from the stacked adapter pytree."""
-    import jax
-    return jax.tree_util.tree_map(
-        lambda x: x[seg.prefix:seg.prefix + seg.window], adapters)
+    return _spec_for(adapters, seg).select(adapters, "window")
 
 
 def window_scatter(adapters, window, seg: ChainSegments):
     """Write an updated window back into the full stack."""
-    import jax
-    import jax.numpy as jnp
-    return jax.tree_util.tree_map(
-        lambda full, w: jnp.concatenate(
-            [full[:seg.prefix], w.astype(full.dtype),
-             full[seg.prefix + seg.window:]], axis=0),
-        adapters, window)
+    return _spec_for(adapters, seg).scatter_train(adapters, window)

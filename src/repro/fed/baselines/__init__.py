@@ -1,11 +1,14 @@
-from .full_adapters import FullAdapters
-from .linear_probing import LinearProbing
-from .fedadapter import FedAdapter
+"""The 8 baseline strategies (paper Table 1).  Importing this package
+registers each under its name in ``repro.fed.registry``; ``BASELINES`` is
+kept as a plain-dict view for direct class access."""
 from .c2a import C2A
-from .fwdllm import FwdLLM
+from .fedadapter import FedAdapter
 from .fedkseed import FedKSeed
-from .flora import FLoRA
 from .fedra import FedRA
+from .flora import FLoRA
+from .full_adapters import FullAdapters
+from .fwdllm import FwdLLM
+from .linear_probing import LinearProbing
 
 BASELINES = {
     "full_adapters": FullAdapters,

@@ -12,9 +12,11 @@ from ...models.module import normal_init
 from ...models.transformer import forward_full
 from ...train.losses import cross_entropy
 from ...utils.tree import tree_map
+from ..registry import register_strategy
 from ..strategies import Strategy
 
 
+@register_strategy("c2a")
 class C2A(Strategy):
     name = "c2a"
     memory_method = "c2a"

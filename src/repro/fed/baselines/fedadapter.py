@@ -1,16 +1,25 @@
 """FedAdapter (Cai et al., 2022): dynamic adapter configuration — the set of
 active adapter layers grows progressively over rounds to accelerate early
-convergence (shallow first, then deeper)."""
+convergence (shallow first, then deeper).  The growth schedule is a runtime
+layer mask over the full plan, so every round reuses one compiled step."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ..strategies import Strategy
+from ...core.adapters import ActiveAdapters
+from ..registry import register_strategy
+from ..strategies import Strategy, TrainablePlan
 
 
+@register_strategy("fedadapter")
 class FedAdapter(Strategy):
     name = "fedadapter"
     memory_method = "fedadapter"
+
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(
+            adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
+            train_head=self.head is not None, layer_masked=True)
 
     def client_mask(self, client, round_idx):
         L = self.cfg.total_chain_layers
@@ -18,3 +27,6 @@ class FedAdapter(Strategy):
         active = min(L, max(1, L // 4) + round_idx // 2)
         mask = jnp.zeros((L,), jnp.float32)
         return mask.at[L - active:].set(1.0)
+
+    def plan_masks(self, client, round_idx):
+        return {"layer_mask": self.client_mask(client, round_idx)}

@@ -8,9 +8,11 @@ import jax.numpy as jnp
 from ...models.transformer import forward_full
 from ...optim.zeroth import kseed_apply, kseed_coeffs
 from ...train.losses import cross_entropy
+from ..registry import register_strategy
 from ..strategies import Strategy
 
 
+@register_strategy("fedkseed")
 class FedKSeed(Strategy):
     name = "fedkseed"
     memory_method = "fedkseed"

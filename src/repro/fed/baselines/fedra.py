@@ -1,15 +1,21 @@
 """FedRA [arXiv:2311.11227]: random allocation — each client is assigned a
 random subset of layers matching its memory budget and trains only those
-adapters; the server aggregates per layer over the clients that held it."""
+adapters; the server aggregates per layer over the clients that held it.
+The random allocation is the plan's runtime layer mask (one compiled step
+for every client/round); only the per-layer holder-normalized aggregation
+is method-specific."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from ...core.adapters import ActiveAdapters
 from ...utils.tree import tree_map
-from ..strategies import Strategy, layer_mask_apply
+from ..registry import register_strategy
+from ..strategies import Strategy, TrainablePlan
 
 
+@register_strategy("fedra")
 class FedRA(Strategy):
     name = "fedra"
     memory_method = "fedra"
@@ -17,6 +23,11 @@ class FedRA(Strategy):
     def __init__(self, cfg, chain, key):
         super().__init__(cfg, chain, key)
         self._rng = np.random.default_rng(4242)
+
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(
+            adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
+            train_head=self.head is not None, layer_masked=True)
 
     def client_mask(self, client, round_idx):
         L = self.cfg.total_chain_layers
@@ -26,44 +37,37 @@ class FedRA(Strategy):
         mask[sel] = 1.0
         return jnp.asarray(mask)
 
-    def round(self, sim, clients, round_idx):
-        deltas, masks, weights = [], [], []
-        master = self.master_trainable()
-        for c in clients:
-            mask = self.client_mask(c, round_idx)
-            tr = master
-            st = self.opt.init(tr)
-            for batch in sim.client_batches(c, self.chain.local_steps):
-                tr, st, _ = self._local_step(tr, st, self._params, batch, mask)
-            delta = tree_map(lambda a, b: a - b, tr, master)
-            # zero out unheld layers' deltas: AdamW weight decay otherwise
-            # leaks nonzero deltas into them, which the per-layer holder
-            # normalisation below would divide by ~0 (NaN explosion)
-            delta["adapters"] = tree_map(
-                lambda d: d * mask.reshape((-1,) + (1,) * (d.ndim - 1)),
-                delta["adapters"])
-            deltas.append(delta)
-            masks.append(mask)
-            weights.append(c.n_samples)
+    def plan_masks(self, client, round_idx):
+        return {"layer_mask": self.client_mask(client, round_idx)}
+
+    def aggregate(self, round_idx, plans, deltas, weights, masks):
         if not deltas:
             return
         w = jnp.asarray(weights, jnp.float32)
-        m = jnp.stack(masks)                                  # (n, L)
+        m = jnp.stack([mk["layer_mask"] for mk in masks])     # (n, L)
         denom = jnp.maximum(1e-9, (m * w[:, None]).sum(0))    # (L,)
+        # zero out unheld layers' deltas: AdamW weight decay otherwise
+        # leaks nonzero deltas into them, which the per-layer holder
+        # normalisation below would divide by ~0 (NaN explosion)
+        for d, mk in zip(deltas, masks):
+            lm = mk["layer_mask"]
+            d["adapters"] = tree_map(
+                lambda x: x * lm.reshape((-1,) + (1,) * (x.ndim - 1)),
+                d["adapters"])
 
         def agg_layers(*ds):
             s = sum(wi * d for wi, d in zip(w, ds))
             return s / denom.reshape((-1,) + (1,) * (s.ndim - 1))
 
-        def agg_flat(*ds):
-            return sum(wi * d for wi, d in zip(w / w.sum(), ds))
-
+        master = self.engine.init_trainable(plans[0], self._params,
+                                            self.adapters, self.head)
         new = dict(master)
         new["adapters"] = tree_map(
             lambda a, d: (a + d).astype(a.dtype), master["adapters"],
             tree_map(agg_layers, *[d["adapters"] for d in deltas]))
         if "head" in master:
+            agg_head = self.engine.fedavg([d["head"] for d in deltas], weights)
             new["head"] = tree_map(
-                lambda a, d: (a + d).astype(a.dtype), master["head"],
-                tree_map(agg_flat, *[d["head"] for d in deltas]))
-        self._commit(new)
+                lambda a, d: (a + d).astype(a.dtype), master["head"], agg_head)
+        self._params, self.adapters, self.head = self.engine.commit(
+            plans[0], self._params, self.adapters, self.head, new)

@@ -1,56 +1,31 @@
 """FLoRA [arXiv:2409.05976]: heterogeneous low-rank adaptation — each client
 trains only the leading r_c columns of the shared bottleneck (r_c set by its
-memory budget); aggregation zero-pads to the full rank (stacking-style)."""
+memory budget); aggregation zero-pads to the full rank (stacking-style).
+The rank restriction is the plan's runtime rank mask; the shared engine
+applies it to both the forward pass and the gradients."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from ...models.transformer import forward_full
-from ...train.losses import cross_entropy
-from ...utils.tree import tree_map
-from ..strategies import Strategy
+from ...core.adapters import ActiveAdapters
+from ..registry import register_strategy
+from ..strategies import Strategy, TrainablePlan
 
 
+@register_strategy("flora")
 class FLoRA(Strategy):
     name = "flora"
     memory_method = "flora"
 
-    def __init__(self, cfg, chain, key):
-        super().__init__(cfg, chain, key)
-        cfg_ = cfg
-
-        def loss_fn(tr, params, batch, rmask):
-            ad = {"down": tr["adapters"]["down"] * rmask[None, None, :],
-                  "up": tr["adapters"]["up"] * rmask[None, :, None]}
-            p = {**params, "cls_head": tr["head"]} if "head" in tr else params
-            logits, _ = forward_full(p, ad, batch, cfg_, remat=False)
-            return cross_entropy(logits, batch["labels"])
-
-        @jax.jit
-        def step(tr, opt_state, params, batch, rmask):
-            loss, g = jax.value_and_grad(loss_fn)(tr, params, batch, rmask)
-            g["adapters"] = {"down": g["adapters"]["down"] * rmask[None, None, :],
-                             "up": g["adapters"]["up"] * rmask[None, :, None]}
-            tr, opt_state = self.opt.step(tr, g, opt_state)
-            return tr, opt_state, loss
-
-        self._rank_step = step
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(
+            adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
+            train_head=self.head is not None, rank_masked=True)
 
     def _client_rank_mask(self, client):
         r = self.cfg.adapter.rank
         rc = max(1, int(r * min(1.0, 0.25 + 0.75 * (client.cid % 4) / 3)))
         return (jnp.arange(r) < rc).astype(jnp.float32)
 
-    def round(self, sim, clients, round_idx):
-        deltas, weights = [], []
-        master = self.master_trainable()
-        for c in clients:
-            rmask = self._client_rank_mask(c)
-            tr = master
-            st = self.opt.init(tr)
-            for batch in sim.client_batches(c, self.chain.local_steps):
-                tr, st, _ = self._rank_step(tr, st, self._params, batch, rmask)
-            deltas.append(tree_map(lambda a, b: a - b, tr, master))
-            weights.append(c.n_samples)
-        self._fedavg(deltas, weights)
+    def plan_masks(self, client, round_idx):
+        return {"rank_mask": self._client_rank_mask(client)}

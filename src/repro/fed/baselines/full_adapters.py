@@ -1,8 +1,11 @@
 """Full Adapters† — the paper's idealized, memory-unconstrained upper bound:
-end-to-end training of every adapter (Table 1 'Upper Bound')."""
+end-to-end training of every adapter (Table 1 'Upper Bound').  Exactly the
+base Strategy's default plan (full ActiveAdapters spec, CE loss)."""
+from ..registry import register_strategy
 from ..strategies import Strategy
 
 
+@register_strategy("full_adapters")
 class FullAdapters(Strategy):
     name = "full_adapters"
     memory_method = "full_adapters"

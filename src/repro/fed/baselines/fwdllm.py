@@ -10,9 +10,11 @@ from ...models.transformer import forward_full
 from ...optim.zeroth import spsa_grad
 from ...train.losses import cross_entropy
 from ...utils.tree import tree_map
+from ..registry import register_strategy
 from ..strategies import Strategy
 
 
+@register_strategy("fwdllm")
 class FwdLLM(Strategy):
     name = "fwdllm"
     memory_method = "fwdllm"

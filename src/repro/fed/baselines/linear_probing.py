@@ -1,51 +1,19 @@
 """Linear Probing (Kornblith et al., 2019b): only the output layer trains;
-the backbone and all adapters stay frozen."""
+the backbone and all adapters stay frozen — the plan declares no active
+adapters, so the shared engine builds a head-only step."""
 from __future__ import annotations
 
-import jax
-
-from ...models.transformer import forward_full
-from ...train.losses import cross_entropy
-from ...utils.tree import tree_map
-from ..strategies import Strategy
+from ..registry import register_strategy
+from ..strategies import Strategy, TrainablePlan
 
 
+@register_strategy("linear_probing")
 class LinearProbing(Strategy):
     name = "linear_probing"
     memory_method = "linear_probing"
 
     def __init__(self, cfg, chain, key):
         super().__init__(cfg, chain.replace(train_head=True), key)
-        cfg_ = cfg
 
-        def loss_fn(trainable, params, adapters, batch):
-            p = {**params, "cls_head": trainable["head"]}
-            logits, _ = forward_full(p, adapters, batch, cfg_, remat=False)
-            return cross_entropy(logits, batch["labels"])
-
-        @jax.jit
-        def step(trainable, opt_state, params, adapters, batch):
-            loss, g = jax.value_and_grad(loss_fn)(trainable, params, adapters,
-                                                  batch)
-            trainable, opt_state = self.opt.step(trainable, g, opt_state)
-            return trainable, opt_state, loss
-
-        self._head_step = step
-
-    def round(self, sim, clients, round_idx):
-        deltas, weights = [], []
-        master = {"head": self.head}
-        for c in clients:
-            tr = master
-            st = self.opt.init(tr)
-            for batch in sim.client_batches(c, self.chain.local_steps):
-                tr, st, _ = self._head_step(tr, st, self._params, self.adapters,
-                                            batch)
-            deltas.append(tree_map(lambda a, b: a - b, tr, master))
-            weights.append(c.n_samples)
-        if deltas:
-            import jax.numpy as jnp
-            w = jnp.asarray(weights, jnp.float32); w = w / w.sum()
-            agg = tree_map(lambda *ds: sum(wi * d for wi, d in zip(w, ds)), *deltas)
-            self.head = tree_map(lambda a, d: (a + d).astype(a.dtype),
-                                 master, agg)["head"]
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(adapters=None, train_head=True)

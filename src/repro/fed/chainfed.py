@@ -1,23 +1,26 @@
-"""CHAINFED as a Strategy for the federated engine — wraps the chain core
-(FOAT setup → DLCT-scheduled staged rounds with GPO dual loss) so benchmarks
-drive it exactly like the baselines.
+"""CHAINFED as a registered Strategy (paper §4, Algorithm 1): FOAT boundary
+setup → DLCT-scheduled window plans → GPO dual loss, all executed by the
+shared ``PlanEngine`` — no second trainer class.  The per-round plan carries
+an ``ActiveAdapters.window`` spec; since plans key the engine's jit cache,
+the DLCT cyclic window reuses ≤ L compilations (per-offset stage cache).
 
-Ablation switches (paper Table 4):
-  use_dlct=False → window size 1, no co-tuning overlap
-  use_gpo=False  → λ = 0 (pure local objective)
-  use_foat=False → L_start = 0 (full chain)
+Ablation switches (paper Table 4), also registered as named variants:
+  use_dlct=False → window size 1, no co-tuning overlap   (chainfed_wo_dlct)
+  use_gpo=False  → λ = 0 (pure local objective)          (chainfed_wo_gpo)
+  use_foat=False → L_start = 0 (full chain)              (chainfed_wo_foat)
 """
 from __future__ import annotations
 
-import jax
-
-from ..core.chain import ChainFedTrainer
+from ..core.adapters import ActiveAdapters
+from ..core.dlct import ChainSchedule, make_schedule
 from ..core.memory import comm_bytes_per_round
 from ..models.config import ChainConfig, ModelConfig
-from ..models.transformer import init_adapters, init_lm
+from .registry import register_strategy
+from .strategies import Strategy, TrainablePlan
 
 
-class ChainFed:
+@register_strategy("chainfed")
+class ChainFed(Strategy):
     name = "chainfed"
     memory_method = "chainfed"
 
@@ -28,14 +31,12 @@ class ChainFed:
         if not use_gpo:
             chain = chain.replace(lam=0.0)
         self.use_foat = use_foat
-        self.cfg, self.chain = cfg, chain
-        k1, k2 = jax.random.split(key)
-        params = init_lm(k1, cfg)
-        adapters = init_adapters(k2, cfg)
-        self.trainer = ChainFedTrainer(cfg, chain, params, adapters)
+        super().__init__(cfg, chain, key)
+        self.l_start = 0
+        self.schedule: ChainSchedule = make_schedule(cfg, 0, chain.window)
         self._foat_done = False
 
-    # FOAT runs once, before federated rounds (Algorithm 1 Phase 1)
+    # ---- Phase 1: FOAT runs once, before federated rounds (Algorithm 1) ----
     def maybe_setup_foat(self, sim):
         if self._foat_done:
             return
@@ -45,35 +46,39 @@ class ChainFed:
         clients = sim.clients[:min(8, len(sim.clients))]
         batches = [sim.client_batches(c, 1)[0] for c in clients]
         weights = [c.n_samples for c in clients]
-        self.trainer.setup_foat(batches, weights)
+        self.setup_foat(batches, weights)
+
+    def setup_foat(self, client_batches, weights=None):
+        from ..core.foat import run_foat
+        self.l_start, scores = run_foat(self._params, self.adapters,
+                                        client_batches, self.cfg,
+                                        self.chain.foat_threshold, weights)
+        self.schedule = make_schedule(self.cfg, self.l_start,
+                                      self.chain.window)
+        return self.l_start, scores
+
+    # ---- Phase 2: staged rounds as window plans --------------------------
+    def plan(self, client, round_idx) -> TrainablePlan:
+        seg = self.schedule.segments(round_idx, self.chain.advance_every)
+        spec = ActiveAdapters.window(self.cfg.total_chain_layers, seg.prefix,
+                                     seg.window)
+        return TrainablePlan(adapters=spec, train_head=self.head is not None,
+                             loss="gpo", lam=self.chain.lam)
 
     def round(self, sim, clients, round_idx):
         self.maybe_setup_foat(sim)
-        deltas, weights = [], []
-        for c in clients:
-            batches = sim.client_batches(c, self.chain.local_steps)
-            delta, loss, parts = self.trainer.client_update(round_idx, batches)
-            deltas.append(delta)
-            weights.append(c.n_samples)
-        if deltas:
-            self.trainer.aggregate(round_idx, deltas, weights)
+        super().round(sim, clients, round_idx)
 
-    def evaluate(self, batch):
-        return self.trainer.evaluate(batch)
-
+    # ---- accounting ------------------------------------------------------
     def memory_kwargs(self, round_idx):
-        return {"window": self.chain.window,
-                "l_start": self.trainer.l_start}
+        return {"window": self.chain.window, "l_start": self.l_start}
 
     def comm_bytes_per_round(self) -> int:
         return comm_bytes_per_round(self.cfg, "chainfed",
                                     window=self.chain.window,
-                                    l_start=self.trainer.l_start)
+                                    l_start=self.l_start)
 
-    @property
-    def params(self):
-        return self.trainer.params
 
-    @property
-    def adapters(self):
-        return self.trainer.adapters
+register_strategy("chainfed_wo_dlct", use_dlct=False)(ChainFed)
+register_strategy("chainfed_wo_gpo", use_gpo=False)(ChainFed)
+register_strategy("chainfed_wo_foat", use_foat=False)(ChainFed)

@@ -1,0 +1,147 @@
+"""Unified strategy registry + high-level experiment entry point.
+
+Every federated method — the 8 baselines and CHAINFED — registers itself
+under a name; benchmarks, examples and the launcher construct strategies
+exclusively through ``make_strategy`` (FedML-style config-driven dispatch).
+Adding a new method is a ~50-line class plus one decorator:
+
+    from repro.fed.registry import register_strategy
+    from repro.fed.strategies import Strategy
+
+    @register_strategy("my_method")
+    class MyMethod(Strategy):
+        memory_method = "full_adapters"
+        def plan(self, client, round_idx):
+            ...
+
+``run_experiment`` is the one-call path from (arch, dataset, strategy name)
+to a trained strategy + round metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+_REGISTRY: Dict[str, Tuple[type, dict]] = {}
+_BUILTINS_LOADED = False
+
+
+def register_strategy(name: str, **defaults) -> Callable[[type], type]:
+    """Class decorator: register a Strategy under ``name``.  ``defaults``
+    are keyword arguments merged (overridably) into every construction —
+    used e.g. for registered ablation variants of one class."""
+
+    def deco(cls):
+        if name in _REGISTRY and _REGISTRY[name][0] is not cls:
+            raise ValueError(f"strategy {name!r} already registered "
+                             f"to {_REGISTRY[name][0].__name__}")
+        if getattr(cls, "name", "base") == "base":
+            cls.name = name     # aliases keep the class's primary name
+        _REGISTRY[name] = (cls, dict(defaults))
+        return cls
+
+    return deco
+
+
+def _ensure_builtins():
+    """Built-in strategies register on import; load them lazily so the
+    registry module itself stays import-cycle-free."""
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    _BUILTINS_LOADED = True
+    from . import baselines  # noqa: F401  (registers the 8 baselines)
+    from . import chainfed   # noqa: F401  (registers chainfed + ablations)
+
+
+def available_strategies() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+def make_strategy(name: str, cfg, chain, key, **opts):
+    """Construct a registered strategy.  ``opts`` override the registered
+    defaults and are passed to the class constructor."""
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown strategy {name!r}; available: "
+                       f"{', '.join(sorted(_REGISTRY))}")
+    cls, defaults = _REGISTRY[name]
+    return cls(cfg, chain, key, **{**defaults, **opts})
+
+
+# ============================================================== experiments
+@dataclasses.dataclass
+class ExperimentResult:
+    strategy: object
+    sim: object
+    history: list           # List[RoundMetrics]
+
+    @property
+    def best_acc(self) -> float:
+        return max((h.acc for h in self.history), default=0.0)
+
+    @property
+    def final_acc(self) -> float:
+        return self.history[-1].acc if self.history else 0.0
+
+
+def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
+                   chain=None, fed=None, task: str = "classification",
+                   dataset: str = "agnews", batch_size: int = 8,
+                   rounds: int = 20, eval_every: int = 5, seed: int = 0,
+                   memory_constrained: bool = True, pretrain_steps: int = 0,
+                   params=None, sim=None, verbose: bool = False,
+                   strategy_opts: Optional[dict] = None) -> ExperimentResult:
+    """High-level entry point: build (or accept) the federated testbed, make
+    the named strategy, optionally swap in a pretrained base, run rounds.
+
+    ``sim``/``params`` short-circuit testbed construction so benchmarks can
+    share one pretrained base across methods; ``pretrain_steps`` > 0 LM-
+    pretrains a base on the task corpus when ``params`` is not given.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs import get_config
+    from ..data.synthetic import (DATASETS, classification_batch, lm_batch,
+                                  make_classification, make_instruction)
+    from ..models.config import ChainConfig, FedConfig
+    from .engine import FedSim, run_rounds
+
+    cfg = cfg if cfg is not None else get_config(arch)
+    chain = chain if chain is not None else ChainConfig()
+    fed = fed if fed is not None else FedConfig()
+
+    if sim is None:
+        if task == "classification":
+            spec = DATASETS[dataset]
+            spec = dataclasses.replace(spec, vocab=cfg.vocab_size)
+            tokens, labels = make_classification(spec)
+            batch_fn = lambda idx: {
+                k: jnp.asarray(v) for k, v in
+                classification_batch(spec, tokens, labels, idx).items()}
+        elif task == "instruction":
+            tokens, labels2d = make_instruction(vocab=cfg.vocab_size)
+            labels = np.zeros(len(tokens), np.int64)
+            batch_fn = lambda idx: {
+                k: jnp.asarray(v) for k, v in
+                lm_batch(tokens, labels2d, idx).items()}
+        else:
+            raise ValueError(f"unknown task {task!r}")
+        sim = FedSim(cfg, fed, tokens, labels, batch_fn,
+                     batch_size=batch_size,
+                     memory_constrained=memory_constrained)
+
+    strat = make_strategy(strategy, cfg, chain, jax.random.PRNGKey(seed),
+                          **(strategy_opts or {}))
+    if params is None and pretrain_steps > 0:
+        from ..train.pretrain import pretrained_base
+        params = pretrained_base(cfg, sim.tokens, steps=pretrain_steps)
+    if params is not None:
+        strat.params = params
+
+    history = run_rounds(sim, strat, rounds, eval_every=eval_every,
+                         verbose=verbose)
+    return ExperimentResult(strat, sim, history)

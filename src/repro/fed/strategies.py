@@ -1,7 +1,19 @@
-"""Strategy base + shared jitted machinery for the baseline suite (paper §5.2
-/ App. E).  Every strategy owns its global state and implements:
+"""Strategy base + the shared plan-driven training engine (paper §5.2 /
+App. E).
 
-    round(sim, clients, round_idx)   — one federated round
+The federated API is declarative: a strategy says *what* it trains via a
+``TrainablePlan`` (an ``ActiveAdapters`` composition spec plus head/embedding
+flags and a loss hook); one ``PlanEngine`` owns the jitted
+``local_step``/``eval_fn`` machinery and the FedAvg aggregation for every
+strategy — baselines and CHAINFED alike.  Plans are hashable, so the engine's
+jit cache is keyed on them: the DLCT cyclic window reuses ≤ L compilations
+(the old per-offset stage cache), and baselines share a single compilation.
+
+A strategy implements:
+
+    plan(client, round_idx)          — the TrainablePlan for this update
+    plan_masks(client, round_idx)    — runtime mask arrays (traced, no recompile)
+    round(sim, clients, round_idx)   — one federated round (generic default)
     evaluate(batch) -> (loss, acc)   — end-to-end eval
     memory_method / memory_kwargs    — ties into the memory-wall sampler
     comm_bytes_per_round()           — uplink accounting
@@ -11,15 +23,19 @@ trainables — standard fine-tuning protocol for classification backbones.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from ..core.adapters import ActiveAdapters
 from ..core.memory import comm_bytes_per_round
 from ..models.config import ChainConfig, ModelConfig
-from ..models.transformer import (forward_full, init_adapters, init_cls_head,
-                                  init_lm)
+from ..models.transformer import (ChainSegments, forward_chain, forward_full,
+                                  init_adapters, init_cls_head, init_lm)
 from ..optim.base import make_optimizer
-from ..train.losses import accuracy, cross_entropy, moe_penalty
+from ..train.losses import accuracy, cross_entropy, gpo_loss, moe_penalty
 from ..utils.tree import tree_map
 
 
@@ -28,6 +44,177 @@ def layer_mask_apply(grads, mask):
     return tree_map(lambda g: g * mask.reshape((-1,) + (1,) * (g.ndim - 1)), grads)
 
 
+def rank_mask_apply(adapters, rmask):
+    """rmask: (r,) float — keep only the leading bottleneck ranks (FLoRA)."""
+    return {"down": adapters["down"] * rmask[None, None, :],
+            "up": adapters["up"] * rmask[None, :, None]}
+
+
+# ===================================================================== plans
+@dataclasses.dataclass(frozen=True)
+class TrainablePlan:
+    """Declarative description of one client update: which adapter layers are
+    active (an ``ActiveAdapters`` spec; None = adapters frozen entirely),
+    whether the task head / embedding train, which runtime masks apply, and
+    which loss hook drives the step.
+
+    Hashable — the engine compiles one jitted step per distinct plan.  Mask
+    *values* are runtime arguments (see ``Strategy.plan_masks``) so per-round
+    or per-client masks never trigger recompilation.
+    """
+    adapters: Optional[ActiveAdapters]
+    train_head: bool = True
+    train_embedding: bool = False
+    layer_masked: bool = False      # expects masks["layer_mask"]: (L,)
+    rank_masked: bool = False       # expects masks["rank_mask"]: (r,)
+    loss: str = "ce"                # key into LOSS_HOOKS
+    lam: float = 0.0                # GPO global-loss weight (loss == "gpo")
+
+    @property
+    def window_segments(self) -> ChainSegments:
+        a, b = self.adapters.train_span
+        return ChainSegments(a, b - a)
+
+    @property
+    def is_window(self) -> bool:
+        return self.adapters is not None and not self.adapters.is_full
+
+
+# ================================================================ loss hooks
+LOSS_HOOKS = {}
+
+
+def register_loss_hook(name):
+    def deco(fn):
+        LOSS_HOOKS[name] = fn
+        return fn
+    return deco
+
+
+def _apply_trainable(params, trainable):
+    """Overlay trainable head/embedding leaves onto the base params."""
+    if "head" in trainable:
+        params = {**params, "cls_head": trainable["head"]}
+    if "embed" in trainable:
+        params = {**params, "embed": trainable["embed"]}
+    return params
+
+
+@register_loss_hook("ce")
+def _ce_hook(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan):
+    """End-to-end cross-entropy over the full adapter stack (baselines)."""
+
+    def loss_fn(trainable, params, frozen_adapters, batch, masks):
+        ad = trainable.get("adapters", frozen_adapters)
+        if plan.rank_masked:
+            ad = rank_mask_apply(ad, masks["rank_mask"])
+        p = _apply_trainable(params, trainable)
+        logits, aux = forward_full(p, ad, batch, cfg, remat=False)
+        loss = cross_entropy(logits, batch["labels"]) + moe_penalty(aux, cfg)
+        return loss, {"local": loss, "global": loss}
+
+    return loss_fn
+
+
+@register_loss_hook("gpo")
+def _gpo_hook(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan):
+    """CHAINFED staged forward + GPO dual objective (paper Eq. 2).  The
+    trainable adapter sub-stack is the DLCT window; prefix/suffix come from
+    the frozen full stack via the plan's ActiveAdapters spec."""
+    seg = plan.window_segments
+    final = seg.prefix + seg.window >= cfg.total_chain_layers
+
+    def loss_fn(trainable, params, frozen_adapters, batch, masks):
+        p = _apply_trainable(params, trainable)
+        out = forward_chain(p, trainable["adapters"], frozen_adapters, batch,
+                            cfg, seg)
+        return gpo_loss(out, batch["labels"], cfg, plan.lam, final)
+
+    return loss_fn
+
+
+# ==================================================================== engine
+class PlanEngine:
+    """Shared jitted machinery: one ``local_step`` per distinct plan, one
+    ``eval_fn``, plan-aware trainable slicing/commit, weighted FedAvg."""
+
+    def __init__(self, cfg: ModelConfig, chain: ChainConfig, opt):
+        self.cfg, self.chain, self.opt = cfg, chain, opt
+        self._steps = {}
+        self._eval = None
+
+    # ------------------------------------------------------------ jit cache
+    def local_step(self, plan: TrainablePlan):
+        if plan not in self._steps:
+            loss_fn = LOSS_HOOKS[plan.loss](self.cfg, self.chain, plan)
+            opt = self.opt
+
+            @jax.jit
+            def step(trainable, opt_state, params, frozen_adapters, batch,
+                     masks):
+                (loss, parts), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(trainable, params, frozen_adapters,
+                                           batch, masks)
+                if plan.layer_masked:
+                    grads["adapters"] = layer_mask_apply(grads["adapters"],
+                                                         masks["layer_mask"])
+                if plan.rank_masked:
+                    grads["adapters"] = rank_mask_apply(grads["adapters"],
+                                                        masks["rank_mask"])
+                trainable, opt_state = opt.step(trainable, grads, opt_state)
+                return trainable, opt_state, loss, parts
+
+            self._steps[plan] = step
+        return self._steps[plan]
+
+    def eval_fn(self):
+        if self._eval is None:
+            cfg = self.cfg
+
+            @jax.jit
+            def ev(params, adapters, batch):
+                logits, aux = forward_full(params, adapters, batch, cfg,
+                                           remat=False)
+                return (cross_entropy(logits, batch["labels"])
+                        + moe_penalty(aux, cfg),
+                        accuracy(logits, batch["labels"],
+                                 batch.get("class_tokens")))
+
+            self._eval = ev
+        return self._eval
+
+    # -------------------------------------------------------- plan plumbing
+    def init_trainable(self, plan: TrainablePlan, params, adapters, head):
+        t = {}
+        if plan.adapters is not None:
+            t["adapters"] = plan.adapters.train_slice(adapters)
+        if plan.train_head and head is not None:
+            t["head"] = head
+        if plan.train_embedding:
+            t["embed"] = params["embed"]
+        return t
+
+    def commit(self, plan: TrainablePlan, params, adapters, head, trainable):
+        """Scatter an updated trainable back into (params, adapters, head)."""
+        if "adapters" in trainable:
+            adapters = plan.adapters.scatter_train(adapters,
+                                                   trainable["adapters"])
+        if "head" in trainable:
+            head = trainable["head"]
+        if "embed" in trainable:
+            params = {**params, "embed": trainable["embed"]}
+        return params, adapters, head
+
+    @staticmethod
+    def fedavg(deltas, weights):
+        """Sample-weighted mean of client deltas."""
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / jnp.sum(w)
+        return tree_map(lambda *ds: sum(wi * d for wi, d in zip(w, ds)),
+                        *deltas)
+
+
+# ================================================================== strategy
 class Strategy:
     name = "base"
     memory_method = "full_adapters"
@@ -39,7 +226,7 @@ class Strategy:
         self.adapters = init_adapters(k2, cfg)
         self.head = init_cls_head(self._params) if chain.train_head else None
         self.opt = make_optimizer(chain.optimizer, chain.lr)
-        self._build()
+        self.engine = PlanEngine(cfg, chain, self.opt)
 
     # base params are swappable (pretrained checkpoints); the head re-derives
     @property
@@ -57,11 +244,18 @@ class Strategy:
             return self._params
         return {**self._params, "cls_head": self.head}
 
-    def _with_head(self, params, trainable):
-        if "head" in trainable:
-            return {**params, "cls_head": trainable["head"]}
-        return params
+    # ------------------------------------------------------------ the plan
+    def plan(self, client, round_idx) -> TrainablePlan:
+        """Default: every adapter trains end-to-end (Full Adapters†)."""
+        return TrainablePlan(
+            adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
+            train_head=self.head is not None)
 
+    def plan_masks(self, client, round_idx) -> dict:
+        """Runtime mask values for the plan's declared masks (traced args)."""
+        return {}
+
+    # ----------------------------------------------- legacy trainable views
     def master_trainable(self):
         t = {"adapters": self.adapters}
         if self.head is not None:
@@ -73,66 +267,53 @@ class Strategy:
         if "head" in trainable:
             self.head = trainable["head"]
 
-    # -------------------------------------------------- shared jitted pieces
-    def _build(self):
-        cfg = self.cfg
-
-        def loss_fn(trainable, params, batch):
-            p = self._with_head(params, trainable)
-            logits, aux = forward_full(p, trainable["adapters"], batch, cfg,
-                                       remat=False)
-            return (cross_entropy(logits, batch["labels"])
-                    + moe_penalty(aux, cfg))
-
-        @jax.jit
-        def local_step(trainable, opt_state, params, batch, mask):
-            loss, grads = jax.value_and_grad(loss_fn)(trainable, params, batch)
-            grads["adapters"] = layer_mask_apply(grads["adapters"], mask)
-            trainable, opt_state = self.opt.step(trainable, grads, opt_state)
-            return trainable, opt_state, loss
-
-        @jax.jit
-        def eval_fn(params, adapters, batch):
-            logits, aux = forward_full(params, adapters, batch, cfg, remat=False)
-            return (cross_entropy(logits, batch["labels"]) + moe_penalty(aux, cfg),
-                    accuracy(logits, batch["labels"],
-                             batch.get("class_tokens")))
-
-        self._local_step, self._eval = local_step, eval_fn
-
-    def full_mask(self):
-        return jnp.ones((self.cfg.total_chain_layers,), jnp.float32)
-
-    # -------------------------------------------------- default adapter FedAvg
-    def client_mask(self, client, round_idx):
-        return self.full_mask()
-
+    # -------------------------------------------------- generic plan round
     def round(self, sim, clients, round_idx):
-        deltas, weights = [], []
-        master = self.master_trainable()
+        plans, all_masks, deltas, weights = [], [], [], []
         for c in clients:
-            mask = self.client_mask(c, round_idx)
-            tr = master
-            opt_state = self.opt.init(tr)
+            plan = self.plan(c, round_idx)
+            masks = self.plan_masks(c, round_idx)
+            tr0 = self.engine.init_trainable(plan, self._params, self.adapters,
+                                             self.head)
+            step = self.engine.local_step(plan)
+            tr, opt_state = tr0, self.opt.init(tr0)
             for batch in sim.client_batches(c, self.chain.local_steps):
-                tr, opt_state, _ = self._local_step(tr, opt_state, self._params,
-                                                    batch, mask)
-            deltas.append(tree_map(lambda a, b: a - b, tr, master))
+                tr, opt_state, _, _ = step(tr, opt_state, self._params,
+                                           self.adapters, batch, masks)
+            plans.append(plan)
+            all_masks.append(masks)
+            deltas.append(tree_map(lambda a, b: a - b, tr, tr0))
             weights.append(c.n_samples)
-        self._fedavg(deltas, weights)
+        self.aggregate(round_idx, plans, deltas, weights, all_masks)
 
-    def _fedavg(self, deltas, weights):
+    def aggregate(self, round_idx, plans, deltas, weights, masks):
+        """Weighted FedAvg of deltas, scattered back through the plan spec.
+        Assumes all clients shared one spec this round (strategies with
+        per-client specs override)."""
         if not deltas:
             return
-        w = jnp.asarray(weights, jnp.float32)
-        w = w / jnp.sum(w)
-        agg = tree_map(lambda *ds: sum(wi * d for wi, d in zip(w, ds)), *deltas)
+        plan = plans[0]
+        agg = self.engine.fedavg(deltas, weights)
+        master = self.engine.init_trainable(plan, self._params, self.adapters,
+                                            self.head)
+        new = tree_map(lambda a, d: (a + d).astype(a.dtype), master, agg)
+        self._params, self.adapters, self.head = self.engine.commit(
+            plan, self._params, self.adapters, self.head, new)
+
+    def _fedavg(self, deltas, weights):
+        """Legacy helper for strategies with bespoke rounds (C2A, FwdLLM):
+        average full-trainable deltas and commit."""
+        if not deltas:
+            return
+        agg = self.engine.fedavg(deltas, weights)
         new = tree_map(lambda a, d: (a + d).astype(a.dtype),
                        self.master_trainable(), agg)
         self._commit(new)
 
+    # ---------------------------------------------------------------- eval
     def evaluate(self, batch):
-        loss, acc = self._eval(self.eval_params(), self.adapters, batch)
+        loss, acc = self.engine.eval_fn()(self.eval_params(), self.adapters,
+                                          batch)
         return float(loss), float(acc)
 
     def memory_kwargs(self, round_idx):

@@ -171,6 +171,8 @@ def run_case(arch: str, shape: str, multi_pod=False, seq_shard=False,
     t2 = time.time()
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
     colls = collective_bytes(compiled.as_text())
     n_chips = mesh.devices.size
     rec = {

@@ -18,23 +18,10 @@ import argparse
 import json
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from ..configs import get_config, get_smoke_config
-from ..data.synthetic import (DATASETS, classification_batch, lm_batch,
-                              make_classification, make_instruction)
-from ..fed.baselines import BASELINES
-from ..fed.chainfed import ChainFed
-from ..fed.engine import FedSim, run_rounds
+from ..data.synthetic import DATASETS
+from ..fed.registry import available_strategies, run_experiment
 from ..models.config import ChainConfig, FedConfig
-
-
-def build_strategy(method, cfg, chain, key, **kw):
-    if method == "chainfed":
-        return ChainFed(cfg, chain, key, **kw)
-    return BASELINES[method](cfg, chain, key)
 
 
 def main(argv=None):
@@ -46,7 +33,7 @@ def main(argv=None):
                     choices=["classification", "instruction"])
     ap.add_argument("--dataset", default="agnews", choices=list(DATASETS))
     ap.add_argument("--method", default="chainfed",
-                    choices=["chainfed"] + list(BASELINES))
+                    choices=available_strategies())
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--clients-per-round", type=int, default=4)
@@ -77,29 +64,15 @@ def main(argv=None):
                     rounds=args.rounds, iid=args.iid,
                     dirichlet_alpha=args.alpha, seed=args.seed)
 
-    if args.task == "classification":
-        spec = DATASETS[args.dataset]
-        spec = spec.__class__(**{**spec.__dict__, "vocab": cfg.vocab_size})
-        tokens, labels = make_classification(spec)
-        batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
-                                classification_batch(spec, tokens, labels, idx).items()}
-    else:
-        tokens, labels2d = make_instruction(vocab=cfg.vocab_size)
-        labels = np.zeros(len(tokens), np.int64)   # no class labels: IID-ish
-        batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
-                                lm_batch(tokens, labels2d, idx).items()}
-
-    sim = FedSim(cfg, fed, tokens, labels, batch_fn,
-                 batch_size=args.batch_size,
-                 memory_constrained=not args.unconstrained_memory)
-
-    key = jax.random.PRNGKey(args.seed)
-    strat = build_strategy(args.method, cfg, chain, key)
     print(f"== {args.method} on {cfg.arch_id} ({args.task}/{args.dataset}) "
           f"rounds={args.rounds} Q={args.window} λ={args.lam} T={args.threshold}")
     t0 = time.time()
-    hist = run_rounds(sim, strat, args.rounds, eval_every=args.eval_every,
-                      verbose=True)
+    result = run_experiment(
+        args.method, cfg=cfg, chain=chain, fed=fed, task=args.task,
+        dataset=args.dataset, batch_size=args.batch_size, rounds=args.rounds,
+        eval_every=args.eval_every, seed=args.seed,
+        memory_constrained=not args.unconstrained_memory, verbose=True)
+    strat, hist = result.strategy, result.history
     dt = time.time() - t0
     final = hist[-1] if hist else None
     print(f"== done in {dt:.1f}s  final acc={final.acc if final else float('nan'):.4f}")

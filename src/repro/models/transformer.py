@@ -19,7 +19,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.adapters import adapter_apply, adapter_chain_apply, adapter_stack_init
+from ..core.adapters import (AUX, FROZEN, TRAIN, ActiveAdapters,
+                             adapter_apply, adapter_chain_apply,
+                             adapter_stack_init)
 from ..sharding.hooks import constrain_logits, constrain_residual
 from .blocks import (block_apply, block_cache_init, block_decode, block_init,
                      block_prefill)
@@ -172,7 +174,8 @@ def forward_full(params, adapters, batch, cfg: ModelConfig, remat=True,
     lb = rz = ZERO
     if cfg.is_encdec:
         xe, _ = _enc_embed(params, batch, cfg)
-        enc_ad = _slice(adapters, 0, E)
+        spec = encdec_spec(cfg)
+        enc_ad = spec.select(adapters, "encoder")
         xe, (lb1, rz1), ys = _scan_layers(params["enc_layers"], enc_ad, xe, cfg,
                                           enc_kind, None, remat=remat,
                                           mode="bidir", collect=collect)
@@ -180,7 +183,7 @@ def forward_full(params, adapters, batch, cfg: ModelConfig, remat=True,
         lb, rz = lb + lb1, rz + rz1
         if collect:
             outs.append(ys)
-        dec_ad = _slice(adapters, E, E + cfg.n_layers)
+        dec_ad = spec.select(adapters, "decoder")
     else:
         dec_ad = adapters
     x, (lb2, rz2), ys = _scan_layers(params["layers"], dec_ad, x, cfg, dec_kind,
@@ -205,6 +208,14 @@ def _slice(tree, a, b):
     return jax.tree_util.tree_map(lambda x: x[a:b], tree)
 
 
+def encdec_spec(cfg: ModelConfig) -> ActiveAdapters:
+    """Named encoder/decoder split of the concatenated adapter stack."""
+    from ..core.adapters import AdapterSegment
+    E, D = cfg.n_encoder_layers, cfg.n_layers
+    return ActiveAdapters(E + D, (AdapterSegment("encoder", 0, E, TRAIN),
+                                  AdapterSegment("decoder", E, E + D, TRAIN)))
+
+
 # =================================================================== chain fwd
 def forward_chain(params, window_adapters, frozen_adapters, batch,
                   cfg: ModelConfig, seg: ChainSegments, remat=True,
@@ -227,12 +238,13 @@ def forward_chain(params, window_adapters, frozen_adapters, batch,
     L = cfg.n_layers
     seg = seg.clip(L)
     k, Q = seg.prefix, seg.window
+    spec = ActiveAdapters.window(L, k, Q)
     x, positions = embed_inputs(params, batch, cfg)
     _, kind = _kinds(cfg)
 
     # frozen prefix: inference mode, activations never saved for backward
     pre_layers = _slice(params["layers"], 0, k)
-    pre_ad = _slice(frozen_adapters, 0, k)
+    pre_ad = spec.select(frozen_adapters, "prefix")
     x, (lb0, rz0), _ = _scan_layers(pre_layers, pre_ad, x, cfg, kind, positions,
                                     remat=False)
     x = jax.lax.stop_gradient(x)
@@ -243,7 +255,7 @@ def forward_chain(params, window_adapters, frozen_adapters, batch,
                                     positions, remat=remat)
 
     aux = {"load_balance": lb0 + lb1, "router_z": rz0 + rz1}
-    suf_ad = _slice(frozen_adapters, k + Q, L)
+    suf_ad = spec.select(frozen_adapters, "suffix")
 
     if loss_ctx is not None:
         # §Perf lever (GPO_SEQUENTIAL): the dual objective normally keeps BOTH
@@ -283,6 +295,7 @@ def _forward_chain_encdec(params, window_adapters, frozen_adapters, batch,
                           cfg: ModelConfig, seg: ChainSegments, remat=True):
     """Chain over the concatenated [encoder ‖ decoder] layer list.  The stage
     scheduler guarantees the window never straddles the enc/dec boundary."""
+    from ..core.adapters import AdapterSegment
     E, D = cfg.n_encoder_layers, cfg.n_layers
     k, Q = seg.prefix, seg.window
     if k < E and k + Q > E:   # snap straddling windows to the decoder start
@@ -292,9 +305,14 @@ def _forward_chain_encdec(params, window_adapters, frozen_adapters, batch,
     xe, _ = _enc_embed(params, batch, cfg)
 
     if k + Q <= E:  # ---- window inside the encoder
+        spec = ActiveAdapters(E + D, (
+            AdapterSegment("prefix", 0, k, FROZEN),
+            AdapterSegment("window", k, k + Q, TRAIN),
+            AdapterSegment("suffix", k + Q, E, AUX),
+            AdapterSegment("decoder", E, E + D, AUX)))
         pre = _slice(params["enc_layers"], 0, k)
-        xe, _, _ = _scan_layers(pre, _slice(frozen_adapters, 0, k), xe, cfg,
-                                "enc", None, mode="bidir")
+        xe, _, _ = _scan_layers(pre, spec.select(frozen_adapters, "prefix"),
+                                xe, cfg, "enc", None, mode="bidir")
         xe = jax.lax.stop_gradient(xe)
         win = _slice(params["enc_layers"], k, k + Q)
         xe, (lb, rz), _ = _scan_layers(win, window_adapters, xe, cfg, "enc",
@@ -303,31 +321,34 @@ def _forward_chain_encdec(params, window_adapters, frozen_adapters, batch,
         # into the decoder token stream; no downstream base layer executes.
         pool = jnp.mean(xe, axis=1, keepdims=True)
         local_logits = head(params, jax.lax.stop_gradient(xd) + pool, cfg)
-        suf_enc = _slice(frozen_adapters, k + Q, E)
-        xs = adapter_chain_apply(suf_enc, xe, cfg)
+        xs = adapter_chain_apply(spec.select(frozen_adapters, "suffix"), xe, cfg)
         pool_g = jnp.mean(xs, axis=1, keepdims=True)
-        dec_ad = _slice(frozen_adapters, E, E + D)
+        dec_ad = spec.select(frozen_adapters, "decoder")
         xg = adapter_chain_apply(dec_ad, jax.lax.stop_gradient(xd) + pool_g, cfg)
         global_logits = head(params, xg, cfg)
         return {"local_logits": local_logits, "global_logits": global_logits,
                 "aux": {"load_balance": lb, "router_z": rz}}
 
     # ---- window inside the decoder: full frozen encoder provides cross-attn
-    enc_ad = _slice(frozen_adapters, 0, E)
-    xe, _, _ = _scan_layers(params["enc_layers"], enc_ad, xe, cfg, "enc", None,
-                            mode="bidir")
-    enc_out = jax.lax.stop_gradient(apply_norm(params["enc_norm"], xe, cfg.norm))
     kd = k - E
+    spec = ActiveAdapters(E + D, (
+        AdapterSegment("encoder", 0, E, FROZEN),
+        AdapterSegment("prefix", E, E + kd, FROZEN),
+        AdapterSegment("window", k, k + Q, TRAIN),
+        AdapterSegment("suffix", k + Q, E + D, AUX)))
+    xe, _, _ = _scan_layers(params["enc_layers"],
+                            spec.select(frozen_adapters, "encoder"), xe, cfg,
+                            "enc", None, mode="bidir")
+    enc_out = jax.lax.stop_gradient(apply_norm(params["enc_norm"], xe, cfg.norm))
     pre = _slice(params["layers"], 0, kd)
-    xd, _, _ = _scan_layers(pre, _slice(frozen_adapters, E, E + kd), xd, cfg,
-                            "xdec", positions, enc_out=enc_out)
+    xd, _, _ = _scan_layers(pre, spec.select(frozen_adapters, "prefix"), xd,
+                            cfg, "xdec", positions, enc_out=enc_out)
     xd = jax.lax.stop_gradient(xd)
     win = _slice(params["layers"], kd, kd + Q)
     xd, (lb, rz), _ = _scan_layers(win, window_adapters, xd, cfg, "xdec",
                                    positions, enc_out=enc_out, remat=remat)
     local_logits = head(params, xd, cfg)
-    suf_ad = _slice(frozen_adapters, E + kd + Q, E + D)
-    xa = adapter_chain_apply(suf_ad, xd, cfg)
+    xa = adapter_chain_apply(spec.select(frozen_adapters, "suffix"), xd, cfg)
     global_logits = head(params, xa, cfg)
     return {"local_logits": local_logits, "global_logits": global_logits,
             "aux": {"load_balance": lb, "router_z": rz}}
@@ -358,12 +379,12 @@ def prefill(params, adapters, batch, cfg: ModelConfig, max_len=None):
     enc_out = None
     if cfg.is_encdec:
         xe, _ = _enc_embed(params, batch, cfg)
-        enc_ad = _slice(adapters, 0, cfg.n_encoder_layers)
-        xe, _, _ = _scan_layers(params["enc_layers"], enc_ad, xe, cfg, enc_kind,
-                                None, mode="bidir")
+        spec = encdec_spec(cfg)
+        xe, _, _ = _scan_layers(params["enc_layers"],
+                                spec.select(adapters, "encoder"), xe, cfg,
+                                enc_kind, None, mode="bidir")
         enc_out = apply_norm(params["enc_norm"], xe, cfg.norm)
-        dec_ad = _slice(adapters, cfg.n_encoder_layers,
-                        cfg.n_encoder_layers + cfg.n_layers)
+        dec_ad = spec.select(adapters, "decoder")
     else:
         dec_ad = adapters
 
@@ -403,8 +424,7 @@ def decode_step(params, adapters, token, cache, idx, cfg: ModelConfig,
     else:
         x = embed(params["embed"], token, cfg.cdtype())
     _, kind = _kinds(cfg)
-    dec_ad = (_slice(adapters, cfg.n_encoder_layers,
-                     cfg.n_encoder_layers + cfg.n_layers)
+    dec_ad = (encdec_spec(cfg).select(adapters, "decoder")
               if cfg.is_encdec else adapters)
 
     def body(carry, xs):

@@ -1,2 +1,42 @@
+import pytest
+
+try:
+    import hypothesis
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+def given_or_grid(grid, strategies, **settings):
+    """Property-test decorator: hypothesis ``@given`` when available, else a
+    fixed ``@pytest.mark.parametrize`` grid so minimal environments keep
+    coverage instead of erroring at collection.
+
+    ``grid``: list of kwargs dicts (the fallback samples).
+    ``strategies``: callable ``st -> dict`` built lazily so modules import
+    without hypothesis installed.
+    ``settings``: hypothesis.settings overrides (e.g. ``max_examples``).
+    """
+    if HAVE_HYPOTHESIS:
+        import hypothesis.strategies as st
+        kw = dict(deadline=None,
+                  suppress_health_check=[hypothesis.HealthCheck.too_slow])
+        kw.update(settings)
+
+        def deco(fn):
+            return hypothesis.settings(**kw)(
+                hypothesis.given(**strategies(st))(fn))
+
+        return deco
+
+    keys = sorted(grid[0])
+    params = [tuple(case[k] for k in keys) for case in grid]
+
+    def deco(fn):
+        return pytest.mark.parametrize(",".join(keys), params)(fn)
+
+    return deco

@@ -8,10 +8,12 @@ import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED, get_config, get_smoke_config
-from repro.core.dlct import make_schedule, window_slice
+from repro.core.adapters import ActiveAdapters
+from repro.core.dlct import make_schedule
+from repro.fed.strategies import PlanEngine, TrainablePlan
 from repro.models import transformer as T
 from repro.models.config import ChainConfig
-from repro.core.chain import ChainStage
+from repro.optim.base import make_optimizer
 from repro.train.losses import IGNORE
 
 
@@ -77,23 +79,28 @@ def test_forward_smoke(arch, states):
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_chain_train_step_smoke(arch, states):
-    """One GPO/DLCT local step: loss finite, only window adapters move."""
+    """One GPO/DLCT local step via the plan engine: loss finite, only window
+    adapters move."""
     cfg, params, adapters = states(arch)
     chain = ChainConfig(window=1, lam=0.2, lr=1e-2, optimizer="sgd",
                         train_head=False)
     sched = make_schedule(cfg, l_start=0, window=1)
     seg = sched.segments(0)
-    stage = ChainStage(cfg, chain, seg)
-    trainable = {"window": window_slice(adapters, seg)}
-    opt_state = stage.init_opt(trainable)
+    engine = PlanEngine(cfg, chain, make_optimizer(chain.optimizer, chain.lr))
+    plan = TrainablePlan(
+        adapters=ActiveAdapters.window(cfg.total_chain_layers, seg.prefix,
+                                       seg.window),
+        train_head=False, loss="gpo", lam=chain.lam)
+    trainable = engine.init_trainable(plan, params, adapters, None)
+    opt_state = engine.opt.init(trainable)
     batch = make_batch(cfg)
-    new_tr, _, loss, parts = stage.local_step(trainable, opt_state, params,
-                                              adapters, batch)
+    new_tr, _, loss, parts = engine.local_step(plan)(
+        trainable, opt_state, params, adapters, batch, {})
     assert np.isfinite(float(loss)), arch
     moved = jax.tree_util.tree_reduce(
         lambda a, x: a + float(jnp.sum(jnp.abs(x))),
-        jax.tree_util.tree_map(lambda a, b: a - b, new_tr["window"],
-                               trainable["window"]), 0.0)
+        jax.tree_util.tree_map(lambda a, b: a - b, new_tr["adapters"],
+                               trainable["adapters"]), 0.0)
     assert moved > 0.0, f"{arch}: window adapters did not update"
 
 

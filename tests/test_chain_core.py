@@ -1,11 +1,10 @@
 """Chain-core invariants: adapters, DLCT scheduling, GPO dual loss, FOAT
 boundary selection, and the chain↔end-to-end equivalence property."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import given_or_grid
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import foat
@@ -46,9 +45,11 @@ def test_window_slice_scatter_roundtrip():
 
 
 # ------------------------------------------------------------------ DLCT
-@hypothesis.given(L=st.integers(2, 24), Q=st.integers(1, 8),
-                  l_start=st.integers(0, 20))
-@hypothesis.settings(max_examples=40, deadline=None)
+@given_or_grid([dict(L=L, Q=Q, l_start=s) for L in (2, 6, 13, 24)
+                for Q in (1, 2, 8) for s in (0, 7, 20)],
+               lambda st: dict(L=st.integers(2, 24), Q=st.integers(1, 8),
+                               l_start=st.integers(0, 20)),
+               max_examples=40)
 def test_schedule_windows_valid(L, Q, l_start):
     cfg = CFG.replace(n_layers=L)
     sched = make_schedule(cfg, min(l_start, L - 1), Q)

@@ -1,16 +1,12 @@
 """Per-kernel correctness: shape/dtype sweeps + hypothesis property tests,
 all against the pure-jnp oracles in repro.kernels.ref (interpret mode)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import given_or_grid
 
 from repro.kernels import ops, ref
-
-SETTINGS = dict(max_examples=12, deadline=None,
-                suppress_health_check=[hypothesis.HealthCheck.too_slow])
 
 
 def rnd(key, shape, dtype=jnp.float32, scale=1.0):
@@ -31,10 +27,14 @@ def test_fused_adapter_shapes(T, d, r, dtype):
                                np.asarray(exp, np.float32), atol=tol, rtol=tol)
 
 
-@hypothesis.given(T=st.integers(1, 80), d=st.sampled_from([32, 64, 128]),
-                  r=st.sampled_from([4, 8, 16]),
-                  act=st.sampled_from(["gelu", "relu", "silu"]))
-@hypothesis.settings(**SETTINGS)
+@given_or_grid([dict(T=T, d=d, r=r, act=act)
+                for T, d, r in [(1, 32, 4), (33, 64, 8), (80, 128, 16)]
+                for act in ("gelu", "relu", "silu")],
+               lambda st: dict(T=st.integers(1, 80),
+                               d=st.sampled_from([32, 64, 128]),
+                               r=st.sampled_from([4, 8, 16]),
+                               act=st.sampled_from(["gelu", "relu", "silu"])),
+               max_examples=12)
 def test_fused_adapter_property(T, d, r, act):
     h = rnd(T, (T, d))
     wd = rnd(T + 1, (d, r), scale=0.05)
@@ -72,11 +72,14 @@ def test_flash_attention_causal(B, H, S, hd, dtype):
                                np.asarray(exp, np.float32), atol=tol, rtol=tol)
 
 
-@hypothesis.given(S=st.sampled_from([64, 128, 192]),
-                  hd=st.sampled_from([16, 32]),
-                  window=st.sampled_from([None, 16, 50]),
-                  causal=st.booleans())
-@hypothesis.settings(**SETTINGS)
+@given_or_grid([dict(S=S, hd=hd, window=w, causal=c)
+                for S, hd in [(64, 16), (128, 32), (192, 16)]
+                for w in (None, 16, 50) for c in (True, False)],
+               lambda st: dict(S=st.sampled_from([64, 128, 192]),
+                               hd=st.sampled_from([16, 32]),
+                               window=st.sampled_from([None, 16, 50]),
+                               causal=st.booleans()),
+               max_examples=12)
 def test_flash_attention_property(S, hd, window, causal):
     if window is not None and not causal:
         window = None
@@ -103,9 +106,14 @@ def test_ssm_scan_shapes(S, chunk, d, N):
     np.testing.assert_allclose(np.asarray(h), np.asarray(he), atol=1e-4, rtol=1e-4)
 
 
-@hypothesis.given(S=st.sampled_from([16, 32]), d=st.sampled_from([4, 8]),
-                  N=st.sampled_from([2, 4]), with_h0=st.booleans())
-@hypothesis.settings(**SETTINGS)
+@given_or_grid([dict(S=S, d=d, N=N, with_h0=h)
+                for S, d, N in [(16, 4, 2), (32, 8, 4), (32, 4, 4)]
+                for h in (True, False)],
+               lambda st: dict(S=st.sampled_from([16, 32]),
+                               d=st.sampled_from([4, 8]),
+                               N=st.sampled_from([2, 4]),
+                               with_h0=st.booleans()),
+               max_examples=12)
 def test_ssm_scan_property(S, d, N, with_h0):
     B = 1
     u = rnd(20, (B, S, d))

@@ -1,9 +1,8 @@
 """Optimizers vs. numpy references; data pipeline properties."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+from conftest import given_or_grid
 
 from repro.data.partition import ClientSampler, dirichlet_partition, iid_partition
 from repro.data.synthetic import (DATASETS, classification_batch,
@@ -105,8 +104,11 @@ def test_classification_batch_layout():
     assert (b["labels"][:, -1] >= spec.vocab - spec.n_classes - 1).all()
 
 
-@hypothesis.given(n_clients=st.integers(2, 20), alpha=st.floats(0.1, 10.0))
-@hypothesis.settings(max_examples=20, deadline=None)
+@given_or_grid([dict(n_clients=n, alpha=a) for n in (2, 7, 20)
+                for a in (0.1, 1.0, 10.0)],
+               lambda st: dict(n_clients=st.integers(2, 20),
+                               alpha=st.floats(0.1, 10.0)),
+               max_examples=20)
 def test_dirichlet_partition_properties(n_clients, alpha):
     labels = np.random.default_rng(0).integers(0, 4, 400)
     shards = dirichlet_partition(labels, n_clients, alpha, seed=1)

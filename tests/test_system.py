@@ -10,8 +10,8 @@ from repro.core.memory import comm_bytes_per_round, peak_memory
 from repro.data.synthetic import (DATASETS, classification_batch,
                                   make_classification)
 from repro.fed.baselines import BASELINES
-from repro.fed.chainfed import ChainFed
 from repro.fed.engine import FedSim, run_rounds
+from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 
 CFG = get_config("bert_tiny").replace(n_layers=4, d_model=96, d_ff=192)
@@ -32,10 +32,10 @@ def make_sim(iid=True, memory_constrained=False, n_clients=8):
 def test_chainfed_improves_over_rounds():
     sim, tokens = make_sim()
     chain = ChainConfig(window=2, lam=0.2, local_steps=2, lr=3e-3)
-    strat = ChainFed(CFG, chain, jax.random.PRNGKey(0))
+    strat = make_strategy("chainfed", CFG, chain, jax.random.PRNGKey(0))
     from repro.train.pretrain import lm_pretrain
-    params, _ = lm_pretrain(strat.trainer.params, CFG, tokens, steps=60)
-    strat.trainer.set_params(params)
+    params, _ = lm_pretrain(strat.params, CFG, tokens, steps=60)
+    strat.params = params
     l0, a0 = strat.evaluate(sim.eval_batch())
     hist = run_rounds(sim, strat, rounds=10, eval_every=5)
     assert hist[-1].loss < l0, "chainfed did not reduce eval loss"
