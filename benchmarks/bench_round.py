@@ -1,0 +1,193 @@
+"""Round-throughput benchmark: legacy per-client dispatch loop vs the batched
+cohort step (ISSUE 2 tentpole).  The single-host simulation is dispatch-bound
+at reproduction scale — the legacy path issues ``clients_per_round ×
+local_steps`` separate jitted calls per round plus host-side optimizer init,
+delta extraction and FedAvg, while the cohort path issues ONE jitted call per
+plan-group (scan over local steps × vmap over clients, FedAvg fused).
+
+Two workloads per strategy:
+
+* ``bert_tiny``   — the paper's bert-tiny trunk in the *dispatch-bound
+  regime* (batch 1, short sequences, adapter-only trainables): per-step
+  compute is negligible, so the measured gap is the round-path overhead the
+  tentpole removes.  This is the cell the ≥3× acceptance bar reads.
+* ``llama_sm``    — a mid-size LLaMA-class trunk on a realistic workload
+  (batch 4, seq 32, trained head): compute amortizes the dispatch win, the
+  honest end-to-end number.
+
+    PYTHONPATH=src python -m benchmarks.bench_round            # full sweep
+    PYTHONPATH=src python -m benchmarks.bench_round --fast
+    PYTHONPATH=src python -m benchmarks.bench_round --smoke    # CI guard
+
+Writes ``BENCH_round_throughput.json`` (see --out): per (workload, strategy)
+the rounds/sec and steps/sec of both paths and the cohort speedup.  This
+file is the baseline every future round-path perf PR is judged against.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.synthetic import (DATASETS, classification_batch,
+                                  make_classification)
+from repro.fed.engine import FedSim
+from repro.models.config import ChainConfig, FedConfig
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_round_throughput.json"
+
+STRATEGIES = ["chainfed", "full_adapters", "fedra", "flora"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    cfg: object
+    seq_len: int
+    batch_size: int
+    n_clients: int
+    clients_per_round: int
+    local_steps: int
+    train_head: bool
+
+
+def workloads(smoke: bool):
+    if smoke:
+        return {"bert_smoke": Workload(get_config("bert_tiny").reduced(),
+                                       seq_len=4, batch_size=1, n_clients=8,
+                                       clients_per_round=4, local_steps=1,
+                                       train_head=False)}
+    return {
+        "bert_tiny": Workload(get_config("bert_tiny"), seq_len=4,
+                              batch_size=1, n_clients=48,
+                              clients_per_round=16, local_steps=1,
+                              train_head=False),
+        "llama_sm": Workload(get_config("llama_100m").replace(
+                                 n_layers=6, d_model=256, n_heads=8,
+                                 n_kv_heads=8, d_ff=768, vocab_size=2048),
+                             seq_len=32, batch_size=4, n_clients=12,
+                             clients_per_round=8, local_steps=2,
+                             train_head=True),
+    }
+
+
+def make_bench_sim(wl: Workload, seed=0):
+    spec = dataclasses.replace(DATASETS["agnews"], seq_len=wl.seq_len,
+                               n_samples=1024, vocab=wl.cfg.vocab_size)
+    tokens, labels = make_classification(spec)
+    batch_fn = lambda idx: classification_batch(spec, tokens, labels,
+                                                idx)
+    fed = FedConfig(n_clients=wl.n_clients,
+                    clients_per_round=wl.clients_per_round, seed=seed)
+    return FedSim(wl.cfg, fed, tokens, labels, batch_fn,
+                  batch_size=wl.batch_size, memory_constrained=False)
+
+
+def _block(strategy):
+    jax.block_until_ready(strategy.adapters)
+    if strategy.head is not None:
+        jax.block_until_ready(strategy.head)
+
+
+def time_path(strategy, sim, rounds, warmup_rounds, path):
+    """Time ``rounds`` federated rounds on one path.  Warmup covers every
+    plan in a cyclic schedule (chainfed's DLCT offsets) so the timed region
+    hits only cached compilations — steady-state round throughput."""
+    run = strategy.sequential_round if path == "legacy" else strategy.round
+    for r in range(warmup_rounds):
+        clients = sim.sample_clients(strategy.memory_method,
+                                     **strategy.memory_kwargs(r))
+        if clients:
+            run(sim, clients, r)
+    _block(strategy)
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        clients = sim.sample_clients(strategy.memory_method,
+                                     **strategy.memory_kwargs(r))
+        if clients:
+            run(sim, clients, r)
+    _block(strategy)
+    return (time.perf_counter() - t0) / rounds
+
+
+def bench_one(name, wl: Workload, chain, rounds, seed=0):
+    """One (workload, strategy) cell: fresh strategy + sim per path so jit
+    caches and sampler state don't leak across the comparison."""
+    from repro.fed.registry import make_strategy
+    out = {}
+    n_offsets = max(1, wl.cfg.total_chain_layers - chain.window + 1)
+    warmup = n_offsets if name == "chainfed" else 1
+    opts = {"use_foat": False} if name == "chainfed" else {}
+    for path in ("legacy", "cohort"):
+        sim = make_bench_sim(wl, seed=seed)
+        strat = make_strategy(name, wl.cfg, chain, jax.random.PRNGKey(seed),
+                              **opts)
+        if name == "chainfed":
+            strat._foat_done = True   # FOAT is one-off setup, not round cost
+        s_per_round = time_path(strat, sim, rounds, warmup, path)
+        steps = wl.clients_per_round * chain.local_steps
+        out[path] = {"s_per_round": s_per_round,
+                     "rounds_per_s": 1.0 / s_per_round,
+                     "steps_per_s": steps / s_per_round}
+    out["speedup"] = out["legacy"]["s_per_round"] / out["cohort"]["s_per_round"]
+    return out
+
+
+def run(fast: bool = False, smoke: bool = False, rounds: int = None,
+        out_path=DEFAULT_OUT):
+    rounds = rounds or (2 if smoke else (4 if fast else 8))
+    strategies = ["chainfed", "full_adapters"] if smoke else STRATEGIES
+    results, rows = [], []
+    for wname, wl in workloads(smoke).items():
+        chain = ChainConfig(window=3, local_steps=wl.local_steps, lr=1e-3,
+                            train_head=wl.train_head)
+        for name in strategies:
+            r = bench_one(name, wl, chain, rounds)
+            rec = {"arch": wname, "strategy": name,
+                   "clients_per_round": wl.clients_per_round,
+                   "local_steps": wl.local_steps, "batch_size": wl.batch_size,
+                   "seq_len": wl.seq_len, "train_head": wl.train_head,
+                   "rounds": rounds, **r}
+            results.append(rec)
+            rows.append(
+                f"round/{wname}/{name},{r['cohort']['s_per_round']*1e6:.0f},"
+                f"speedup={r['speedup']:.2f}"
+                f";legacy_us={r['legacy']['s_per_round']*1e6:.0f}"
+                f";steps_per_s={r['cohort']['steps_per_s']:.2f}")
+            print(rows[-1], flush=True)
+    doc = {"backend": jax.default_backend(),
+           "mode": "smoke" if smoke else ("fast" if fast else "full"),
+           "results": results}
+    pathlib.Path(out_path).write_text(json.dumps(doc, indent=2) + "\n")
+    return rows, doc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config + regression guard: cohort per-step "
+                         "time must be ≤ 1.5× the legacy path")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
+    rows, doc = run(fast=args.fast, smoke=args.smoke, rounds=args.rounds,
+                    out_path=args.out)
+    if args.smoke:
+        for rec in doc["results"]:
+            per_step_cohort = 1.0 / rec["cohort"]["steps_per_s"]
+            per_step_legacy = 1.0 / rec["legacy"]["steps_per_s"]
+            assert per_step_cohort <= 1.5 * per_step_legacy, (
+                f"cohort path regressed: {rec['arch']}/{rec['strategy']} "
+                f"{per_step_cohort:.4f}s/step vs legacy "
+                f"{per_step_legacy:.4f}s/step")
+        print("# smoke OK: cohort path within 1.5× of legacy per step")
+
+
+if __name__ == "__main__":
+    main()

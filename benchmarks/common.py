@@ -12,7 +12,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -44,8 +43,8 @@ def make_sim(dataset: str, iid: bool, cfg, seed=0, n_clients=12,
     tokens, labels = make_classification(spec)
     fed = FedConfig(n_clients=n_clients, clients_per_round=clients_per_round,
                     iid=iid, dirichlet_alpha=1.0, seed=seed)
-    batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
-                            classification_batch(spec, tokens, labels, idx).items()}
+    # host arrays: jit converts on call; cohort_batches stays host-side
+    batch_fn = lambda idx: classification_batch(spec, tokens, labels, idx)
     sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=batch_size,
                  memory_constrained=memory_constrained)
     return sim, tokens, labels, spec

@@ -9,6 +9,7 @@ import argparse
 import json
 import pathlib
 
+from .bench_round import DEFAULT_OUT as ROUND_JSON
 from .roofline import DRYRUN, PEAK_FLOPS, HBM_BW, ICI_BW, analyze
 
 ORDER = ["gemma_2b", "olmoe_1b_7b", "deepseek_67b", "qwen2_0_5b",
@@ -93,6 +94,28 @@ def suggest_lever(a):
     return "increase per-chip batch; fuse adapter chain"
 
 
+def round_throughput_table(path=ROUND_JSON):
+    """§Round-throughput table from BENCH_round_throughput.json (written by
+    ``benchmarks.bench_round``); None when the artifact is absent."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    doc = json.loads(path.read_text())
+    lines = [f"backend: {doc.get('backend', '?')}, "
+             f"mode: {doc.get('mode', '?')}", "",
+             "| workload | strategy | legacy rounds/s | cohort rounds/s | "
+             "cohort steps/s | speedup |",
+             "|---|---|---|---|---|---|"]
+    for r in doc.get("results", []):
+        lines.append(
+            f"| {r['arch']} | {r['strategy']} "
+            f"| {r['legacy']['rounds_per_s']:.2f} "
+            f"| {r['cohort']['rounds_per_s']:.2f} "
+            f"| {r['cohort']['steps_per_s']:.2f} "
+            f"| {r['speedup']:.2f}× |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
@@ -103,6 +126,10 @@ def main():
     print(dryrun_table(recs))
     print(f"\n## §Roofline ({args.mesh})\n")
     print(roofline_table(recs))
+    rt = round_throughput_table()
+    if rt is not None:
+        print("\n## §Round throughput (single host)\n")
+        print(rt)
 
 
 if __name__ == "__main__":

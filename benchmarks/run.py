@@ -11,12 +11,14 @@ import argparse
 import sys
 import time
 
-from . import (fig3_memory, fig8_window, fig9_lambda, roofline, table1_main,
-               table2_threshold, table3_instruction, table4_ablation)
+from . import (bench_round, fig3_memory, fig8_window, fig9_lambda, roofline,
+               table1_main, table2_threshold, table3_instruction,
+               table4_ablation)
 
 SUITES = {
     "fig3": fig3_memory,
     "roofline": roofline,
+    "round": bench_round,
     "table1": table1_main,
     "table2": table2_threshold,
     "table3": table3_instruction,

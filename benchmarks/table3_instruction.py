@@ -10,7 +10,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .common import csv_row
@@ -37,8 +36,7 @@ def run(rounds=24, fast=False):
                                         seed=8, mapping_seed=1)
     labels = np.zeros(len(tokens), np.int64)
     fed = FedConfig(n_clients=10, clients_per_round=4, iid=True)
-    batch_fn = lambda idx: {k: jnp.asarray(v)
-                            for k, v in lm_batch(tokens, labels2d, idx).items()}
+    batch_fn = lambda idx: lm_batch(tokens, labels2d, idx)
     sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=16,
                  memory_constrained=False)
     params = pretrained_base(cfg, pt_tokens, steps=300)

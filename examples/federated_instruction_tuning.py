@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -48,8 +47,7 @@ def main():
                                         vocab=cfg.vocab_size, n_keys=32,
                                         seed=8, mapping_seed=1)
     labels = np.zeros(len(tokens), np.int64)
-    batch_fn = lambda idx: {k: jnp.asarray(v)
-                            for k, v in lm_batch(tokens, labels2d, idx).items()}
+    batch_fn = lambda idx: lm_batch(tokens, labels2d, idx)
     sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=16,
                  memory_constrained=False)
 

@@ -7,7 +7,6 @@ dual loss, federated aggregation — and prints the accuracy trajectory.
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.data.synthetic import DATASETS, classification_batch, make_classification
@@ -25,8 +24,7 @@ def main():
 
     spec = DATASETS["agnews"]
     tokens, labels = make_classification(spec)
-    batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
-                            classification_batch(spec, tokens, labels, idx).items()}
+    batch_fn = lambda idx: classification_batch(spec, tokens, labels, idx)
     sim = FedSim(cfg, fed, tokens, labels, batch_fn, batch_size=8)
 
     strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))

@@ -212,11 +212,23 @@ def adapter_stack_init(key, cfg: ModelConfig, n_layers=None):
     return jax.vmap(lambda k: adapter_init(k, cfg))(keys)
 
 
-def adapter_apply(p, h, cfg: ModelConfig, use_kernel: bool = False):
-    """h: (..., d_model)."""
-    if use_kernel:
-        from ..kernels import ops as kops
-        return kops.fused_adapter(h, p["down"], p["up"], activation=cfg.adapter.activation)
+def adapter_apply(p, h, cfg: ModelConfig, use_kernel=None):
+    """h: (..., d_model).  Kernel dispatch: ``use_kernel`` overrides
+    ``cfg.adapter.fused``; when both are None the backend decides — the fused
+    Pallas kernel on TPU (one VMEM pass for both projections + activation +
+    residual, differentiable via its custom VJP), the plain XLA sequence
+    elsewhere.  Adapters run in every window layer and the whole GPO
+    auxiliary branch, so this is the forward's hottest primitive."""
+    use = use_kernel if use_kernel is not None else cfg.adapter.fused
+    if use is None:
+        use = jax.default_backend() == "tpu"
+    if use:
+        from ..kernels.fused_adapter import _ACTS
+        if cfg.adapter.activation in _ACTS:
+            from ..kernels import ops as kops
+            return kops.fused_adapter_grad(h, p["down"], p["up"],
+                                           activation=cfg.adapter.activation)
+        # activations the kernel doesn't implement fall back to plain XLA
     act = ACTIVATIONS[cfg.adapter.activation]
     z = act(h @ p["down"].astype(h.dtype))
     return h + z @ p["up"].astype(h.dtype)

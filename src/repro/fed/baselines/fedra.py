@@ -12,7 +12,7 @@ import numpy as np
 from ...core.adapters import ActiveAdapters
 from ...utils.tree import tree_map
 from ..registry import register_strategy
-from ..strategies import Strategy, TrainablePlan
+from ..strategies import Strategy, TrainablePlan, cohort_fedavg
 
 
 @register_strategy("fedra")
@@ -39,6 +39,33 @@ class FedRA(Strategy):
 
     def plan_masks(self, client, round_idx):
         return {"layer_mask": self.client_mask(client, round_idx)}
+
+    def cohort_aggregate(self, plan):
+        """The holder-normalized aggregation below, traced into the cohort
+        step: stacked deltas (C, L, ...) and stacked layer masks (C, L)
+        replace the host-side per-client loop."""
+
+        def agg(trainable0, deltas, weights, masks):
+            lm = masks["layer_mask"]                          # (C, L)
+            denom = jnp.maximum(1e-9, (lm * weights[:, None]).sum(0))  # (L,)
+
+            def agg_layers(t0, d):
+                # zero unheld layers' deltas (AdamW decay leakage — see
+                # aggregate()), weight, then per-layer holder normalization
+                d = d * lm.reshape(lm.shape + (1,) * (d.ndim - 2))
+                s = (d.astype(jnp.float32)
+                     * weights.reshape((-1,) + (1,) * (d.ndim - 1))).sum(0)
+                s = s / denom.reshape((-1,) + (1,) * (s.ndim - 1))
+                return (t0 + s).astype(t0.dtype)
+
+            new = {"adapters": tree_map(agg_layers, trainable0["adapters"],
+                                        deltas["adapters"])}
+            if "head" in trainable0:
+                new["head"] = cohort_fedavg(trainable0["head"],
+                                            deltas["head"], weights, masks)
+            return new
+
+        return agg
 
     def aggregate(self, round_idx, plans, deltas, weights, masks):
         if not deltas:

@@ -62,8 +62,10 @@ class ChainFed(Strategy):
         seg = self.schedule.segments(round_idx, self.chain.advance_every)
         spec = ActiveAdapters.window(self.cfg.total_chain_layers, seg.prefix,
                                      seg.window)
+        # remat=True keeps the window scan checkpointed (forward_chain's
+        # long-standing default for the GPO staged forward)
         return TrainablePlan(adapters=spec, train_head=self.head is not None,
-                             loss="gpo", lam=self.chain.lam)
+                             loss="gpo", lam=self.chain.lam, remat=True)
 
     def round(self, sim, clients, round_idx):
         self.maybe_setup_foat(sim)

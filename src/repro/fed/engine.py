@@ -18,6 +18,13 @@ from ..data.partition import ClientSampler, dirichlet_partition, iid_partition
 from ..models.config import FedConfig, ModelConfig
 
 
+# batch leaves whose leading axis is the per-client batch dimension — the
+# only leaves cohort_batches pads for short clients (a leading dim that
+# merely *coincides* with the batch size, e.g. class_tokens with
+# n_classes == b, must not be padded)
+BATCH_AXIS_KEYS = ("tokens", "labels", "embeds", "enc_tokens", "enc_embeds")
+
+
 @dataclasses.dataclass
 class Client:
     cid: int
@@ -74,6 +81,59 @@ class FedSim:
     def client_batches(self, client: Client, n_batches: int):
         return [self.batch_fn(client.sampler.next_indices())
                 for _ in range(n_batches)]
+
+    def cohort_batches(self, clients: List[Client], n_batches: int):
+        """Stacked local batches for a whole cohort: every leaf becomes
+        ``(C, n_batches, b, ...)`` — the layout one jitted ``cohort_step``
+        (vmap over C, scan over n_batches) consumes, and the same layout the
+        pjit pod path shards on its cohort axis.
+
+        The stack is assembled host-side in numpy and crosses to the device
+        in ONE transfer per leaf, instead of ``C × n_batches`` separate
+        transfers on the per-client path (``batch_fn`` should return host
+        arrays — the in-repo batch builders do).  Clients whose shard
+        supports only a smaller batch are padded to the cohort's max batch
+        size by repeating their last row with ``labels = IGNORE`` — exact
+        under the masked mean of ``cross_entropy`` (padding rows carry zero
+        loss weight; MoE router penalties see the padded tokens, a no-op for
+        the dense reproduction configs).  The known batch-leading leaves
+        (``BATCH_AXIS_KEYS``) pad along axis 0 and M-RoPE ``positions``
+        (3, b, S) along their batch axis; any other leaf (``class_tokens``)
+        must be batch-size-invariant and stacks as-is."""
+        import jax.numpy as jnp
+
+        from ..train.losses import IGNORE
+        raw = [[{k: np.asarray(v) for k, v in
+                 self.batch_fn(c.sampler.next_indices()).items()}
+                for _ in range(n_batches)] for c in clients]
+        bmax = max(b["tokens"].shape[0] for cb in raw for b in cb
+                   if "tokens" in b) if raw and "tokens" in raw[0][0] else None
+
+        def pad(batch):
+            if bmax is None or batch["tokens"].shape[0] == bmax:
+                return batch
+            b = batch["tokens"].shape[0]
+            out = {}
+            for k, v in batch.items():
+                if k in BATCH_AXIS_KEYS and v.ndim and v.shape[0] == b:
+                    v = np.concatenate(
+                        [v, np.repeat(v[-1:], bmax - b, axis=0)], axis=0)
+                    if k == "labels":
+                        v[b:] = IGNORE
+                elif k == "positions" and v.ndim >= 3 and v.shape[-2] == b:
+                    # (3, b, S): padded rows carry IGNORE labels, so their
+                    # position values never reach the loss
+                    v = np.concatenate(
+                        [v, np.repeat(v[..., -1:, :], bmax - b, axis=-2)],
+                        axis=-2)
+                out[k] = v
+            return out
+
+        raw = [[pad(b) for b in cb] for cb in raw]
+        keys = raw[0][0].keys()
+        return {k: jnp.asarray(np.stack(
+            [np.stack([b[k] for b in cb]) for cb in raw]))
+            for k in keys}
 
     def eval_batch(self, n: int = 256, seed: int = 1234):
         rng = np.random.default_rng(seed)

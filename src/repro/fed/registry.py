@@ -101,7 +101,6 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
     pretrains a base on the task corpus when ``params`` is not given.
     """
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from ..configs import get_config
@@ -119,15 +118,14 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
             spec = DATASETS[dataset]
             spec = dataclasses.replace(spec, vocab=cfg.vocab_size)
             tokens, labels = make_classification(spec)
-            batch_fn = lambda idx: {
-                k: jnp.asarray(v) for k, v in
-                classification_batch(spec, tokens, labels, idx).items()}
+            # host arrays: jit converts on call; cohort_batches stacks
+            # host-side with one device transfer per leaf
+            batch_fn = lambda idx: classification_batch(spec, tokens,
+                                                        labels, idx)
         elif task == "instruction":
             tokens, labels2d = make_instruction(vocab=cfg.vocab_size)
             labels = np.zeros(len(tokens), np.int64)
-            batch_fn = lambda idx: {
-                k: jnp.asarray(v) for k, v in
-                lm_batch(tokens, labels2d, idx).items()}
+            batch_fn = lambda idx: lm_batch(tokens, labels2d, idx)
         else:
             raise ValueError(f"unknown task {task!r}")
         sim = FedSim(cfg, fed, tokens, labels, batch_fn,

@@ -9,10 +9,22 @@ strategy — baselines and CHAINFED alike.  Plans are hashable, so the engine's
 jit cache is keyed on them: the DLCT cyclic window reuses ≤ L compilations
 (the old per-offset stage cache), and baselines share a single compilation.
 
+The round hot path is **batched cohort execution**: sampled clients are
+grouped by plan, each group's local batches are stacked into
+``(C, local_steps, b, ...)`` arrays (``FedSim.cohort_batches``), and one
+jitted ``cohort_step`` per plan runs ``lax.scan`` over local steps inside
+``vmap`` over the client axis — optimizer init, per-client masking and the
+sample-weighted FedAvg all inside the same compilation.  The pjit pod path
+(``repro.train.steps``) builds its fed step from the same
+``make_client_update``; per-client sequential dispatch survives only as
+``Strategy.sequential_round`` (the benchmark baseline and the fallback for
+strategies with host-side aggregation).
+
 A strategy implements:
 
     plan(client, round_idx)          — the TrainablePlan for this update
     plan_masks(client, round_idx)    — runtime mask arrays (traced, no recompile)
+    cohort_aggregate(plan)           — optional in-graph aggregation override
     round(sim, clients, round_idx)   — one federated round (generic default)
     evaluate(batch) -> (loss, acc)   — end-to-end eval
     memory_method / memory_kwargs    — ties into the memory-wall sampler
@@ -24,6 +36,7 @@ trainables — standard fine-tuning protocol for classification backbones.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -50,6 +63,16 @@ def rank_mask_apply(adapters, rmask):
             "up": adapters["up"] * rmask[None, :, None]}
 
 
+def stack_masks(mask_dicts):
+    """Stack per-client mask dicts along a leading client axis: a list of
+    ``{name: (...)}`` becomes ``{name: (C, ...)}`` — the vmapped runtime
+    arguments of a cohort step."""
+    if not mask_dicts or not mask_dicts[0]:
+        return {}
+    return {k: jnp.stack([m[k] for m in mask_dicts])
+            for k in mask_dicts[0]}
+
+
 # ===================================================================== plans
 @dataclasses.dataclass(frozen=True)
 class TrainablePlan:
@@ -68,7 +91,8 @@ class TrainablePlan:
     layer_masked: bool = False      # expects masks["layer_mask"]: (L,)
     rank_masked: bool = False       # expects masks["rank_mask"]: (r,)
     loss: str = "ce"                # key into LOSS_HOOKS
-    lam: float = 0.0                # GPO global-loss weight (loss == "gpo")
+    lam: float = 0.0                # GPO global-loss weight (loss == "gpo*")
+    remat: bool = False             # checkpoint the forward (pod-scale steps)
 
     @property
     def window_segments(self) -> ChainSegments:
@@ -109,7 +133,7 @@ def _ce_hook(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan):
         if plan.rank_masked:
             ad = rank_mask_apply(ad, masks["rank_mask"])
         p = _apply_trainable(params, trainable)
-        logits, aux = forward_full(p, ad, batch, cfg, remat=False)
+        logits, aux = forward_full(p, ad, batch, cfg, remat=plan.remat)
         loss = cross_entropy(logits, batch["labels"]) + moe_penalty(aux, cfg)
         return loss, {"local": loss, "global": loss}
 
@@ -127,20 +151,88 @@ def _gpo_hook(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan):
     def loss_fn(trainable, params, frozen_adapters, batch, masks):
         p = _apply_trainable(params, trainable)
         out = forward_chain(p, trainable["adapters"], frozen_adapters, batch,
-                            cfg, seg)
+                            cfg, seg, remat=plan.remat)
         return gpo_loss(out, batch["labels"], cfg, plan.lam, final)
 
     return loss_fn
 
 
+@register_loss_hook("gpo_seq")
+def _gpo_seq_hook(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan):
+    """Sequential GPO (§Perf lever, single-stack models only): each CE branch
+    is checkpointed inside ``forward_chain`` so only the (B, S, d) window
+    output stays live for backward instead of both vocab-sized logits."""
+    seg = plan.window_segments
+    final = seg.prefix + seg.window >= cfg.total_chain_layers
+
+    def loss_fn(trainable, params, frozen_adapters, batch, masks):
+        p = _apply_trainable(params, trainable)
+        out = forward_chain(p, trainable["adapters"], frozen_adapters, batch,
+                            cfg, seg, remat=plan.remat,
+                            loss_ctx=(batch["labels"], plan.lam, final))
+        loss = out["loss"] + moe_penalty(out["aux"], cfg)
+        return loss, {"local": out["local"], "global": out["global"]}
+
+    return loss_fn
+
+
+# ======================================================= client-local update
+def make_client_update(cfg: ModelConfig, chain: ChainConfig,
+                       plan: TrainablePlan, opt):
+    """One client's whole local optimisation as a traced function:
+
+        client_update(trainable0, params, frozen_adapters, batches, masks)
+            -> (trainable_final, mean_loss)
+
+    ``batches`` leaves are ``(local_steps, b, ...)`` — ``lax.scan`` consumes
+    the leading axis; optimizer state is initialized *inside* the trace so a
+    cohort step can vmap this over a stacked client axis with no host work.
+    Shared by the single-host ``PlanEngine.cohort_step`` and the pjit pod
+    step builders in ``repro.train.steps``."""
+    loss_fn = LOSS_HOOKS[plan.loss](cfg, chain, plan)
+
+    def client_update(trainable0, params, frozen_adapters, batches, masks):
+        def one_step(carry, mb):
+            tr, opt_state = carry
+            (loss, _parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(tr, params, frozen_adapters, mb, masks)
+            if plan.layer_masked:
+                grads["adapters"] = layer_mask_apply(grads["adapters"],
+                                                     masks["layer_mask"])
+            if plan.rank_masked:
+                grads["adapters"] = rank_mask_apply(grads["adapters"],
+                                                    masks["rank_mask"])
+            tr, opt_state = opt.step(tr, grads, opt_state)
+            return (tr, opt_state), loss
+
+        (tr, _), losses = jax.lax.scan(
+            one_step, (trainable0, opt.init(trainable0)), batches)
+        return tr, jnp.mean(losses)
+
+    return client_update
+
+
+def cohort_fedavg(trainable0, deltas, weights, masks):
+    """Default in-graph aggregation: sample-weighted mean over the cohort
+    axis, committed onto the round-start trainable.  ``deltas`` leaves are
+    ``(C, ...)``; ``weights`` is ``(C,)``."""
+    w = weights / jnp.sum(weights)
+    return tree_map(
+        lambda t0, d: (t0 + jnp.tensordot(w, d.astype(jnp.float32), axes=1)
+                       ).astype(t0.dtype),
+        trainable0, deltas)
+
+
 # ==================================================================== engine
 class PlanEngine:
-    """Shared jitted machinery: one ``local_step`` per distinct plan, one
-    ``eval_fn``, plan-aware trainable slicing/commit, weighted FedAvg."""
+    """Shared jitted machinery: one ``local_step`` / ``cohort_step`` per
+    distinct plan, one ``eval_fn``, plan-aware trainable slicing/commit,
+    weighted FedAvg."""
 
     def __init__(self, cfg: ModelConfig, chain: ChainConfig, opt):
         self.cfg, self.chain, self.opt = cfg, chain, opt
         self._steps = {}
+        self._cohort = {}
         self._eval = None
 
     # ------------------------------------------------------------ jit cache
@@ -166,6 +258,51 @@ class PlanEngine:
 
             self._steps[plan] = step
         return self._steps[plan]
+
+    def cohort_step(self, plan: TrainablePlan, aggregate=None):
+        """One jitted round for a whole plan-group:
+
+            step(trainable0, params, frozen_adapters, batches, masks, weights)
+                -> (new_trainable, mean_loss)
+
+        ``batches`` leaves are ``(C, local_steps, b, ...)`` and mask leaves
+        ``(C, ...)``: ``vmap`` strips the client axis, ``lax.scan`` the local
+        steps.  Optimizer init, per-client masking and the sample-weighted
+        FedAvg (mean over the cohort axis) are fused into one compilation —
+        no per-client dispatch, no host-side aggregation.
+
+        ``aggregate(trainable0, deltas, weights, masks)`` overrides the
+        in-graph FedAvg (e.g. FedRA's holder-normalized mean).  The compiled
+        step is cached per plan: a strategy must pass the same aggregation
+        semantics for a given plan across rounds.
+
+        The round-start trainable is donated when none of its leaves can
+        alias another argument (window plans, head-only plans): XLA then
+        writes the committed trainable into the donated buffers.  Full-stack
+        plans keep ``trainable0["adapters"]`` aliased to ``frozen_adapters``,
+        so donation is skipped for them (and for trained embeddings, which
+        alias ``params["embed"]``).
+        """
+        if plan not in self._cohort:
+            client_update = make_client_update(self.cfg, self.chain, plan,
+                                               self.opt)
+            agg = aggregate if aggregate is not None else cohort_fedavg
+            full_stack = plan.adapters is not None and plan.adapters.is_full
+            donate = () if (full_stack or plan.train_embedding) else (0,)
+
+            @functools.partial(jax.jit, donate_argnums=donate)
+            def step(trainable0, params, frozen_adapters, batches, masks,
+                     weights):
+                finals, losses = jax.vmap(
+                    client_update,
+                    in_axes=(None, None, None, 0, 0))(
+                        trainable0, params, frozen_adapters, batches, masks)
+                deltas = tree_map(lambda f, t0: f - t0, finals, trainable0)
+                new = agg(trainable0, deltas, weights, masks)
+                return new, jnp.mean(losses)
+
+            self._cohort[plan] = step
+        return self._cohort[plan]
 
     def eval_fn(self):
         if self._eval is None:
@@ -207,11 +344,16 @@ class PlanEngine:
 
     @staticmethod
     def fedavg(deltas, weights):
-        """Sample-weighted mean of client deltas."""
+        """Sample-weighted mean of client deltas (list-of-pytrees form, still
+        the entry point for the legacy C2A/FwdLLM ``_fedavg`` path).  Each
+        leaf stacks to ``(C, ...)`` and contracts against the normalized
+        weights in one ``tensordot`` instead of C scalar multiply-adds."""
         w = jnp.asarray(weights, jnp.float32)
         w = w / jnp.sum(w)
-        return tree_map(lambda *ds: sum(wi * d for wi, d in zip(w, ds)),
-                        *deltas)
+        return tree_map(
+            lambda *ds: jnp.tensordot(
+                w, jnp.stack(ds).astype(jnp.float32), axes=1),
+            *deltas)
 
 
 # ================================================================== strategy
@@ -268,7 +410,51 @@ class Strategy:
             self.head = trainable["head"]
 
     # -------------------------------------------------- generic plan round
+    def cohort_aggregate(self, plan: TrainablePlan):
+        """In-graph aggregation override for the cohort step, or None for the
+        default fused sample-weighted FedAvg.  A strategy with a bespoke
+        host-side ``aggregate`` must either express it here (traceable over
+        stacked ``(C, ...)`` deltas/masks — see FedRA) or fall back to
+        ``sequential_round``."""
+        return None
+
     def round(self, sim, clients, round_idx):
+        """One federated round on the batched cohort path: group sampled
+        clients by plan, run one jitted ``cohort_step`` per group, commit.
+        Groups commit sequentially in first-seen plan order (in practice a
+        round produces a single group — per-client variation lives in the
+        runtime masks, not the plan)."""
+        if not clients:
+            return
+        if (type(self).aggregate is not Strategy.aggregate
+                and self.cohort_aggregate(self.plan(clients[0], round_idx))
+                is None):
+            # host-side aggregation with no in-graph counterpart
+            return self.sequential_round(sim, clients, round_idx)
+        groups = {}
+        for c in clients:
+            groups.setdefault(self.plan(c, round_idx), []).append(c)
+        for plan, cohort in groups.items():
+            # each group reads the *current* state: a donated trainable from
+            # an earlier group's step must never be re-read, so later groups
+            # see earlier commits (rounds have one group in practice)
+            batches = sim.cohort_batches(cohort, self.chain.local_steps)
+            masks = stack_masks([self.plan_masks(c, round_idx)
+                                 for c in cohort])
+            weights = jnp.asarray([c.n_samples for c in cohort], jnp.float32)
+            tr0 = self.engine.init_trainable(plan, self._params, self.adapters,
+                                             self.head)
+            step = self.engine.cohort_step(plan, self.cohort_aggregate(plan))
+            new, _loss = step(tr0, self._params, self.adapters, batches, masks,
+                              weights)
+            self._params, self.adapters, self.head = self.engine.commit(
+                plan, self._params, self.adapters, self.head, new)
+
+    def sequential_round(self, sim, clients, round_idx):
+        """Legacy per-client dispatch loop: one jitted ``local_step`` call per
+        client per local step, host-side delta aggregation.  Kept as the
+        benchmark baseline (``bench_round``) and the fallback for strategies
+        whose server aggregation cannot be traced into the cohort step."""
         plans, all_masks, deltas, weights = [], [], [], []
         for c in clients:
             plan = self.plan(c, round_idx)

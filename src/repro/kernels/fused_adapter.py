@@ -32,10 +32,16 @@ def _kernel(h_ref, wd_ref, wu_ref, o_ref, *, activation):
                   ).astype(o_ref.dtype)
 
 
-def row_block(d: int, dtype_bytes: int = 4, vmem_budget: int = 12 * 2 ** 20) -> int:
-    """Largest 128-multiple row block whose in+out tiles fit the VMEM budget
-    (minus the resident bottleneck weights)."""
-    bm = vmem_budget // max(1, 2 * d * dtype_bytes)
+def row_block(d: int, dtype_bytes: int, rank: int = 128,
+              vmem_budget: int = 12 * 2 ** 20) -> int:
+    """Largest 8-multiple row block whose in+out tiles fit the VMEM budget
+    *after* subtracting the resident bottleneck weights (2·d·rank·bytes —
+    both projections stay VMEM-resident across the whole grid).
+    ``dtype_bytes`` is the actual element size of the hidden-state dtype
+    (2 for bf16, 4 for f32) — callers pass ``h.dtype.itemsize``."""
+    resident = 2 * d * rank * dtype_bytes
+    avail = max(0, vmem_budget - resident)
+    bm = avail // max(1, 2 * d * dtype_bytes)
     return max(8, min(512, (bm // 8) * 8))
 
 
@@ -46,7 +52,7 @@ def fused_adapter(h, w_down, w_up, activation="gelu", interpret=True, bm=None):
     d = shape[-1]
     h2 = h.reshape(-1, d)
     T = h2.shape[0]
-    bm = bm or row_block(d, h2.dtype.itemsize)
+    bm = bm or row_block(d, h2.dtype.itemsize, rank=w_down.shape[1])
     bm = min(bm, T)
     pad = (-T) % bm
     if pad:
@@ -67,3 +73,45 @@ def fused_adapter(h, w_down, w_up, activation="gelu", interpret=True, bm=None):
     if pad:
         out = out[:T]
     return out.reshape(shape)
+
+
+# -------------------------------------------------------------- training path
+# pallas_call has no built-in reverse-mode rule, so the training forward uses
+# a custom VJP: the fused kernel runs the forward (one HBM read + write of the
+# hidden state), and backward recomputes the tiny bottleneck in plain XLA —
+# standard dense math, cheap relative to the saved forward traffic.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _fused_adapter_df(activation, interpret, bm, h, w_down, w_up):
+    return fused_adapter(h, w_down, w_up, activation=activation,
+                         interpret=interpret, bm=bm)
+
+
+def _df_fwd(activation, interpret, bm, h, w_down, w_up):
+    out = fused_adapter(h, w_down, w_up, activation=activation,
+                        interpret=interpret, bm=bm)
+    return out, (h, w_down, w_up)
+
+
+def _df_bwd(activation, interpret, bm, res, g):
+    h, wd, wu = res
+    shape, d = h.shape, h.shape[-1]
+    h2 = h.reshape(-1, d).astype(jnp.float32)
+    g2 = g.reshape(-1, d).astype(jnp.float32)
+    wd32, wu32 = wd.astype(jnp.float32), wu.astype(jnp.float32)
+    z = h2 @ wd32
+    a, act_vjp = jax.vjp(_ACTS[activation], z)
+    gz = act_vjp(g2 @ wu32.T)[0]                       # (T, r)
+    dh = (g2 + gz @ wd32.T).astype(h.dtype).reshape(shape)
+    dwd = (h2.T @ gz).astype(wd.dtype)
+    dwu = (a.T @ g2).astype(wu.dtype)
+    return dh, dwd, dwu
+
+
+_fused_adapter_df.defvjp(_df_fwd, _df_bwd)
+
+
+def fused_adapter_grad(h, w_down, w_up, activation="gelu", interpret=True,
+                       bm=None):
+    """Differentiable fused adapter — the transformer forward's kernel path
+    (``adapter_apply(use_kernel=True)``)."""
+    return _fused_adapter_df(activation, interpret, bm, h, w_down, w_up)

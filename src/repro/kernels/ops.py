@@ -13,6 +13,7 @@ import jax
 from .cka_gram import cka_gram as _cka_gram
 from .flash_attention import flash_attention as _flash_attention
 from .fused_adapter import fused_adapter as _fused_adapter
+from .fused_adapter import fused_adapter_grad as _fused_adapter_grad
 from .ssm_scan import ssm_scan as _ssm_scan
 
 
@@ -26,6 +27,12 @@ def _interpret() -> bool:
 def fused_adapter(h, w_down, w_up, activation="gelu", **kw):
     kw.setdefault("interpret", _interpret())
     return _fused_adapter(h, w_down, w_up, activation=activation, **kw)
+
+
+def fused_adapter_grad(h, w_down, w_up, activation="gelu", **kw):
+    """Differentiable variant (custom VJP) — what the model forward calls."""
+    kw.setdefault("interpret", _interpret())
+    return _fused_adapter_grad(h, w_down, w_up, activation=activation, **kw)
 
 
 def flash_attention(q, k, v, causal=True, window=None, **kw):

@@ -23,6 +23,8 @@ class AdapterConfig:
     rank: int = 64                  # v — bottleneck width
     activation: str = "gelu"        # f(.)
     dropout: float = 0.0            # kept for API completeness (inference-mode in chain prefix)
+    fused: Optional[bool] = None    # Pallas fused-adapter forward: None →
+                                    # backend-aware (TPU only), True/False force
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

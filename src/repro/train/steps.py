@@ -7,102 +7,69 @@
 * ``make_e2e_train_step``  — Full Adapters† upper bound (end-to-end), for the
   memory comparison in §Dry-run.
 * ``make_prefill_step`` / ``make_decode_step`` — serving entry points.
+
+Both train steps are constructed from a ``TrainablePlan`` and share
+``make_client_update`` with the single-host ``PlanEngine.cohort_step`` —
+one implementation of the scan×vmap client cohort, two execution scales.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..core.dlct import window_scatter, window_slice
+from ..core.adapters import ActiveAdapters
+from ..fed.strategies import TrainablePlan, cohort_fedavg, make_client_update
 from ..models.config import ChainConfig, ModelConfig
-from ..models.transformer import (ChainSegments, decode_step, forward_chain,
-                                  forward_full, prefill)
+from ..models.transformer import ChainSegments, decode_step, prefill
 from ..optim.base import make_optimizer
-from ..train.losses import cross_entropy, gpo_loss, moe_penalty
 from ..utils.tree import tree_map
+
+
+def _make_plan_train_step(cfg: ModelConfig, chain: ChainConfig,
+                          plan: TrainablePlan):
+    """step(params, adapters, batch) -> (adapters', metrics) for any plan.
+
+    batch leaves: (C, local_steps, b, ...) — client cohorts × local steps ×
+    per-step microbatch; vmap strips C, scan strips ls.  M-RoPE ``positions``
+    carry their 3-axis after the cohort axes: (C, ls, 3, b, S).  FedAvg is
+    the uniform mean over the cohort axis — under pjit it lowers to the
+    cross-replica all-reduce that *is* the paper's round communication.
+    """
+    opt = make_optimizer(chain.optimizer, chain.lr)
+    client_update = make_client_update(cfg, chain, plan, opt)
+
+    def step(params, adapters, batch):
+        trainable0 = {"adapters": plan.adapters.train_slice(adapters)}
+        finals, losses = jax.vmap(
+            lambda cb: client_update(trainable0, params, adapters, cb, {}))(
+                batch)
+        deltas = tree_map(lambda f, t0: f - t0, finals, trainable0)
+        C = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        new = cohort_fedavg(trainable0, deltas, jnp.ones((C,), jnp.float32),
+                            {})
+        adapters = plan.adapters.scatter_train(adapters, new["adapters"])
+        return adapters, {"loss": jnp.mean(losses)}
+
+    return step
 
 
 def make_fed_train_step(cfg: ModelConfig, chain: ChainConfig,
                         seg: ChainSegments, gpo_sequential: bool = False):
-    """Returns step(params, adapters, batch) -> (adapters', metrics).
-
-    batch leaves: (C, local_steps, b, ...) — client cohorts × local steps ×
-    per-step microbatch.  ``positions`` (M-RoPE) carries its 3-axis first:
-    (3, C, ls, b, S).
-    """
-    opt = make_optimizer(chain.optimizer, chain.lr)
-    final = seg.prefix + seg.window >= cfg.total_chain_layers
-
-    def cohort_update(params, adapters, cohort_batch):
-        """One client cohort's local training on the window (GPO loss)."""
-        window0 = window_slice(adapters, seg)
-
-        def loss_fn(window, mb):
-            if gpo_sequential and not cfg.is_encdec:
-                out = forward_chain(params, window, adapters, mb, cfg, seg,
-                                    loss_ctx=(mb["labels"], chain.lam, final))
-                from ..train.losses import moe_penalty
-                loss = out["loss"] + moe_penalty(out["aux"], cfg)
-                return loss, {"local": out["local"], "global": out["global"]}
-            out = forward_chain(params, window, adapters, mb, cfg, seg)
-            loss, parts = gpo_loss(out, mb["labels"], cfg, chain.lam, final)
-            return loss, parts
-
-        def one_step(carry, mb):
-            window, opt_state = carry
-            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                window, mb)
-            window, opt_state = opt.step(window, grads, opt_state)
-            return (window, opt_state), loss
-
-        (window, _), losses = jax.lax.scan(
-            one_step, (window0, opt.init(window0)), cohort_batch)
-        delta = tree_map(lambda a, b: a - b, window, window0)
-        return delta, jnp.mean(losses)
-
-    def step(params, adapters, batch):
-        # batch leaves (C, ls, ...): vmap strips C, scan strips ls.  M-RoPE
-        # positions use layout (C, ls, 3, b, S) so each microbatch sees (3,b,S).
-        deltas, losses = jax.vmap(
-            lambda cb: cohort_update(params, adapters, cb))(batch)
-        # FedAvg: uniform-weighted mean over cohorts  ≡ cross-replica all-reduce
-        delta = tree_map(lambda d: jnp.mean(d, axis=0), deltas)
-        window = tree_map(lambda w, d: (w + d).astype(w.dtype),
-                          window_slice(adapters, seg), delta)
-        adapters = window_scatter(adapters, window, seg)
-        return adapters, {"loss": jnp.mean(losses)}
-
-    return step
+    """One CHAINFED federated round on the DLCT window ``seg`` (GPO loss)."""
+    spec = ActiveAdapters.window(cfg.total_chain_layers, seg.prefix,
+                                 seg.window)
+    loss = "gpo_seq" if gpo_sequential and not cfg.is_encdec else "gpo"
+    plan = TrainablePlan(adapters=spec, train_head=False, loss=loss,
+                         lam=chain.lam, remat=True)
+    return _make_plan_train_step(cfg, chain, plan)
 
 
 def make_e2e_train_step(cfg: ModelConfig, chain: ChainConfig):
     """Full Adapters† — end-to-end update of every adapter (the paper's
     memory-unconstrained upper bound).  Same batch layout as the fed step."""
-    opt = make_optimizer(chain.optimizer, chain.lr)
-
-    def cohort_update(params, adapters, cohort_batch):
-        def loss_fn(ad, mb):
-            logits, aux = forward_full(params, ad, mb, cfg, remat=True)
-            return cross_entropy(logits, mb["labels"]) + moe_penalty(aux, cfg)
-
-        def one_step(carry, mb):
-            ad, opt_state = carry
-            loss, grads = jax.value_and_grad(loss_fn)(ad, mb)
-            ad, opt_state = opt.step(ad, grads, opt_state)
-            return (ad, opt_state), loss
-
-        (ad, _), losses = jax.lax.scan(one_step, (adapters, opt.init(adapters)),
-                                       cohort_batch)
-        return tree_map(lambda a, b: a - b, ad, adapters), jnp.mean(losses)
-
-    def step(params, adapters, batch):
-        deltas, losses = jax.vmap(
-            lambda cb: cohort_update(params, adapters, cb))(batch)
-        delta = tree_map(lambda d: jnp.mean(d, axis=0), deltas)
-        adapters = tree_map(lambda a, d: (a + d).astype(a.dtype), adapters, delta)
-        return adapters, {"loss": jnp.mean(losses)}
-
-    return step
+    plan = TrainablePlan(adapters=ActiveAdapters.full(cfg.total_chain_layers),
+                         train_head=False, loss="ce", remat=True)
+    return _make_plan_train_step(cfg, chain, plan)
 
 
 # ------------------------------------------------------------------ serving

@@ -1,0 +1,202 @@
+"""Batched cohort execution (ISSUE 2): cohort-vs-sequential equivalence for
+a windowed (chainfed), a layer-masked (fedra) and a rank-masked (flora)
+strategy, the cohort batch stacking/padding, the fused FedAvg, the
+plan-driven pod step, and fused-vs-unfused adapter numerics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.adapters import ActiveAdapters
+from repro.data.synthetic import (DATASETS, classification_batch,
+                                  make_classification)
+from repro.fed.engine import FedSim
+from repro.fed.registry import make_strategy
+from repro.fed.strategies import PlanEngine, stack_masks
+from repro.models.config import ChainConfig, FedConfig
+from repro.train.losses import IGNORE
+
+CFG = get_config("bert_tiny").replace(n_layers=4, d_model=64, d_ff=128)
+CHAIN = ChainConfig(window=2, local_steps=2, lr=1e-3)
+KEY = jax.random.PRNGKey(0)
+
+
+def build_sim(seed=3, n_clients=6, clients_per_round=3, batch_size=4):
+    spec = dataclasses.replace(DATASETS["agnews"], vocab=CFG.vocab_size)
+    tokens, labels = make_classification(spec)
+    batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
+                            classification_batch(spec, tokens, labels,
+                                                 idx).items()}
+    fed = FedConfig(n_clients=n_clients, clients_per_round=clients_per_round,
+                    seed=seed)
+    return FedSim(CFG, fed, tokens, labels, batch_fn, batch_size=batch_size,
+                  memory_constrained=False)
+
+
+def run_one_round(name, path, rounds=2):
+    """Fresh sim + strategy (identical seeds), then ``rounds`` rounds on the
+    requested path; returns the aggregated (adapters, head)."""
+    sim = build_sim()
+    opts = {"use_foat": False} if name == "chainfed" else {}
+    strat = make_strategy(name, CFG, CHAIN, KEY, **opts)
+    if name == "chainfed":
+        strat._foat_done = True
+    for r in range(rounds):
+        clients = sim.sample_clients(strat.memory_method,
+                                     **strat.memory_kwargs(r))
+        if path == "sequential":
+            strat.sequential_round(sim, clients, r)
+        else:
+            strat.round(sim, clients, r)
+    head = None if strat.head is None else np.asarray(strat.head["w"])
+    return (np.asarray(strat.adapters["down"]),
+            np.asarray(strat.adapters["up"]), head)
+
+
+# ------------------------------------------------- cohort ≡ sequential round
+@pytest.mark.parametrize("name", ["chainfed", "fedra", "flora"])
+def test_cohort_matches_sequential(name):
+    """Windowed (chainfed), layer-masked (fedra) and rank-masked (flora)
+    rounds must produce the same aggregated adapters/head on both paths."""
+    seq = run_one_round(name, "sequential")
+    coh = run_one_round(name, "cohort")
+    for a, b in zip(seq, coh):
+        if a is not None:
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-5)
+
+
+def test_cohort_round_uses_cohort_step():
+    """The generic round must hit the cohort cache, not the per-client one."""
+    sim = build_sim()
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    clients = sim.sample_clients(strat.memory_method)
+    strat.round(sim, clients, 0)
+    assert len(strat.engine._cohort) == 1
+    assert len(strat.engine._steps) == 0
+
+
+# --------------------------------------------------------- batch stacking
+def test_cohort_batches_layout():
+    sim = build_sim()
+    clients = sim.clients[:3]
+    batches = sim.cohort_batches(clients, 2)
+    assert batches["tokens"].shape == (3, 2, 4, DATASETS["agnews"].seq_len)
+    assert batches["labels"].shape == batches["tokens"].shape
+    # non-batch leaves stack without padding logic
+    assert batches["class_tokens"].shape[:2] == (3, 2)
+
+
+def test_cohort_batches_pads_small_clients_with_ignore():
+    """A client whose shard is smaller than the batch size is padded to the
+    cohort batch size with IGNORE labels — zero loss weight, so padding is
+    exact under the masked CE mean."""
+    sim = build_sim(batch_size=4)
+    small = sim.clients[0]
+    small.sampler.bs = 2            # force a short batch for this client
+    batches = sim.cohort_batches([small, sim.clients[1]], 1)
+    assert batches["tokens"].shape[2] == 4
+    lab = np.asarray(batches["labels"][0, 0])
+    assert np.all(lab[2:] == IGNORE)
+    assert np.any(np.asarray(batches["labels"][1, 0]) != IGNORE)
+
+
+def test_stack_masks():
+    ms = [{"layer_mask": jnp.arange(4.0)}, {"layer_mask": jnp.ones(4)}]
+    out = stack_masks(ms)
+    assert out["layer_mask"].shape == (2, 4)
+    assert stack_masks([]) == {}
+    assert stack_masks([{}, {}]) == {}
+
+
+# ------------------------------------------------------------- fused FedAvg
+def test_fedavg_weighted_mean():
+    deltas = [{"w": jnp.full((2, 2), float(i))} for i in range(3)]
+    out = PlanEngine.fedavg(deltas, [1.0, 1.0, 2.0])
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full((2, 2), (0 + 1 + 2 * 2) / 4.0),
+                               rtol=1e-6)
+
+
+# ------------------------------------------------- plan-driven pod fed step
+def test_pod_fed_step_window_confinement():
+    """The pjit fed step built from a TrainablePlan updates only the DLCT
+    window slice of the stacked adapters."""
+    from repro.models.transformer import ChainSegments, init_adapters, init_lm
+    from repro.train.steps import make_fed_train_step
+
+    params = init_lm(jax.random.PRNGKey(0), CFG)
+    adapters = init_adapters(jax.random.PRNGKey(1), CFG)
+    seg = ChainSegments(1, 2)
+    step = make_fed_train_step(CFG, CHAIN.replace(optimizer="sgd", lr=1e-2),
+                               seg)
+    batch = {"tokens": jnp.ones((2, 2, 2, 8), jnp.int32),
+             "labels": jnp.ones((2, 2, 2, 8), jnp.int32)}
+    new, metrics = jax.jit(step)(params, adapters, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    delta = np.asarray(jnp.abs(new["down"] - adapters["down"]
+                               ).sum(axis=(1, 2)))
+    assert np.all(delta[1:3] > 0.0)
+    assert np.all(delta[:1] == 0.0) and np.all(delta[3:] == 0.0)
+
+
+def test_pod_fed_step_matches_gpo_seq():
+    """gpo and gpo_seq hooks agree through the pod step (same math, different
+    checkpointing)."""
+    from repro.models.transformer import ChainSegments, init_adapters, init_lm
+    from repro.train.steps import make_fed_train_step
+
+    params = init_lm(jax.random.PRNGKey(0), CFG)
+    adapters = init_adapters(jax.random.PRNGKey(1), CFG)
+    seg = ChainSegments(1, 2)
+    batch = {"tokens": jnp.ones((2, 1, 2, 8), jnp.int32),
+             "labels": jnp.ones((2, 1, 2, 8), jnp.int32)}
+    outs = []
+    for gpo_seq in (False, True):
+        step = make_fed_train_step(CFG, CHAIN, seg, gpo_sequential=gpo_seq)
+        new, m = jax.jit(step)(params, adapters, batch)
+        outs.append((np.asarray(new["down"]), float(m["loss"])))
+    np.testing.assert_allclose(outs[0][0], outs[1][0], atol=1e-6)
+    assert abs(outs[0][1] - outs[1][1]) < 1e-5
+
+
+# ------------------------------------------------ fused adapter kernel path
+def test_fused_adapter_forward_full_parity():
+    """forward_full with the fused Pallas kernel path (cfg.adapter.fused=True,
+    interpret on CPU) matches the plain XLA path — values and gradients."""
+    from repro.models.transformer import forward_full, init_adapters, init_lm
+    from repro.train.losses import cross_entropy
+
+    cfg = CFG.replace(n_layers=2)
+    cfgk = cfg.replace(adapter=cfg.adapter.replace(fused=True))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    ad = init_adapters(jax.random.PRNGKey(1), cfg)
+    ad = {"down": ad["down"],
+          "up": 0.05 * jax.random.normal(jax.random.PRNGKey(2),
+                                         ad["up"].shape)}
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32),
+             "labels": jnp.ones((2, 8), jnp.int32)}
+
+    def loss(adx, c):
+        logits, _ = forward_full(params, adx, batch, c, remat=False)
+        return cross_entropy(logits, batch["labels"])
+
+    l_ref, g_ref = jax.value_and_grad(loss)(ad, cfg)
+    l_k, g_k = jax.value_and_grad(loss)(ad, cfgk)
+    np.testing.assert_allclose(float(l_ref), float(l_k), rtol=1e-6)
+    for k in g_ref:
+        np.testing.assert_allclose(np.asarray(g_ref[k]), np.asarray(g_k[k]),
+                                   atol=1e-6)
+
+
+def test_row_block_subtracts_resident_weights():
+    from repro.kernels.fused_adapter import row_block
+
+    # the weight footprint must shrink the block: with a huge rank the
+    # resident weights eat the whole budget and the floor kicks in
+    assert row_block(8192, 4, rank=128) < row_block(8192, 4, rank=1)
+    assert row_block(8192, 4, rank=10 ** 6) == 8
+    # bf16 tiles fit twice the rows of f32
+    assert row_block(4096, 2, rank=64) >= row_block(4096, 4, rank=64)
