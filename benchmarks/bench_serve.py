@@ -1,0 +1,178 @@
+"""Serving-throughput benchmark: single-tenant vs mixed-tenant batches on
+the multi-tenant serving engine (ISSUE 3 tentpole).
+
+The engine's design claim is that tenant mixing is free at the program
+level: tenant ids are traced data routed through one compiled
+prefill/decode, so a mixed-tenant batch (every row a different adapter
+stack, incl. a fused synthetic tenant) should sustain roughly the
+single-tenant tokens/s — the only extra work is the per-layer row gather.
+This benchmark measures exactly that ratio, plus the continuous-batching
+serve loop (slot admission from a request queue) on the same workload.
+
+Two workloads:
+
+* ``qwen2_sm``  — the qwen2-0.5b smoke trunk (dense GQA + qkv bias), the
+  serving config the CLI demo and decode-exactness tests use.
+* ``llama_sm``  — the mid-size LLaMA-class trunk shared with
+  ``bench_round`` (6 layers, d_model 256): more compute per token, so the
+  routing overhead is amortized — the honest end-to-end number.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve            # full sweep
+    PYTHONPATH=src python -m benchmarks.bench_serve --fast
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # CI guard
+
+Writes ``BENCH_serve_throughput.json`` (see --out): per workload the
+single-tenant / mixed-tenant / continuous tokens/s and the mixed/single
+ratio.  This file is the serving-perf baseline future PRs are judged
+against; ``benchmarks.report`` renders it.  ``--smoke`` asserts the
+regression gate: mixed-tenant tokens/s ≥ 0.7× single-tenant.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.serve import Request, ServeEngine
+from repro.models import transformer as T
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serve_throughput.json"
+
+GATE = 0.7          # mixed-tenant tokens/s must stay ≥ GATE × single-tenant
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    cfg: object
+    batch: int
+    prompt_len: int
+    gen: int
+    tenants: int        # registered single-task tenants (a fused one is added)
+
+
+def workloads(smoke: bool):
+    if smoke:
+        return {"qwen2_smoke": Workload(get_smoke_config("qwen2_0_5b"),
+                                        batch=4, prompt_len=8, gen=8,
+                                        tenants=3)}
+    return {
+        "qwen2_sm": Workload(get_smoke_config("qwen2_0_5b"), batch=8,
+                             prompt_len=16, gen=24, tenants=3),
+        "llama_sm": Workload(get_config("llama_100m").replace(
+                                 n_layers=6, d_model=256, n_heads=8,
+                                 n_kv_heads=8, d_ff=768, vocab_size=2048),
+                             batch=8, prompt_len=16, gen=24, tenants=3),
+    }
+
+
+def build_engine(wl: Workload, seed=0):
+    """Engine with ``wl.tenants`` perturbed tenant stacks + a fused tenant."""
+    key = jax.random.PRNGKey(seed)
+    params = T.init_lm(key, wl.cfg)
+    base = T.init_adapters(key, wl.cfg)
+    engine = ServeEngine(params, wl.cfg, base)
+    names = []
+    for i in range(wl.tenants):
+        k = jax.random.PRNGKey(100 + i)
+        stack = jax.tree_util.tree_map(
+            lambda x: x + 0.02 * jax.random.normal(k, x.shape, x.dtype), base)
+        names.append(engine.register_tenant(f"tenant{i}", stack=stack))
+    engine.fuse_tenants("fused", names[:2], weights=[0.5, 0.5])
+    return engine, names + ["fused"]
+
+
+def time_tok_s(fn, n_tokens, iters):
+    """Tokens/s of ``fn`` (one warmup call covers compilation)."""
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return n_tokens * iters / (time.perf_counter() - t0)
+
+
+def bench_one(wname, wl: Workload, iters, seed=0):
+    engine, names = build_engine(wl, seed)
+    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                 (wl.batch, wl.prompt_len), 4,
+                                 wl.cfg.vocab_size)
+    single = [names[0]] * wl.batch
+    mixed = [names[i % len(names)] for i in range(wl.batch)]
+    n_tok = wl.batch * wl.gen
+
+    out = {}
+    for label, rows in (("single", single), ("mixed", mixed)):
+        tok_s = time_tok_s(lambda: engine.generate(prompts, rows, wl.gen),
+                           n_tok, iters)
+        out[label] = {"tokens_per_s": tok_s, "tenants": len(set(rows))}
+    out["ratio"] = out["mixed"]["tokens_per_s"] / out["single"]["tokens_per_s"]
+
+    # continuous batching: 2× oversubscribed queue over `batch` slots
+    reqs = [Request(i, np.asarray(prompts[i % wl.batch]), mixed[i % wl.batch],
+                    wl.gen) for i in range(2 * wl.batch)]
+    tok_s = time_tok_s(
+        lambda: engine.serve(list(reqs), slots=wl.batch,
+                             prompt_len=wl.prompt_len, max_new_cap=wl.gen),
+        2 * n_tok, max(1, iters // 2))
+    out["continuous"] = {"tokens_per_s": tok_s, "requests": len(reqs),
+                         "slots": wl.batch}
+    return out
+
+
+def run(fast: bool = False, smoke: bool = False, iters: int = None,
+        out_path=DEFAULT_OUT):
+    iters = iters or (2 if smoke else (3 if fast else 6))
+    results, rows = [], []
+    for wname, wl in workloads(smoke).items():
+        r = bench_one(wname, wl, iters)
+        rec = {"arch": wname, "batch": wl.batch, "prompt_len": wl.prompt_len,
+               "gen": wl.gen, "n_tenants": wl.tenants + 1, "iters": iters,
+               **r}
+        results.append(rec)
+        rows.append(
+            f"serve/{wname},"
+            f"{1e6 / r['mixed']['tokens_per_s']:.0f},"
+            f"single_tok_s={r['single']['tokens_per_s']:.1f}"
+            f";mixed_tok_s={r['mixed']['tokens_per_s']:.1f}"
+            f";ratio={r['ratio']:.2f}"
+            f";continuous_tok_s={r['continuous']['tokens_per_s']:.1f}")
+        print(rows[-1], flush=True)
+    doc = {"backend": jax.default_backend(),
+           "mode": "smoke" if smoke else ("fast" if fast else "full"),
+           "gate_mixed_over_single": GATE,
+           "results": results}
+    pathlib.Path(out_path).write_text(json.dumps(doc, indent=2) + "\n")
+    return rows, doc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config + regression gate: mixed-tenant "
+                         f"tokens/s must be ≥ {GATE}× single-tenant")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
+    rows, doc = run(fast=args.fast, smoke=args.smoke, iters=args.iters,
+                    out_path=args.out)
+    if args.smoke:
+        for rec in doc["results"]:
+            assert rec["ratio"] >= GATE, (
+                f"mixed-tenant serving regressed: {rec['arch']} ratio "
+                f"{rec['ratio']:.2f} < {GATE} (single "
+                f"{rec['single']['tokens_per_s']:.1f} tok/s, mixed "
+                f"{rec['mixed']['tokens_per_s']:.1f} tok/s)")
+        print(f"# smoke OK: mixed-tenant ≥ {GATE}× single-tenant tokens/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ import json
 import pathlib
 
 from .bench_round import DEFAULT_OUT as ROUND_JSON
+from .bench_serve import DEFAULT_OUT as SERVE_JSON
 from .roofline import DRYRUN, PEAK_FLOPS, HBM_BW, ICI_BW, analyze
 
 ORDER = ["gemma_2b", "olmoe_1b_7b", "deepseek_67b", "qwen2_0_5b",
@@ -116,6 +117,30 @@ def round_throughput_table(path=ROUND_JSON):
     return "\n".join(lines)
 
 
+def serve_throughput_table(path=SERVE_JSON):
+    """§Serve-throughput table from BENCH_serve_throughput.json (written by
+    ``benchmarks.bench_serve``); None when the artifact is absent."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    doc = json.loads(path.read_text())
+    lines = [f"backend: {doc.get('backend', '?')}, "
+             f"mode: {doc.get('mode', '?')}, "
+             f"gate: mixed ≥ {doc.get('gate_mixed_over_single', '?')}× single",
+             "",
+             "| workload | batch | tenants | single tok/s | mixed tok/s | "
+             "mixed/single | continuous tok/s |",
+             "|---|---|---|---|---|---|---|"]
+    for r in doc.get("results", []):
+        lines.append(
+            f"| {r['arch']} | {r['batch']} | {r['n_tenants']} "
+            f"| {r['single']['tokens_per_s']:.1f} "
+            f"| {r['mixed']['tokens_per_s']:.1f} "
+            f"| {r['ratio']:.2f}× "
+            f"| {r['continuous']['tokens_per_s']:.1f} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
@@ -130,6 +155,10 @@ def main():
     if rt is not None:
         print("\n## §Round throughput (single host)\n")
         print(rt)
+    st = serve_throughput_table()
+    if st is not None:
+        print("\n## §Serve throughput (single host)\n")
+        print(st)
 
 
 if __name__ == "__main__":

@@ -44,15 +44,38 @@ def save_pytree(path, tree, step: int = 0, meta: dict | None = None):
     return path
 
 
-def load_pytree(path, like):
-    """Restore into the structure of ``like`` (shape-checked)."""
-    payload = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=False)
+def _restore(payload, like):
+    """Rebuild an unpacked payload into the structure of ``like``
+    (shape-checked)."""
     leaves, treedef = jax.tree_util.tree_flatten(like)
     got = [_unpack_leaf(d) for d in payload["leaves"]]
     assert len(got) == len(leaves), (len(got), len(leaves))
     for g, l in zip(got, leaves):
         assert tuple(g.shape) == tuple(l.shape), (g.shape, l.shape)
-    return jax.tree_util.tree_unflatten(treedef, got), payload["step"]
+    return jax.tree_util.tree_unflatten(treedef, got)
+
+
+def load_pytree(path, like):
+    """Restore into the structure of ``like`` (shape-checked)."""
+    payload = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=False)
+    return _restore(payload, like), payload["step"]
+
+
+def save_adapter_stack(path, stack, tenant: str = "", meta: dict | None = None):
+    """Persist one chain-tuned adapter stack — the per-task artifact a tenant
+    registers with the serving engine.  ``meta`` can carry the trainable span
+    (``l_start``/``window``) so partial-chain checkpoints re-register through
+    the matching ``ActiveAdapters`` spec."""
+    return save_pytree(path, {"adapters": stack},
+                       meta={"tenant": tenant, **(meta or {})})
+
+
+def load_adapter_stack(path, like):
+    """Restore a tenant adapter stack into the structure of ``like``
+    (shape-checked).  Returns (stack, meta)."""
+    payload = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=False)
+    tree = _restore(payload, {"adapters": like})
+    return tree["adapters"], payload.get("meta", {})
 
 
 def save_train_state(path, params, adapters, round_idx, extra=None):

@@ -134,8 +134,12 @@ class ActiveAdapters:
         return self.select_role(stack, TRAIN)
 
     def scatter_train(self, stack, value):
-        """Write an updated trainable sub-stack back into the full stack."""
+        """Write an updated trainable sub-stack back into the full stack.
+        A full-span spec returns ``value`` itself — ``stack`` is never read,
+        so a donated round-start stack stays legal to commit."""
         a, b = self.train_span
+        if a == 0 and b == self.n_layers:
+            return value
         return jax.tree_util.tree_map(
             lambda full, w: jnp.concatenate(
                 [full[:a], w.astype(full.dtype), full[b:]], axis=0),
@@ -144,19 +148,87 @@ class ActiveAdapters:
 
 class AdapterLibrary:
     """Named adapter stacks + an active composition — the adapter-hub
-    ``add_adapter`` / ``active_adapters`` surface, kept as the seam for
-    multi-task adapter fusion and per-tenant serving (each tenant loads its
-    stack once; ``resolve``/``fuse`` pick what a forward pass sees)."""
+    ``add_adapter`` / ``active_adapters`` surface, and the tenant registry of
+    the multi-tenant serving engine (``repro.launch.serve``).
 
-    def __init__(self):
+    Each registered stack owns a stable integer **slot** (registration
+    order); ``stacked()`` packs all stacks into one ``(T, L, ...)`` pytree
+    and ``tenant_ids`` maps names to slot indices — together they are the
+    gather table a single compiled mixed-tenant forward routes batch rows
+    through.  Chain-tuned *partial* stacks (a DLCT window checkpoint)
+    register through an ``ActiveAdapters`` spec: the window is scattered
+    into the library's base stack, so partial and full tenants serve through
+    the same ``(T, L, ...)`` layout.  ``fuse`` composes stacks
+    AdapterFusion-style and can register the result as a synthetic tenant.
+    """
+
+    def __init__(self, base=None):
         self._stacks: Dict[str, object] = {}
         self._active: Tuple[str, ...] = ()
+        self._order: list = []          # registration order == tenant slots
+        self._base = base               # template for partial-chain tenants
+        self._stacked = None            # (T, L, ...) cache
+        self._scan = None               # (L, T, ...) scan-layout cache
 
-    def add(self, name: str, stack) -> None:
+    def add(self, name: str, stack, spec: "ActiveAdapters | None" = None) -> None:
+        """Register a stack.  With ``spec``, ``stack`` holds only the spec's
+        trainable span (a chain-tuned window); it is scattered into the
+        library's base stack so the tenant serves a full chain."""
+        if spec is not None:
+            if self._base is None:
+                raise ValueError("partial-chain registration needs a library "
+                                 "base stack (AdapterLibrary(base=...))")
+            stack = spec.scatter_train(self._base, stack)
         self._stacks[name] = stack
+        if name not in self._order:
+            self._order.append(name)
+        self._stacked = self._scan = None
 
     def names(self):
         return tuple(sorted(self._stacks))
+
+    def __len__(self):
+        return len(self._order)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._stacks
+
+    # --------------------------------------------------------- tenant slots
+    def tenant_id(self, name: str) -> int:
+        """Stable slot of a registered stack in the ``(T, L, ...)`` layout."""
+        try:
+            return self._order.index(name)
+        except ValueError:
+            raise KeyError(f"unknown tenant {name!r}; have "
+                           f"{tuple(self._order)}") from None
+
+    def tenant_ids(self, names) -> jnp.ndarray:
+        """(B,) int32 row-routing vector for a batch of tenant names."""
+        return jnp.asarray([self.tenant_id(n) for n in names], jnp.int32)
+
+    def stacked(self):
+        """All registered stacks packed as one ``(T, L, ...)`` pytree in slot
+        order — the gather table of the mixed-tenant forward.  Cached until
+        the next registration (tenant onboarding re-stacks once, not per
+        batch)."""
+        if not self._order:
+            raise ValueError("empty library; add() at least one stack")
+        if self._stacked is None:
+            parts = [self._stacks[n] for n in self._order]
+            self._stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *parts)
+        return self._stacked
+
+    def stacked_scan(self):
+        """``stacked()`` transposed to the scan layout ``(L, T, ...)`` the
+        multi-tenant forwards consume (one ``(T, ...)`` slab per layer-scan
+        step).  Cached on the host like ``stacked()`` — transposing here,
+        once per registration change, keeps the full-library copy out of the
+        compiled per-token decode."""
+        if self._scan is None:
+            self._scan = jax.tree_util.tree_map(
+                lambda x: jnp.swapaxes(x, 0, 1), self.stacked())
+        return self._scan
 
     @property
     def active_adapters(self) -> Tuple[str, ...]:
@@ -172,6 +244,9 @@ class AdapterLibrary:
         """The stack a forward pass should use: a single named stack, or the
         (uniform) fusion of the active composition."""
         if name is not None:
+            if name not in self._stacks:
+                raise KeyError(f"unknown tenant {name!r}; have "
+                               f"{tuple(self._order)}")
             return self._stacks[name]
         if not self._active:
             raise ValueError("no active adapters; call set_active() first")
@@ -179,19 +254,28 @@ class AdapterLibrary:
             return self._stacks[self._active[0]]
         return self.fuse()
 
-    def fuse(self, weights=None):
-        """AdapterFusion-style linear fusion of the active stacks."""
-        names = self._active
+    def fuse(self, weights=None, names=None, into: str | None = None):
+        """AdapterFusion-style linear fusion of ``names`` (default: the
+        active composition).  ``into`` registers the fused stack as a
+        synthetic tenant, so a weighted multi-task composition serves through
+        the same row-routing path as any single-task stack."""
+        names = tuple(names) if names is not None else self._active
         if not names:
             raise ValueError("no active adapters; call set_active() first")
+        missing = [n for n in names if n not in self._stacks]
+        if missing:
+            raise KeyError(f"unknown adapters {missing}; have {self.names()}")
         if weights is None:
             weights = [1.0 / len(names)] * len(names)
         if len(weights) != len(names):
             raise ValueError(f"{len(weights)} weights for {len(names)} "
                              f"active adapters {names}")
         parts = [self._stacks[n] for n in names]
-        return jax.tree_util.tree_map(
+        fused = jax.tree_util.tree_map(
             lambda *xs: sum(w * x for w, x in zip(weights, xs)), *parts)
+        if into is not None:
+            self.add(into, fused)
+        return fused
 
 
 def adapter_init(key, cfg: ModelConfig):
@@ -232,6 +316,32 @@ def adapter_apply(p, h, cfg: ModelConfig, use_kernel=None):
     act = ACTIVATIONS[cfg.adapter.activation]
     z = act(h @ p["down"].astype(h.dtype))
     return h + z @ p["up"].astype(h.dtype)
+
+
+def adapter_apply_routed(p, h, tenant_ids, cfg: ModelConfig, use_kernel=None):
+    """Multi-tenant adapter apply: each batch row runs *its own tenant's*
+    adapter.  ``p`` leaves are ``(T, ...)`` (one layer of the library's
+    ``(T, L, ...)`` stack), ``h`` is ``(B, S, d)``, ``tenant_ids`` ``(B,)``.
+    Tenant ids are traced data, so one compiled program serves any tenant
+    mix.  Kernel dispatch mirrors ``adapter_apply``: the tenant-routed Pallas
+    kernel (scalar-prefetched ids pick each row block's weights — the gather
+    never materializes) where supported, a gather + batched einsum in XLA
+    elsewhere."""
+    use = use_kernel if use_kernel is not None else cfg.adapter.fused
+    if use is None:
+        use = jax.default_backend() == "tpu"
+    if use:
+        from ..kernels.fused_adapter import _ACTS
+        if cfg.adapter.activation in _ACTS and h.ndim == 3:
+            from ..kernels import ops as kops
+            return kops.fused_adapter_tenants(
+                h, tenant_ids, p["down"], p["up"],
+                activation=cfg.adapter.activation)
+    act = ACTIVATIONS[cfg.adapter.activation]
+    down = p["down"][tenant_ids].astype(h.dtype)       # (B, d, r)
+    up = p["up"][tenant_ids].astype(h.dtype)           # (B, r, d)
+    z = act(jnp.einsum("bsd,bdr->bsr", h, down))
+    return h + jnp.einsum("bsr,brd->bsd", z, up)
 
 
 def adapter_chain_apply(stack, h, cfg: ModelConfig):

@@ -42,8 +42,9 @@ def foat_scores(layer_outputs, use_kernel: bool = False):
 
 
 def aggregate_scores(client_scores, weights=None):
-    """Server aggregation of per-client CKA vectors (Fig. 7: upload + mean)."""
-    S = jnp.stack(client_scores)                       # (n_clients, L)
+    """Server aggregation of per-client CKA vectors (Fig. 7: upload + mean).
+    Accepts a list of (L,) vectors or one stacked (n_clients, L) array."""
+    S = jnp.asarray(client_scores)                     # (n_clients, L)
     if weights is None:
         return jnp.mean(S, axis=0)
     w = jnp.asarray(weights, jnp.float32)
@@ -64,14 +65,24 @@ def run_foat(params, adapters, client_batches, cfg, threshold: float,
              weights=None, use_kernel: bool = False):
     """Phase-1 setup (Algorithm 1, lines 1-2): each client one forward pass,
     CKA scores, server aggregation, boundary selection.
-    client_batches: list of batch dicts (one per participating client)."""
+
+    ``client_batches`` — one stacked batch dict with ``(C, b, ...)`` leaves,
+    or a list of per-client batch dicts (stacked host-side when shapes
+    agree).  Either way the setup pass is ONE jitted evaluation: ``vmap``
+    over the client axis replaces the legacy per-client dispatch loop, so C
+    clients cost one compilation and one dispatch."""
+    import numpy as np
+
     from ..models.transformer import collect_layer_outputs
 
-    @jax.jit
     def client_scores(batch):
         outs = collect_layer_outputs(params, adapters, batch, cfg)
         return foat_scores(outs, use_kernel)
 
-    scores = [client_scores(b) for b in client_batches]
+    if isinstance(client_batches, (list, tuple)):
+        client_batches = {
+            k: jnp.asarray(np.stack([np.asarray(b[k]) for b in client_batches]))
+            for k in client_batches[0]}
+    scores = jax.jit(jax.vmap(client_scores))(client_batches)   # (C, L)
     agg = aggregate_scores(scores, weights)
     return select_start_layer(agg, threshold), agg

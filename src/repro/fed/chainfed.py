@@ -44,7 +44,12 @@ class ChainFed(Strategy):
         if not self.use_foat:
             return
         clients = sim.clients[:min(8, len(sim.clients))]
-        batches = [sim.client_batches(c, 1)[0] for c in clients]
+        # one stacked (C, b, ...) evaluation instead of C host-side batches —
+        # cohort_batches assembles the stack in numpy (one transfer per leaf)
+        # and pads short clients to the cohort batch size (padding repeats a
+        # row, a sample-duplication in that client's CKA statistic)
+        stacked = sim.cohort_batches(clients, 1)   # (C, 1, b, ...) leaves
+        batches = {k: v[:, 0] for k, v in stacked.items()}
         weights = [c.n_samples for c in clients]
         self.setup_foat(batches, weights)
 

@@ -276,23 +276,41 @@ class PlanEngine:
         step is cached per plan: a strategy must pass the same aggregation
         semantics for a given plan across rounds.
 
-        The round-start trainable is donated when none of its leaves can
-        alias another argument (window plans, head-only plans): XLA then
-        writes the committed trainable into the donated buffers.  Full-stack
-        plans keep ``trainable0["adapters"]`` aliased to ``frozen_adapters``,
-        so donation is skipped for them (and for trained embeddings, which
-        alias ``params["embed"]``).
+        **Donation** — the round-start trainable is split into a donated and
+        a referenced argument so every leaf that cannot alias another
+        argument is donated (XLA writes the committed trainable into the
+        donated buffers):
+
+        * full-stack CE plans don't read ``frozen_adapters`` at all, so the
+          engine drops it from the call and donates the whole trainable —
+          adapter buffers included (the ROADMAP follow-up);
+        * full-span GPO plans still read prefix/suffix from
+          ``frozen_adapters`` (which *is* the trainable's adapter buffer),
+          so only the adapters leaf rides the referenced argument;
+        * trained embeddings alias ``params["embed"]`` and stay referenced.
+
+        A donated trainable is consumed: callers must use the returned
+        committed trainable, never the arrays they passed in
+        (``ActiveAdapters.scatter_train`` short-circuits full spans for
+        exactly this reason).
         """
         if plan not in self._cohort:
             client_update = make_client_update(self.cfg, self.chain, plan,
                                                self.opt)
             agg = aggregate if aggregate is not None else cohort_fedavg
             full_stack = plan.adapters is not None and plan.adapters.is_full
-            donate = () if (full_stack or plan.train_embedding) else (0,)
+            needs_frozen = (plan.adapters is None or not full_stack
+                            or plan.loss.startswith("gpo"))
+            ref_keys = ()
+            if full_stack and needs_frozen:
+                ref_keys += ("adapters",)
+            if plan.train_embedding:
+                ref_keys += ("embed",)
 
-            @functools.partial(jax.jit, donate_argnums=donate)
-            def step(trainable0, params, frozen_adapters, batches, masks,
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def step(tr_don, tr_ref, params, frozen_adapters, batches, masks,
                      weights):
+                trainable0 = {**tr_don, **tr_ref}
                 finals, losses = jax.vmap(
                     client_update,
                     in_axes=(None, None, None, 0, 0))(
@@ -301,7 +319,18 @@ class PlanEngine:
                 new = agg(trainable0, deltas, weights, masks)
                 return new, jnp.mean(losses)
 
-            self._cohort[plan] = step
+            def call(trainable0, params, frozen_adapters, batches, masks,
+                     weights):
+                tr_don = {k: v for k, v in trainable0.items()
+                          if k not in ref_keys}
+                tr_ref = {k: trainable0[k] for k in ref_keys
+                          if k in trainable0}
+                if not needs_frozen:
+                    frozen_adapters = {}
+                return step(tr_don, tr_ref, params, frozen_adapters, batches,
+                            masks, weights)
+
+            self._cohort[plan] = call
         return self._cohort[plan]
 
     def eval_fn(self):

@@ -75,6 +75,53 @@ def fused_adapter(h, w_down, w_up, activation="gelu", interpret=True, bm=None):
     return out.reshape(shape)
 
 
+# ------------------------------------------------------------- serving path
+def _tenant_kernel(ids_ref, h_ref, wd_ref, wu_ref, o_ref, *, activation):
+    # wd/wu blocks were already routed to this row's tenant by the index_map;
+    # ids_ref is only consumed there
+    h = h_ref[0].astype(jnp.float32)
+    z = _ACTS[activation](jnp.dot(h, wd_ref[0].astype(jnp.float32),
+                                  preferred_element_type=jnp.float32))
+    o_ref[0] = (h + jnp.dot(z, wu_ref[0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+                ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def fused_adapter_tenants(h, tenant_ids, w_down, w_up, activation="gelu",
+                          interpret=True):
+    """Multi-tenant fused adapter: row b of ``h`` (B, S, d) runs tenant
+    ``tenant_ids[b]``'s bottleneck from the stacked weights ``w_down``
+    (T, d, r) / ``w_up`` (T, r, d).
+
+    The grid is one program per batch row; ``tenant_ids`` is a
+    scalar-prefetch argument, so each row's weight blocks are DMA'd straight
+    from the library stack by the BlockSpec index_map — the per-row
+    ``(B, d, r)`` weight gather that the XLA fallback materializes never
+    exists here.  Tenant ids are data, not shapes: one compiled program
+    serves every tenant mix of a batch."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, S, d = h.shape
+    r = w_down.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, d), lambda b, ids: (b, 0, 0)),
+            pl.BlockSpec((1, d, r), lambda b, ids: (ids[b], 0, 0)),
+            pl.BlockSpec((1, r, d), lambda b, ids: (ids[b], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, d), lambda b, ids: (b, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_tenant_kernel, activation=activation),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(h.shape, h.dtype),
+        interpret=interpret,
+    )(tenant_ids.astype(jnp.int32), h, w_down, w_up)
+
+
 # -------------------------------------------------------------- training path
 # pallas_call has no built-in reverse-mode rule, so the training forward uses
 # a custom VJP: the fused kernel runs the forward (one HBM read + write of the

@@ -14,6 +14,7 @@ from .cka_gram import cka_gram as _cka_gram
 from .flash_attention import flash_attention as _flash_attention
 from .fused_adapter import fused_adapter as _fused_adapter
 from .fused_adapter import fused_adapter_grad as _fused_adapter_grad
+from .fused_adapter import fused_adapter_tenants as _fused_adapter_tenants
 from .ssm_scan import ssm_scan as _ssm_scan
 
 
@@ -33,6 +34,15 @@ def fused_adapter_grad(h, w_down, w_up, activation="gelu", **kw):
     """Differentiable variant (custom VJP) — what the model forward calls."""
     kw.setdefault("interpret", _interpret())
     return _fused_adapter_grad(h, w_down, w_up, activation=activation, **kw)
+
+
+def fused_adapter_tenants(h, tenant_ids, w_down, w_up, activation="gelu",
+                          **kw):
+    """Tenant-routed variant — the multi-tenant serving forward's kernel
+    path (``adapter_apply_routed``); inference-only, no VJP."""
+    kw.setdefault("interpret", _interpret())
+    return _fused_adapter_tenants(h, tenant_ids, w_down, w_up,
+                                  activation=activation, **kw)
 
 
 def flash_attention(q, k, v, causal=True, window=None, **kw):

@@ -177,21 +177,25 @@ def attention_decode(p, x, cache, idx, cfg: ModelConfig, cross=False):
     """One-token decode.
 
     x: (B, 1, d).  cache: {"k","v"}: (B, Smax, KV, hd) (ring buffer when
-    sliding-window).  idx: scalar int32 — number of tokens already in cache.
-    Returns (out (B,1,d), updated cache).
+    sliding-window).  idx: number of tokens already in cache — a scalar
+    int32, or a per-row ``(B,)`` vector when batch rows sit at different
+    depths (the continuous-batching serve loop admits requests mid-decode,
+    so slots desynchronize).  Returns (out (B,1,d), updated cache).
     """
     hd = cfg.head_dim_
     B = x.shape[0]
     cd = cfg.cdtype()
     Smax = cache["k"].shape[1]
     q = _split_heads(dense(p["q"], x, cd), cfg.n_heads, hd)      # (B,1,H,hd)
+    idx = jnp.asarray(idx, jnp.int32)
+    per_row = idx.ndim == 1
 
     if not cross:
         k_new = _split_heads(dense(p["k"], x, cd), cfg.n_kv_heads, hd)
         v_new = _split_heads(dense(p["v"], x, cd), cfg.n_kv_heads, hd)
-        pos = jnp.full((1,), idx, jnp.int32)
+        pos = idx.reshape(B, 1) if per_row else jnp.full((1,), idx, jnp.int32)
         if cfg.mrope:
-            pos3 = jnp.broadcast_to(pos, (3, B, 1))
+            pos3 = jnp.broadcast_to(pos[None] if per_row else pos, (3, B, 1))
             q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
             k_new = apply_mrope(k_new, pos3, cfg.mrope_sections, cfg.rope_theta)
         else:
@@ -199,18 +203,29 @@ def attention_decode(p, x, cache, idx, cfg: ModelConfig, cross=False):
             k_new = apply_rope(k_new, pos, cfg.rope_theta)
         from ..sharding.hooks import constrain_cache_entry
         slot = idx % Smax if cfg.sliding_window is not None else idx
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                               (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                               (0, slot, 0, 0))
+        if per_row:
+            # per-row write slot: a one-hot blend along the cache's seq axis
+            # (out-of-range slots one-hot to zeros — rows parked at
+            # slot >= Smax, e.g. drained serve slots, write nothing)
+            oh = jax.nn.one_hot(slot, Smax, dtype=jnp.bool_)     # (B, Smax)
+            k_cache = jnp.where(oh[:, :, None, None],
+                                k_new.astype(cache["k"].dtype), cache["k"])
+            v_cache = jnp.where(oh[:, :, None, None],
+                                v_new.astype(cache["v"].dtype), cache["v"])
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
         cache = {"k": constrain_cache_entry(k_cache),
                  "v": constrain_cache_entry(v_cache)}
         # valid positions: j <= idx (and within window for SWA ring buffer)
         j = jnp.arange(Smax)
+        ii = idx[:, None] if per_row else idx
         if cfg.sliding_window is not None:
-            valid = (j <= idx) | (idx >= Smax)      # ring full -> all slots valid
+            valid = (j <= ii) | (ii >= Smax)        # ring full -> all slots valid
         else:
-            valid = j <= idx
+            valid = j <= ii
     else:
         j = jnp.arange(Smax)
         valid = j < idx  # idx == encoder length for cross attention
@@ -225,7 +240,9 @@ def attention_decode(p, x, cache, idx, cfg: ModelConfig, cross=False):
     # an .astype(f32) here gets hoisted by XLA into a full-cache f32 copy
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache["k"],
                         preferred_element_type=jnp.float32) / jnp.sqrt(hd)
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    vb = (valid[:, None, None, None, :] if valid.ndim == 2
+          else valid[None, None, None, None, :])
+    scores = jnp.where(vb, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(cache["v"].dtype),
                      cache["v"], preferred_element_type=jnp.float32)

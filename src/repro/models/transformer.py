@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.adapters import (AUX, FROZEN, TRAIN, ActiveAdapters,
-                             adapter_apply, adapter_chain_apply,
-                             adapter_stack_init)
+                             adapter_apply, adapter_apply_routed,
+                             adapter_chain_apply, adapter_stack_init)
 from ..sharding.hooks import constrain_logits, constrain_residual
 from .blocks import (block_apply, block_cache_init, block_decode, block_init,
                      block_prefill)
@@ -369,15 +369,28 @@ def collect_layer_outputs(params, adapters, batch, cfg: ModelConfig):
 
 
 # =================================================================== serving
-def prefill(params, adapters, batch, cfg: ModelConfig, max_len=None):
+def prefill(params, adapters, batch, cfg: ModelConfig, max_len=None,
+            tenant_ids=None):
     """Full-sequence forward building the decode cache.
-    Returns (last_logits (B, V), cache, n_prefilled)."""
+    Returns (last_logits (B, V), cache, n_prefilled).
+
+    ``tenant_ids`` (B,) switches multi-tenant routing on: ``adapters`` is
+    then a tenant library in scan layout ``(L, T, ...)``
+    (``AdapterLibrary.stacked_scan()``) — the layer scan consumes one
+    ``(T, ...)`` slab per step and ``adapter_apply_routed`` gathers each
+    batch row's tenant inside the compiled program.  Tenant ids stay traced
+    data: a mixed-tenant batch runs the exact program a single-tenant batch
+    compiled."""
     _require_adapters(adapters)
     x, positions = embed_inputs(params, batch, cfg)
     B, S = x.shape[0], x.shape[1]
     enc_kind, dec_kind = _kinds(cfg)
     enc_out = None
-    if cfg.is_encdec:
+    if tenant_ids is not None:
+        assert not cfg.is_encdec, "multi-tenant serving: single-stack models"
+        assert tenant_ids.ndim == 1, "tenant_ids: (B,) int32"
+        dec_ad = adapters
+    elif cfg.is_encdec:
         xe, _ = _enc_embed(params, batch, cfg)
         spec = encdec_spec(cfg)
         xe, _, _ = _scan_layers(params["enc_layers"],
@@ -393,7 +406,10 @@ def prefill(params, adapters, batch, cfg: ModelConfig, max_len=None):
         lp, ap = xs
         h, cache = block_prefill(lp, h, cfg, dec_kind, positions=positions,
                                  enc_out=enc_out)
-        h = adapter_apply(ap, h, cfg)
+        if tenant_ids is not None:
+            h = adapter_apply_routed(ap, h, tenant_ids, cfg)
+        else:
+            h = adapter_apply(ap, h, cfg)
         return h, cache
 
     x, cache = jax.lax.scan(body, x, (params["layers"], dec_ad),
@@ -411,11 +427,15 @@ def init_cache(cfg: ModelConfig, batch, max_len, enc_len=None):
 
 
 def decode_step(params, adapters, token, cache, idx, cfg: ModelConfig,
-                enc_len=None, embeds=None):
+                enc_len=None, embeds=None, tenant_ids=None):
     """One greedy decode step.
 
     token: (B, 1) int32 (or ``embeds`` (B,1,d) for stub-frontend archs);
-    cache: stacked (L, ...); idx: scalar count of cached tokens.
+    cache: stacked (L, ...); idx: count of cached tokens — scalar, or (B,)
+    when slots decode at different depths (continuous batching).
+    ``tenant_ids`` (B,) routes each row through its own tenant's adapter
+    stack (``adapters`` is then the library's scan-layout (L, T, ...)
+    pytree, ``AdapterLibrary.stacked_scan()``).
     Returns (logits (B, V), cache, idx+1).
     """
     _require_adapters(adapters)
@@ -424,14 +444,22 @@ def decode_step(params, adapters, token, cache, idx, cfg: ModelConfig,
     else:
         x = embed(params["embed"], token, cfg.cdtype())
     _, kind = _kinds(cfg)
-    dec_ad = (encdec_spec(cfg).select(adapters, "decoder")
-              if cfg.is_encdec else adapters)
+    if tenant_ids is not None:
+        assert not cfg.is_encdec, "multi-tenant serving: single-stack models"
+        assert tenant_ids.ndim == 1, "tenant_ids: (B,) int32"
+        dec_ad = adapters
+    else:
+        dec_ad = (encdec_spec(cfg).select(adapters, "decoder")
+                  if cfg.is_encdec else adapters)
 
     def body(carry, xs):
         h = carry
         lp, ap, cc = xs
         h, cc = block_decode(lp, h, cc, idx, cfg, kind, enc_len=enc_len)
-        h = adapter_apply(ap, h, cfg)
+        if tenant_ids is not None:
+            h = adapter_apply_routed(ap, h, tenant_ids, cfg)
+        else:
+            h = adapter_apply(ap, h, cfg)
         return h, cc
 
     x, cache = jax.lax.scan(body, x, (params["layers"], dec_ad, cache),
