@@ -5,6 +5,12 @@ local_steps`` separate jitted calls per round plus host-side optimizer init,
 delta extraction and FedAvg, while the cohort path issues ONE jitted call per
 plan-group (scan over local steps × vmap over clients, FedAvg fused).
 
+The sweep covers both gradient regimes: backprop strategies (chainfed,
+full_adapters, fedra, flora) and the perturbation-based ``fwdllm`` (the
+``"spsa"`` GradProgram — 2·n_samples forwards per step, no backward), which
+since ISSUE 4 rides the same batched cohort step and is gated by the same
+CI smoke job.
+
 Two workloads per strategy:
 
 * ``bert_tiny``   — the paper's bert-tiny trunk in the *dispatch-bound
@@ -42,7 +48,7 @@ from repro.models.config import ChainConfig, FedConfig
 DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_round_throughput.json"
 
-STRATEGIES = ["chainfed", "full_adapters", "fedra", "flora"]
+STRATEGIES = ["chainfed", "full_adapters", "fedra", "flora", "fwdllm"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,7 +147,10 @@ def bench_one(name, wl: Workload, chain, rounds, seed=0):
 def run(fast: bool = False, smoke: bool = False, rounds: int = None,
         out_path=DEFAULT_OUT):
     rounds = rounds or (2 if smoke else (4 if fast else 8))
-    strategies = ["chainfed", "full_adapters"] if smoke else STRATEGIES
+    # smoke keeps one windowed, one full-stack and one perturbation-based
+    # strategy so the CI gate covers every grad-program dispatch shape
+    strategies = ["chainfed", "full_adapters", "fwdllm"] if smoke \
+        else STRATEGIES
     results, rows = [], []
     for wname, wl in workloads(smoke).items():
         chain = ChainConfig(window=3, local_steps=wl.local_steps, lr=1e-3,

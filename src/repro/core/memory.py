@@ -89,6 +89,10 @@ def peak_memory(cfg: ModelConfig, method: str, batch: int, seq: int,
         # tied-vocab head
         head = 128 * cfg.d_model * b
         return _pack(p_all, a_layer, head * opt_mult)
+    if method == "fedembed":
+        # embedding tuning: backprop reaches the input embedding, so every
+        # layer's activations are saved; optimizer state on the table
+        return _pack(p_all, a_layer * L, p_emb * opt_mult)
     if method in ("fwdllm", "fedkseed"):
         # zeroth-order: no activation storage; FwdLLM perturbs adapters only
         extra = ad_layer * L * 2 if method == "fwdllm" else 0
@@ -130,6 +134,10 @@ def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
     if method == "flora":
         return 2 * cfg.d_model * lora_rank * b * L
     if method == "linear_probing":
+        return cfg.padded_vocab * cfg.d_model * b
+    if method == "fedembed":
+        # embedding table only — the task head is excluded by convention,
+        # as for every other head-training method above
         return cfg.padded_vocab * cfg.d_model * b
     if method == "fedra":
         return ad_layer * (L // 2)

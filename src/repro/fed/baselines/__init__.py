@@ -1,8 +1,10 @@
-"""The 8 baseline strategies (paper Table 1).  Importing this package
-registers each under its name in ``repro.fed.registry``; ``BASELINES`` is
-kept as a plain-dict view for direct class access."""
+"""The baseline strategies (paper Table 1, plus the embedding-tuning
+baseline).  Importing this package registers each under its name in
+``repro.fed.registry``; ``BASELINES`` is kept as a plain-dict view for
+direct class access."""
 from .c2a import C2A
 from .fedadapter import FedAdapter
+from .fedembed import FedEmbed
 from .fedkseed import FedKSeed
 from .fedra import FedRA
 from .flora import FLoRA
@@ -19,4 +21,5 @@ BASELINES = {
     "fedkseed": FedKSeed,
     "flora": FLoRA,
     "fedra": FedRA,
+    "fedembed": FedEmbed,
 }

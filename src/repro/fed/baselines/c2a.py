@@ -1,19 +1,43 @@
 """C2A (Kim et al., 2023): client-customized adapters via a hypernetwork.
 The hypernetwork consumes the client's label histogram and emits per-layer
 FiLM (scale, shift) modulations of the shared adapter bottleneck — a compact
-instantiation of 'hypernetwork generates personalized adapters'."""
+instantiation of 'hypernetwork generates personalized adapters'.
+
+The modulation is a plan-level ``transform_trainable`` hook (``"film"``):
+the hypernetwork is an extra trainable leaf, the histogram a runtime mask,
+and the FiLM application happens inside the shared loss — so C2A trains on
+the same batched cohort path (and autodiff grad program) as every other
+strategy."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...core.adapters import ActiveAdapters
 from ...models.module import normal_init
-from ...models.transformer import forward_full
-from ...train.losses import cross_entropy
-from ...utils.tree import tree_map
 from ..registry import register_strategy
-from ..strategies import Strategy
+from ..strategies import Strategy, TrainablePlan, register_transform
+
+
+@register_transform("film")
+def _film_transform(cfg, chain, plan):
+    """FiLM-modulate the adapter bottleneck with hypernetwork output:
+    ``trainable["hyper"]["w"]: (buckets, 2L)`` maps ``masks["hist"]:
+    (buckets,)`` to per-layer (scale, shift); gradients flow into both the
+    shared adapters and the hypernetwork."""
+    L = cfg.total_chain_layers
+
+    def tf(trainable, masks):
+        film = masks["hist"] @ trainable["hyper"]["w"]
+        scale = 1.0 + film[:L].reshape(L, 1, 1)
+        shift = film[L:].reshape(L, 1, 1) * 0.01
+        ad = trainable["adapters"]
+        return {**trainable,
+                "adapters": {"down": ad["down"] * scale + shift,
+                             "up": ad["up"]}}
+
+    return tf
 
 
 @register_strategy("c2a")
@@ -26,55 +50,30 @@ class C2A(Strategy):
         super().__init__(cfg, chain, key)
         L = cfg.total_chain_layers
         kh = jax.random.fold_in(key, 7)
-        self.hyper = {"w": normal_init(kh, (self.N_BUCKETS, 2 * L), cfg.pdtype(),
-                                       stddev=0.01)}
-        cfg_ = cfg
+        self.hyper = {"w": normal_init(kh, (self.N_BUCKETS, 2 * L),
+                                       cfg.pdtype(), stddev=0.01)}
 
-        def modulate(adapters, hyper, hist):
-            film = hist @ hyper["w"]
-            scale = 1.0 + film[:L].reshape(L, 1, 1)
-            shift = film[L:].reshape(L, 1, 1) * 0.01
-            return {"down": adapters["down"] * scale + shift,
-                    "up": adapters["up"]}
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(
+            adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
+            train_head=self.head is not None, transform="film")
 
-        def loss_fn(tr, params, batch, hist):
-            ad = modulate(tr["adapters"], tr["hyper"], hist)
-            p = {**params, "cls_head": tr["head"]} if "head" in tr else params
-            logits, _ = forward_full(p, ad, batch, cfg_, remat=False)
-            return cross_entropy(logits, batch["labels"])
-
-        @jax.jit
-        def step(tr, opt_state, params, batch, hist):
-            loss, g = jax.value_and_grad(loss_fn)(tr, params, batch, hist)
-            tr, opt_state = self.opt.step(tr, g, opt_state)
-            return tr, opt_state, loss
-
-        self._c2a_step = step
-
-    def master_trainable(self):
-        t = super().master_trainable()
+    def init_trainable(self, plan):
+        t = super().init_trainable(plan)
         t["hyper"] = self.hyper
         return t
 
-    def _commit(self, tr):
-        super()._commit(tr)
-        self.hyper = tr["hyper"]
+    def commit_trainable(self, plan, new):
+        self.hyper = new["hyper"]
+        super().commit_trainable(plan, new)
 
     def _client_hist(self, sim, client):
-        lab = sim.labels[client.sampler.shard] if len(client.sampler.shard) else sim.labels[:1]
-        h = np.bincount(np.asarray(lab) % self.N_BUCKETS, minlength=self.N_BUCKETS)
+        lab = (sim.labels[client.sampler.shard] if len(client.sampler.shard)
+               else sim.labels[:1])
+        h = np.bincount(np.asarray(lab) % self.N_BUCKETS,
+                        minlength=self.N_BUCKETS)
         h = h / max(1, h.sum())
         return jnp.asarray(h, jnp.float32)
 
-    def round(self, sim, clients, round_idx):
-        deltas, weights = [], []
-        master = self.master_trainable()
-        for c in clients:
-            hist = self._client_hist(sim, c)
-            tr = master
-            st = self.opt.init(tr)
-            for batch in sim.client_batches(c, self.chain.local_steps):
-                tr, st, _ = self._c2a_step(tr, st, self._params, batch, hist)
-            deltas.append(tree_map(lambda a, b: a - b, tr, master))
-            weights.append(c.n_samples)
-        self._fedavg(deltas, weights)
+    def plan_masks(self, sim, client, round_idx):
+        return {"hist": self._client_hist(sim, client)}

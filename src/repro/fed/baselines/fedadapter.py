@@ -28,5 +28,5 @@ class FedAdapter(Strategy):
         mask = jnp.zeros((L,), jnp.float32)
         return mask.at[L - active:].set(1.0)
 
-    def plan_masks(self, client, round_idx):
+    def plan_masks(self, sim, client, round_idx):
         return {"layer_mask": self.client_mask(client, round_idx)}

@@ -1,0 +1,22 @@
+"""Embedding tuning: the token-embedding table (and task head) train while
+the backbone and every adapter stay frozen — the input-side counterpart of
+linear probing (prompt/embedding-tuning family).  Exercises the engine's
+``TrainablePlan.train_embedding`` path: the embedding rides the trainable as
+the ``embed`` leaf and commits back into the base params."""
+from __future__ import annotations
+
+from ..registry import register_strategy
+from ..strategies import Strategy, TrainablePlan
+
+
+@register_strategy("fedembed")
+class FedEmbed(Strategy):
+    name = "fedembed"
+    memory_method = "fedembed"
+
+    def __init__(self, cfg, chain, key):
+        super().__init__(cfg, chain.replace(train_head=True), key)
+
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(adapters=None, train_head=True,
+                             train_embedding=True)

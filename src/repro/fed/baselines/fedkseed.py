@@ -1,15 +1,20 @@
 """FedKSeed [arXiv:2312.06353]: zeroth-order full-parameter tuning restricted
-to K shared random seeds; each client round uploads only K scalars."""
+to K shared random seeds; each client round uploads only K scalars.
+
+The method is a plan with the ``"kseed"`` whole-client gradient program: one
+``PlanEngine.cohort_step`` estimates every client's ``(K,)`` coefficient
+vector (the cohort output is ``(C, K)``), ``cohort_aggregate`` fuses the
+sample-weighted mean in-graph, and ``commit_trainable`` materializes the
+round once server-side with ``kseed_apply`` — the full-parameter update is
+never formed per client."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from ...models.transformer import forward_full
-from ...optim.zeroth import kseed_apply, kseed_coeffs
-from ...train.losses import cross_entropy
+from ...core.adapters import ActiveAdapters
+from ...optim.zeroth import kseed_apply
 from ..registry import register_strategy
-from ..strategies import Strategy
+from ..strategies import Strategy, TrainablePlan
 
 
 @register_strategy("fedkseed")
@@ -17,47 +22,50 @@ class FedKSeed(Strategy):
     name = "fedkseed"
     memory_method = "fedkseed"
     K = 8
+    EPS = 1e-3
 
     def __init__(self, cfg, chain, key):
         super().__init__(cfg, chain, key)
-        self.seeds = list(range(1000, 1000 + self.K))
-        cfg_ = cfg
+        self.seeds = tuple(range(1000, 1000 + self.K))
 
-        def loss_of(trainable, batch):
-            p = trainable["params"]
-            if "head" in trainable:
-                p = {**p, "cls_head": trainable["head"]}
-            logits, _ = forward_full(p, trainable["adapters"], batch, cfg_,
-                                     remat=False)
-            return cross_entropy(logits, batch["labels"])
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(
+            adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
+            train_head=self.head is not None,
+            grad="kseed",
+            grad_cfg=(("seeds", self.seeds), ("eps", self.EPS)))
 
-        self._loss_of = jax.jit(loss_of)
-
-    def _full_trainable(self):
-        t = {"params": self._params, "adapters": self.adapters}
+    # The kseed program perturbs {"_base": params, **trainable}; the seed
+    # reconstruction is tree-structure-dependent, so materialization must
+    # rebuild the exact same structure.
+    def _full_tree(self):
+        t = {"_base": self._params, "adapters": self.adapters}
         if self.head is not None:
             t["head"] = self.head
         return t
 
-    def round(self, sim, clients, round_idx):
-        trainable = self._full_trainable()
-        all_coeffs, weights = [], []
-        for c in clients:
-            batch = sim.client_batches(c, 1)[0]
-            coeffs = kseed_coeffs(lambda t: self._loss_of(t, batch), trainable,
-                                  self.seeds, eps=1e-3)
-            all_coeffs.append(coeffs)
-            weights.append(c.n_samples)
-        if not all_coeffs:
+    def cohort_aggregate(self, plan):
+        def agg(trainable0, updates, weights, masks):
+            w = weights / jnp.sum(weights)
+            return {"kseed": jnp.tensordot(
+                w, updates["kseed"].astype(jnp.float32), axes=1)}
+
+        return agg
+
+    def commit_trainable(self, plan, new):
+        full = kseed_apply(self._full_tree(), self.seeds,
+                           [float(c) for c in new["kseed"]], self.chain.lr)
+        self._params = full["_base"]
+        self.adapters = full["adapters"]
+        if self.head is not None:
+            self.head = full["head"]
+
+    def aggregate(self, round_idx, plans, deltas, weights, masks):
+        """Sequential-path counterpart: weighted mean of the per-client
+        coefficient uploads, then the same materialization."""
+        if not deltas:
             return
-        w = jnp.asarray(weights, jnp.float32); w = w / w.sum()
-        agg = sum(wi * cc for wi, cc in zip(w, all_coeffs))
-        trainable = kseed_apply(trainable, self.seeds,
-                                [float(a) for a in agg], self.chain.lr)
-        self._params = trainable["params"]
-        self.adapters = trainable["adapters"]
-        if "head" in trainable:
-            self.head = trainable["head"]
+        self.commit_trainable(plans[0], self.engine.fedavg(deltas, weights))
 
     def comm_bytes_per_round(self):
         return self.K * 8

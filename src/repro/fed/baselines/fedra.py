@@ -37,7 +37,7 @@ class FedRA(Strategy):
         mask[sel] = 1.0
         return jnp.asarray(mask)
 
-    def plan_masks(self, client, round_idx):
+    def plan_masks(self, sim, client, round_idx):
         return {"layer_mask": self.client_mask(client, round_idx)}
 
     def cohort_aggregate(self, plan):

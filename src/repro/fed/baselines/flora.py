@@ -27,5 +27,5 @@ class FLoRA(Strategy):
         rc = max(1, int(r * min(1.0, 0.25 + 0.75 * (client.cid % 4) / 3)))
         return (jnp.arange(r) < rc).astype(jnp.float32)
 
-    def plan_masks(self, client, round_idx):
+    def plan_masks(self, sim, client, round_idx):
         return {"rank_mask": self._client_rank_mask(client)}

@@ -1,17 +1,20 @@
 """FwdLLM [arXiv:2308.13894]: backpropagation-free federated fine-tuning via
 forward/zeroth-order gradients on the trainables — eliminates activation
 storage at the cost of noisy gradient estimates (the paper's Table 1 shows
-its accuracy penalty, incl. non-convergence on 20NEWS)."""
+its accuracy penalty, incl. non-convergence on 20NEWS).
+
+The whole method is a plan: full adapter span + CE loss + the ``"spsa"``
+gradient program, so the batched cohort path (vmap over clients, fused
+FedAvg, donation) comes for free from ``PlanEngine.cohort_step``.  Per-client
+RNG is derived as ``fold_in(fold_in(fold_in(key, round), client), step)`` —
+stateless, so re-running a round reproduces bit-identical updates."""
 from __future__ import annotations
 
 import jax
 
-from ...models.transformer import forward_full
-from ...optim.zeroth import spsa_grad
-from ...train.losses import cross_entropy
-from ...utils.tree import tree_map
+from ...core.adapters import ActiveAdapters
 from ..registry import register_strategy
-from ..strategies import Strategy
+from ..strategies import Strategy, TrainablePlan
 
 
 @register_strategy("fwdllm")
@@ -19,36 +22,19 @@ class FwdLLM(Strategy):
     name = "fwdllm"
     memory_method = "fwdllm"
     N_PERTURB = 4
+    EPS = 1e-3
 
     def __init__(self, cfg, chain, key):
         super().__init__(cfg, chain, key)
-        cfg_ = cfg
+        self._base_key = jax.random.fold_in(key, 1717)
 
-        @jax.jit
-        def zo_step(tr, opt_state, params, batch, key):
-            def loss_of(t):
-                p = {**params, "cls_head": t["head"]} if "head" in t else params
-                logits, _ = forward_full(p, t["adapters"], batch, cfg_,
-                                         remat=False)
-                return cross_entropy(logits, batch["labels"])
+    def plan(self, client, round_idx) -> TrainablePlan:
+        return TrainablePlan(
+            adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
+            train_head=self.head is not None,
+            grad="spsa",
+            grad_cfg=(("eps", self.EPS), ("n_samples", self.N_PERTURB)))
 
-            g, _ = spsa_grad(loss_of, tr, key, eps=1e-3,
-                             n_samples=self.N_PERTURB)
-            tr, opt_state = self.opt.step(tr, g, opt_state)
-            return tr, opt_state
-
-        self._zo_step = zo_step
-        self._key = jax.random.fold_in(key, 1717)
-
-    def round(self, sim, clients, round_idx):
-        deltas, weights = [], []
-        master = self.master_trainable()
-        for c in clients:
-            tr = master
-            st = self.opt.init(tr)
-            for batch in sim.client_batches(c, self.chain.local_steps):
-                self._key, sub = jax.random.split(self._key)
-                tr, st = self._zo_step(tr, st, self._params, batch, sub)
-            deltas.append(tree_map(lambda a, b: a - b, tr, master))
-            weights.append(c.n_samples)
-        self._fedavg(deltas, weights)
+    def plan_masks(self, sim, client, round_idx):
+        k = jax.random.fold_in(self._base_key, round_idx)
+        return {"grad_key": jax.random.fold_in(k, client.cid)}

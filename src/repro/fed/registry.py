@@ -1,9 +1,12 @@
 """Unified strategy registry + high-level experiment entry point.
 
-Every federated method — the 8 baselines and CHAINFED — registers itself
+Every federated method — the 9 baselines and CHAINFED — registers itself
 under a name; benchmarks, examples and the launcher construct strategies
 exclusively through ``make_strategy`` (FedML-style config-driven dispatch).
-Adding a new method is a ~50-line class plus one decorator:
+Adding a new method is a ~50-line class plus one decorator; a plan is enough
+for most — pick a loss hook, a gradient program (autodiff, SPSA
+perturbation, K-seed zeroth-order — see ``GRAD_PROGRAMS``) and optionally a
+trainable transform, and the batched cohort engine does the rest:
 
     from repro.fed.registry import register_strategy
     from repro.fed.strategies import Strategy
@@ -50,7 +53,7 @@ def _ensure_builtins():
     if _BUILTINS_LOADED:
         return
     _BUILTINS_LOADED = True
-    from . import baselines  # noqa: F401  (registers the 8 baselines)
+    from . import baselines  # noqa: F401  (registers the 9 baselines)
     from . import chainfed   # noqa: F401  (registers chainfed + ablations)
 
 

@@ -3,11 +3,21 @@ App. E).
 
 The federated API is declarative: a strategy says *what* it trains via a
 ``TrainablePlan`` (an ``ActiveAdapters`` composition spec plus head/embedding
-flags and a loss hook); one ``PlanEngine`` owns the jitted
-``local_step``/``eval_fn`` machinery and the FedAvg aggregation for every
-strategy — baselines and CHAINFED alike.  Plans are hashable, so the engine's
-jit cache is keyed on them: the DLCT cyclic window reuses ≤ L compilations
-(the old per-offset stage cache), and baselines share a single compilation.
+flags, a loss hook, a gradient program and an optional trainable transform);
+one ``PlanEngine`` owns the jitted ``local_step``/``eval_fn`` machinery and
+the FedAvg aggregation for every strategy — baselines and CHAINFED alike.
+Plans are hashable, so the engine's jit cache is keyed on them: the DLCT
+cyclic window reuses ≤ L compilations (the old per-offset stage cache), and
+baselines share a single compilation.
+
+**Gradient programs** (``GRAD_PROGRAMS``) decouple *how the update direction
+is estimated* from the rest of the engine: ``"ad"`` is reverse-mode
+``value_and_grad`` (the default), ``"spsa"`` the backprop-free perturbation
+estimator (FwdLLM), and ``"kseed"`` the K-seed zeroth-order coefficient
+estimator (FedKSeed), whose per-client output is a ``(K,)`` coefficient
+vector instead of a trainable delta.  A plan selects its program by name
+(``grad=``) with frozen knobs in ``grad_cfg`` — both hash into the jit-cache
+key, so every program rides the same batched cohort path.
 
 The round hot path is **batched cohort execution**: sampled clients are
 grouped by plan, each group's local batches are stacked into
@@ -22,13 +32,18 @@ strategies with host-side aggregation).
 
 A strategy implements:
 
-    plan(client, round_idx)          — the TrainablePlan for this update
-    plan_masks(client, round_idx)    — runtime mask arrays (traced, no recompile)
-    cohort_aggregate(plan)           — optional in-graph aggregation override
-    round(sim, clients, round_idx)   — one federated round (generic default)
-    evaluate(batch) -> (loss, acc)   — end-to-end eval
-    memory_method / memory_kwargs    — ties into the memory-wall sampler
-    comm_bytes_per_round()           — uplink accounting
+    plan(client, round_idx)            — the TrainablePlan for this update
+    plan_masks(sim, client, round_idx) — runtime mask arrays (traced, no
+                                         recompile; RNG keys and aux inputs
+                                         like C2A's label histogram ride here)
+    init_trainable(plan)               — round-start trainable (extra leaves
+                                         like C2A's hypernetwork hook in here)
+    cohort_aggregate(plan)             — optional in-graph aggregation override
+    commit_trainable(plan, new)        — commit the aggregated cohort output
+    round(sim, clients, round_idx)     — one federated round (generic default)
+    evaluate(batch) -> (loss, acc)     — end-to-end eval
+    memory_method / memory_kwargs      — ties into the memory-wall sampler
+    comm_bytes_per_round()             — uplink accounting
 
 All methods train the task output layer (``cls_head``) alongside their own
 trainables — standard fine-tuning protocol for classification backbones.
@@ -48,6 +63,7 @@ from ..models.config import ChainConfig, ModelConfig
 from ..models.transformer import (ChainSegments, forward_chain, forward_full,
                                   init_adapters, init_cls_head, init_lm)
 from ..optim.base import make_optimizer
+from ..optim.zeroth import kseed_directional, spsa_value_and_grad
 from ..train.losses import accuracy, cross_entropy, gpo_loss, moe_penalty
 from ..utils.tree import tree_map
 
@@ -78,12 +94,16 @@ def stack_masks(mask_dicts):
 class TrainablePlan:
     """Declarative description of one client update: which adapter layers are
     active (an ``ActiveAdapters`` spec; None = adapters frozen entirely),
-    whether the task head / embedding train, which runtime masks apply, and
-    which loss hook drives the step.
+    whether the task head / embedding train, which runtime masks apply, which
+    loss hook drives the step, and which gradient program estimates the
+    update direction.
 
     Hashable — the engine compiles one jitted step per distinct plan.  Mask
     *values* are runtime arguments (see ``Strategy.plan_masks``) so per-round
-    or per-client masks never trigger recompilation.
+    or per-client masks never trigger recompilation; ``grad_cfg`` is a frozen
+    ``((name, value), ...)`` tuple of program knobs (``eps``, ``n_samples``,
+    ``seeds``) that *does* key the cache — change a knob, get a new
+    compilation, exactly like changing the loss.
     """
     adapters: Optional[ActiveAdapters]
     train_head: bool = True
@@ -93,6 +113,13 @@ class TrainablePlan:
     loss: str = "ce"                # key into LOSS_HOOKS
     lam: float = 0.0                # GPO global-loss weight (loss == "gpo*")
     remat: bool = False             # checkpoint the forward (pod-scale steps)
+    grad: str = "ad"                # key into GRAD_PROGRAMS
+    grad_cfg: tuple = ()            # frozen (knob, value) pairs for the program
+    transform: Optional[str] = None  # key into TRANSFORM_HOOKS (e.g. C2A FiLM)
+
+    @property
+    def grad_options(self) -> dict:
+        return dict(self.grad_cfg)
 
     @property
     def window_segments(self) -> ChainSegments:
@@ -176,26 +203,186 @@ def _gpo_seq_hook(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan):
     return loss_fn
 
 
+# =========================================================== transform hooks
+TRANSFORM_HOOKS = {}
+
+
+def register_transform(name):
+    """Register a plan-level trainable transform: ``factory(cfg, chain, plan)
+    -> fn(trainable, masks) -> trainable`` applied inside the loss (so
+    gradients flow through it).  This is how C2A's hypernetwork-generated
+    FiLM modulation rides the shared engine: the hypernetwork is an extra
+    trainable leaf, the client's label histogram a runtime mask."""
+    def deco(fn):
+        TRANSFORM_HOOKS[name] = fn
+        return fn
+    return deco
+
+
+def make_loss_fn(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan):
+    """The plan's loss hook, with its trainable transform (if any) applied
+    inside — the single loss entry point every gradient program sees."""
+    loss_fn = LOSS_HOOKS[plan.loss](cfg, chain, plan)
+    if plan.transform is None:
+        return loss_fn
+    tf = TRANSFORM_HOOKS[plan.transform](cfg, chain, plan)
+
+    def transformed(trainable, params, frozen_adapters, batch, masks):
+        return loss_fn(tf(trainable, masks), params, frozen_adapters, batch,
+                       masks)
+
+    return transformed
+
+
+# ========================================================= gradient programs
+GRAD_PROGRAMS = {}
+
+
+def register_grad_program(name, whole_client=False, needs_rng=False):
+    """Register a gradient program under ``name`` (mirrors LOSS_HOOKS).
+    ``needs_rng`` marks stochastic programs that read
+    ``masks["grad_key"]`` — callers that build the masks themselves (the
+    pod step) use it to fail loudly when no key is supplied.
+
+    Two shapes:
+
+    * per-step estimator (default): ``factory(cfg, chain, plan, loss_fn) ->
+      grad_fn(trainable, params, frozen_adapters, batch, masks) -> (loss,
+      parts, grads)`` — the engine wraps it in the shared scan-over-local-
+      steps × optimizer machinery.  Stochastic estimators read their
+      per-client RNG from ``masks["grad_key"]`` (already folded with the
+      local-step index — see ``fold_step_masks``).
+    * ``whole_client=True``: ``factory(cfg, chain, plan, loss_fn) ->
+      client_update(trainable0, params, frozen_adapters, batches, masks) ->
+      (update, mean_loss)`` — the program owns the entire local phase and
+      returns the client *update* directly (not necessarily trainable-shaped:
+      FedKSeed returns ``{"kseed": (K,)}`` coefficients).  Donation is
+      disabled for such plans since the round-start state survives the step.
+    """
+    def deco(fn):
+        fn.whole_client = whole_client
+        fn.needs_rng = needs_rng
+        GRAD_PROGRAMS[name] = fn
+        return fn
+    return deco
+
+
+def _is_whole_client(plan: TrainablePlan) -> bool:
+    return getattr(GRAD_PROGRAMS[plan.grad], "whole_client", False)
+
+
+def fold_step_masks(masks, step_idx):
+    """Per-step view of the runtime masks: the per-client RNG key (if any)
+    is folded with the local-step index so every (round, client, step) draws
+    an independent, reproducible key."""
+    if "grad_key" not in masks:
+        return masks
+    return {**masks, "grad_key": jax.random.fold_in(masks["grad_key"],
+                                                    step_idx)}
+
+
+@register_grad_program("ad")
+def _ad_program(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan,
+                loss_fn):
+    """Reverse-mode autodiff — today's ``value_and_grad`` step."""
+
+    def grad_fn(trainable, params, frozen_adapters, batch, masks):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            trainable, params, frozen_adapters, batch, masks)
+        return loss, parts, grads
+
+    return grad_fn
+
+
+@register_grad_program("spsa", needs_rng=True)
+def _spsa_program(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan,
+                  loss_fn):
+    """Backprop-free SPSA perturbation estimator (FwdLLM): antithetic
+    central differences over the trainable, vectorized over ``n_samples``
+    perturbations with ``vmap``.  No activation storage — two forward passes
+    per sample.  Knobs: ``eps`` (default 1e-3), ``n_samples`` (default 4);
+    RNG from ``masks["grad_key"]``."""
+    opts = plan.grad_options
+    eps = opts.get("eps", 1e-3)
+    n_samples = opts.get("n_samples", 4)
+
+    def grad_fn(trainable, params, frozen_adapters, batch, masks):
+        def scalar_loss(tr):
+            loss, _ = loss_fn(tr, params, frozen_adapters, batch, masks)
+            return loss
+
+        loss, grads, _ = spsa_value_and_grad(scalar_loss, trainable,
+                                             masks["grad_key"], eps=eps,
+                                             n_samples=n_samples)
+        return loss, {"local": loss, "global": loss}, grads
+
+    return grad_fn
+
+
+@register_grad_program("kseed", whole_client=True)
+def _kseed_program(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan,
+                   loss_fn):
+    """K-seed zeroth-order coefficient estimation (FedKSeed): the client's
+    whole local phase estimates the directional derivative along K fixed
+    seed-reconstructed directions of the *full* parameter set (base params
+    ride along as the ``_base`` leaf) and uploads only the ``(K,)``
+    coefficient vector — the cohort output is ``(C, K)``, aggregated
+    in-graph by ``FedKSeed.cohort_aggregate`` and materialized once
+    server-side with ``kseed_apply``.  Knobs: ``seeds`` (tuple of K ints),
+    ``eps``."""
+    opts = plan.grad_options
+    seeds = jnp.asarray(opts["seeds"], jnp.int32)
+    eps = opts.get("eps", 1e-3)
+
+    def client_update(trainable0, params, frozen_adapters, batches, masks):
+        full0 = {"_base": params, **trainable0}
+
+        def one_batch(_, mb):
+            def scalar_loss(full):
+                tr = {k: v for k, v in full.items() if k != "_base"}
+                loss, _ = loss_fn(tr, full["_base"], frozen_adapters, mb,
+                                  masks)
+                return loss
+
+            return None, kseed_directional(scalar_loss, full0, seeds,
+                                           eps=eps)
+
+        # estimate on every local batch at the round-start point and average
+        # — local steps sharpen the estimate instead of walking the iterate
+        _, (coeffs, losses) = jax.lax.scan(one_batch, None, batches)
+        return {"kseed": jnp.mean(coeffs, axis=0)}, jnp.mean(losses)
+
+    return client_update
+
+
 # ======================================================= client-local update
 def make_client_update(cfg: ModelConfig, chain: ChainConfig,
                        plan: TrainablePlan, opt):
     """One client's whole local optimisation as a traced function:
 
         client_update(trainable0, params, frozen_adapters, batches, masks)
-            -> (trainable_final, mean_loss)
+            -> (update, mean_loss)
 
     ``batches`` leaves are ``(local_steps, b, ...)`` — ``lax.scan`` consumes
     the leading axis; optimizer state is initialized *inside* the trace so a
     cohort step can vmap this over a stacked client axis with no host work.
-    Shared by the single-host ``PlanEngine.cohort_step`` and the pjit pod
-    step builders in ``repro.train.steps``."""
-    loss_fn = LOSS_HOOKS[plan.loss](cfg, chain, plan)
+    ``update`` is the client's round contribution: the trainable delta for
+    delta-style programs, the program-defined upload (e.g. FedKSeed's
+    coefficients) for whole-client programs.  Shared by the single-host
+    ``PlanEngine.cohort_step`` and the pjit pod step builders in
+    ``repro.train.steps``."""
+    loss_fn = make_loss_fn(cfg, chain, plan)
+    factory = GRAD_PROGRAMS[plan.grad]
+    if factory.whole_client:
+        return factory(cfg, chain, plan, loss_fn)
+    grad_fn = factory(cfg, chain, plan, loss_fn)
 
     def client_update(trainable0, params, frozen_adapters, batches, masks):
-        def one_step(carry, mb):
+        def one_step(carry, xs):
+            mb, i = xs
             tr, opt_state = carry
-            (loss, _parts), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(tr, params, frozen_adapters, mb, masks)
+            loss, _parts, grads = grad_fn(tr, params, frozen_adapters, mb,
+                                          fold_step_masks(masks, i))
             if plan.layer_masked:
                 grads["adapters"] = layer_mask_apply(grads["adapters"],
                                                      masks["layer_mask"])
@@ -205,9 +392,11 @@ def make_client_update(cfg: ModelConfig, chain: ChainConfig,
             tr, opt_state = opt.step(tr, grads, opt_state)
             return (tr, opt_state), loss
 
+        n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
         (tr, _), losses = jax.lax.scan(
-            one_step, (trainable0, opt.init(trainable0)), batches)
-        return tr, jnp.mean(losses)
+            one_step, (trainable0, opt.init(trainable0)),
+            (batches, jnp.arange(n_steps)))
+        return tree_map(lambda a, b: a - b, tr, trainable0), jnp.mean(losses)
 
     return client_update
 
@@ -233,20 +422,30 @@ class PlanEngine:
         self.cfg, self.chain, self.opt = cfg, chain, opt
         self._steps = {}
         self._cohort = {}
+        self._client_updates = {}
         self._eval = None
 
     # ------------------------------------------------------------ jit cache
     def local_step(self, plan: TrainablePlan):
+        """One jitted optimizer step for a plan — the sequential-path unit of
+        dispatch.  The gradient comes from the plan's program (``grad=``);
+        whole-client programs have no per-step form (use
+        ``client_update_fn``)."""
         if plan not in self._steps:
-            loss_fn = LOSS_HOOKS[plan.loss](self.cfg, self.chain, plan)
+            if _is_whole_client(plan):
+                raise ValueError(
+                    f"grad program {plan.grad!r} owns the whole client "
+                    "update; dispatch through client_update_fn/cohort_step")
+            grad_fn = GRAD_PROGRAMS[plan.grad](
+                self.cfg, self.chain, plan,
+                make_loss_fn(self.cfg, self.chain, plan))
             opt = self.opt
 
             @jax.jit
             def step(trainable, opt_state, params, frozen_adapters, batch,
                      masks):
-                (loss, parts), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(trainable, params, frozen_adapters,
-                                           batch, masks)
+                loss, parts, grads = grad_fn(trainable, params,
+                                             frozen_adapters, batch, masks)
                 if plan.layer_masked:
                     grads["adapters"] = layer_mask_apply(grads["adapters"],
                                                          masks["layer_mask"])
@@ -258,6 +457,14 @@ class PlanEngine:
 
             self._steps[plan] = step
         return self._steps[plan]
+
+    def client_update_fn(self, plan: TrainablePlan):
+        """Jitted single-client update (``(ls, b, ...)`` batch leaves) — the
+        sequential-path unit of dispatch for whole-client grad programs."""
+        if plan not in self._client_updates:
+            self._client_updates[plan] = jax.jit(
+                make_client_update(self.cfg, self.chain, plan, self.opt))
+        return self._client_updates[plan]
 
     def cohort_step(self, plan: TrainablePlan, aggregate=None):
         """One jitted round for a whole plan-group:
@@ -292,12 +499,15 @@ class PlanEngine:
         A donated trainable is consumed: callers must use the returned
         committed trainable, never the arrays they passed in
         (``ActiveAdapters.scatter_train`` short-circuits full spans for
-        exactly this reason).
+        exactly this reason).  Whole-client grad programs (FedKSeed) return
+        a non-trainable-shaped cohort output that is materialized onto the
+        round-start state *after* the step, so their plans donate nothing.
         """
         if plan not in self._cohort:
             client_update = make_client_update(self.cfg, self.chain, plan,
                                                self.opt)
             agg = aggregate if aggregate is not None else cohort_fedavg
+            whole = _is_whole_client(plan)
             full_stack = plan.adapters is not None and plan.adapters.is_full
             needs_frozen = (plan.adapters is None or not full_stack
                             or plan.loss.startswith("gpo"))
@@ -311,20 +521,22 @@ class PlanEngine:
             def step(tr_don, tr_ref, params, frozen_adapters, batches, masks,
                      weights):
                 trainable0 = {**tr_don, **tr_ref}
-                finals, losses = jax.vmap(
+                updates, losses = jax.vmap(
                     client_update,
                     in_axes=(None, None, None, 0, 0))(
                         trainable0, params, frozen_adapters, batches, masks)
-                deltas = tree_map(lambda f, t0: f - t0, finals, trainable0)
-                new = agg(trainable0, deltas, weights, masks)
+                new = agg(trainable0, updates, weights, masks)
                 return new, jnp.mean(losses)
 
             def call(trainable0, params, frozen_adapters, batches, masks,
                      weights):
-                tr_don = {k: v for k, v in trainable0.items()
-                          if k not in ref_keys}
-                tr_ref = {k: trainable0[k] for k in ref_keys
-                          if k in trainable0}
+                if whole:   # round-start state survives: nothing to donate
+                    tr_don, tr_ref = {}, trainable0
+                else:
+                    tr_don = {k: v for k, v in trainable0.items()
+                              if k not in ref_keys}
+                    tr_ref = {k: trainable0[k] for k in ref_keys
+                              if k in trainable0}
                 if not needs_frozen:
                     frozen_adapters = {}
                 return step(tr_don, tr_ref, params, frozen_adapters, batches,
@@ -373,10 +585,10 @@ class PlanEngine:
 
     @staticmethod
     def fedavg(deltas, weights):
-        """Sample-weighted mean of client deltas (list-of-pytrees form, still
-        the entry point for the legacy C2A/FwdLLM ``_fedavg`` path).  Each
-        leaf stacks to ``(C, ...)`` and contracts against the normalized
-        weights in one ``tensordot`` instead of C scalar multiply-adds."""
+        """Sample-weighted mean of client deltas (list-of-pytrees form — the
+        sequential fallback path's aggregation).  Each leaf stacks to
+        ``(C, ...)`` and contracts against the normalized weights in one
+        ``tensordot`` instead of C scalar multiply-adds."""
         w = jnp.asarray(weights, jnp.float32)
         w = w / jnp.sum(w)
         return tree_map(
@@ -422,21 +634,28 @@ class Strategy:
             adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
             train_head=self.head is not None)
 
-    def plan_masks(self, client, round_idx) -> dict:
-        """Runtime mask values for the plan's declared masks (traced args)."""
+    def plan_masks(self, sim, client, round_idx) -> dict:
+        """Runtime values for the plan's declared masks and program inputs
+        (traced args): layer/rank masks, per-client RNG keys
+        (``grad_key``), auxiliary conditioning like C2A's label histogram.
+        ``sim`` gives access to population statistics; per-client leaves
+        stack along a cohort axis (``stack_masks``)."""
         return {}
 
-    # ----------------------------------------------- legacy trainable views
-    def master_trainable(self):
-        t = {"adapters": self.adapters}
-        if self.head is not None:
-            t["head"] = self.head
-        return t
+    def init_trainable(self, plan: TrainablePlan):
+        """The round-start trainable for a plan.  Strategies with extra
+        trainable leaves beyond adapters/head/embedding (e.g. C2A's
+        hypernetwork) extend the dict here."""
+        return self.engine.init_trainable(plan, self._params, self.adapters,
+                                          self.head)
 
-    def _commit(self, trainable):
-        self.adapters = trainable["adapters"]
-        if "head" in trainable:
-            self.head = trainable["head"]
+    def commit_trainable(self, plan: TrainablePlan, new):
+        """Commit an aggregated cohort output back into strategy state.
+        ``new`` is trainable-shaped for delta-style grad programs; strategies
+        whose program uploads something else (FedKSeed's coefficients)
+        materialize it here."""
+        self._params, self.adapters, self.head = self.engine.commit(
+            plan, self._params, self.adapters, self.head, new)
 
     # -------------------------------------------------- generic plan round
     def cohort_aggregate(self, plan: TrainablePlan):
@@ -468,38 +687,47 @@ class Strategy:
             # an earlier group's step must never be re-read, so later groups
             # see earlier commits (rounds have one group in practice)
             batches = sim.cohort_batches(cohort, self.chain.local_steps)
-            masks = stack_masks([self.plan_masks(c, round_idx)
+            masks = stack_masks([self.plan_masks(sim, c, round_idx)
                                  for c in cohort])
             weights = jnp.asarray([c.n_samples for c in cohort], jnp.float32)
-            tr0 = self.engine.init_trainable(plan, self._params, self.adapters,
-                                             self.head)
+            tr0 = self.init_trainable(plan)
             step = self.engine.cohort_step(plan, self.cohort_aggregate(plan))
             new, _loss = step(tr0, self._params, self.adapters, batches, masks,
                               weights)
-            self._params, self.adapters, self.head = self.engine.commit(
-                plan, self._params, self.adapters, self.head, new)
+            self.commit_trainable(plan, new)
 
     def sequential_round(self, sim, clients, round_idx):
         """Legacy per-client dispatch loop: one jitted ``local_step`` call per
-        client per local step, host-side delta aggregation.  Kept as the
-        benchmark baseline (``bench_round``) and the fallback for strategies
-        whose server aggregation cannot be traced into the cohort step."""
-        plans, all_masks, deltas, weights = [], [], [], []
+        client per local step (one ``client_update_fn`` call per client for
+        whole-client grad programs), host-side update aggregation.  Kept as
+        the benchmark baseline (``bench_round``) and the fallback for
+        strategies whose server aggregation cannot be traced into the cohort
+        step."""
+        plans, all_masks, updates, weights = [], [], [], []
         for c in clients:
             plan = self.plan(c, round_idx)
-            masks = self.plan_masks(c, round_idx)
-            tr0 = self.engine.init_trainable(plan, self._params, self.adapters,
-                                             self.head)
-            step = self.engine.local_step(plan)
-            tr, opt_state = tr0, self.opt.init(tr0)
-            for batch in sim.client_batches(c, self.chain.local_steps):
-                tr, opt_state, _, _ = step(tr, opt_state, self._params,
-                                           self.adapters, batch, masks)
+            masks = self.plan_masks(sim, c, round_idx)
+            tr0 = self.init_trainable(plan)
+            if _is_whole_client(plan):
+                raw = sim.client_batches(c, self.chain.local_steps)
+                batches = {k: jnp.stack([jnp.asarray(b[k]) for b in raw])
+                           for k in raw[0]}
+                upd, _ = self.engine.client_update_fn(plan)(
+                    tr0, self._params, self.adapters, batches, masks)
+                updates.append(upd)
+            else:
+                step = self.engine.local_step(plan)
+                tr, opt_state = tr0, self.opt.init(tr0)
+                for i, batch in enumerate(
+                        sim.client_batches(c, self.chain.local_steps)):
+                    tr, opt_state, _, _ = step(tr, opt_state, self._params,
+                                               self.adapters, batch,
+                                               fold_step_masks(masks, i))
+                updates.append(tree_map(lambda a, b: a - b, tr, tr0))
             plans.append(plan)
             all_masks.append(masks)
-            deltas.append(tree_map(lambda a, b: a - b, tr, tr0))
             weights.append(c.n_samples)
-        self.aggregate(round_idx, plans, deltas, weights, all_masks)
+        self.aggregate(round_idx, plans, updates, weights, all_masks)
 
     def aggregate(self, round_idx, plans, deltas, weights, masks):
         """Weighted FedAvg of deltas, scattered back through the plan spec.
@@ -509,21 +737,9 @@ class Strategy:
             return
         plan = plans[0]
         agg = self.engine.fedavg(deltas, weights)
-        master = self.engine.init_trainable(plan, self._params, self.adapters,
-                                            self.head)
+        master = self.init_trainable(plan)
         new = tree_map(lambda a, d: (a + d).astype(a.dtype), master, agg)
-        self._params, self.adapters, self.head = self.engine.commit(
-            plan, self._params, self.adapters, self.head, new)
-
-    def _fedavg(self, deltas, weights):
-        """Legacy helper for strategies with bespoke rounds (C2A, FwdLLM):
-        average full-trainable deltas and commit."""
-        if not deltas:
-            return
-        agg = self.engine.fedavg(deltas, weights)
-        new = tree_map(lambda a, d: (a + d).astype(a.dtype),
-                       self.master_trainable(), agg)
-        self._commit(new)
+        self.commit_trainable(plan, new)
 
     # ---------------------------------------------------------------- eval
     def evaluate(self, batch):

@@ -1,11 +1,19 @@
-"""Zeroth-order / forward-gradient optimizers for the memory-aware baselines.
+"""Zeroth-order / forward-gradient estimators for the backprop-free grad
+programs (``repro.fed.strategies.GRAD_PROGRAMS``).
 
 * FwdLLM [arXiv:2308.13894]: backprop-free fine-tuning via forward-mode
   directional derivatives (here the SPSA central-difference estimator with
-  antithetic perturbations — activation-free like the paper's forward grads).
+  antithetic perturbations, vectorized over perturbation samples with
+  ``vmap`` — activation-free like the paper's forward grads).
 * FedKSeed [arXiv:2312.06353]: zeroth-order steps restricted to K shared
   random seeds; a client round is summarised by K scalar coefficients
-  ("communication under 18 KB").
+  ("communication under 18 KB").  ``kseed_directional`` is the traceable
+  per-client estimator (``lax.scan`` over the seed axis keeps a single
+  perturbation live at a time — the method's memory frugality survives the
+  trace); ``kseed_apply`` is the one-shot server-side materialization.
+
+Everything here is jit/vmap-compatible: the federated engine calls these
+inside its batched cohort step.
 """
 from __future__ import annotations
 
@@ -22,37 +30,60 @@ def _perturbation(key, params):
     return jax.tree_util.tree_unflatten(treedef, vs)
 
 
-def spsa_grad(loss_fn, params, key, eps=1e-3, n_samples=1):
-    """SPSA gradient estimate: mean over antithetic direction pairs.
-    loss_fn: params -> scalar.  Two forward passes per sample, no backprop."""
+def spsa_value_and_grad(loss_fn, params, key, eps=1e-3, n_samples=1):
+    """SPSA estimate of (loss, grad): mean over antithetic direction pairs,
+    vectorized over the sample axis.  ``loss_fn: params -> scalar``.  Two
+    forward passes per sample, no backprop; the returned loss is the mean of
+    the central pair evaluations — ``loss(params) + O(eps²)``, so no extra
+    forward pass is spent on reporting."""
     def one(key):
         v = _perturbation(key, params)
         lp = loss_fn(tree_axpy(eps, v, params))
         lm = loss_fn(tree_axpy(-eps, v, params))
         coeff = (lp - lm) / (2 * eps)
-        return tree_map(lambda u: coeff * u, v), coeff
+        return tree_map(lambda u: coeff * u, v), coeff, (lp + lm) / 2
 
     keys = jax.random.split(key, n_samples)
-    grads, coeffs = jax.vmap(one)(keys)
+    grads, coeffs, losses = jax.vmap(one)(keys)
     g = tree_map(lambda u: jnp.mean(u, axis=0), grads)
+    return jnp.mean(losses), g, coeffs
+
+
+def spsa_grad(loss_fn, params, key, eps=1e-3, n_samples=1):
+    """Gradient-only view of ``spsa_value_and_grad`` (legacy signature)."""
+    _, g, coeffs = spsa_value_and_grad(loss_fn, params, key, eps=eps,
+                                       n_samples=n_samples)
     return g, coeffs
 
 
-def kseed_coeffs(loss_fn, params, seeds, eps=1e-3):
-    """FedKSeed client step: for each of K fixed seeds, estimate the
-    directional derivative.  Returns (K,) coefficients — the entire client
-    upload."""
-    def one(seed):
-        v = _perturbation(jax.random.PRNGKey(seed), params)
+def kseed_directional(loss_fn, params, seeds, eps=1e-3):
+    """FedKSeed client estimator: directional derivative along each of the K
+    fixed seed-reconstructed directions.  ``seeds`` is a (K,) int array —
+    traced, so one compilation serves any seed set; ``lax.scan`` over the
+    seed axis keeps one perturbation live at a time.  Returns ((K,) coeffs —
+    the entire client upload — and the mean central loss estimate)."""
+    def one(_, s):
+        v = _perturbation(jax.random.PRNGKey(s), params)
         lp = loss_fn(tree_axpy(eps, v, params))
         lm = loss_fn(tree_axpy(-eps, v, params))
-        return (lp - lm) / (2 * eps)
+        return None, ((lp - lm) / (2 * eps), (lp + lm) / 2)
 
-    return jnp.stack([one(int(s)) for s in seeds])
+    _, (coeffs, losses) = jax.lax.scan(one, None,
+                                       jnp.asarray(seeds, jnp.int32))
+    return coeffs, jnp.mean(losses)
+
+
+def kseed_coeffs(loss_fn, params, seeds, eps=1e-3):
+    """Legacy list-of-seeds wrapper around ``kseed_directional``."""
+    coeffs, _ = kseed_directional(loss_fn, params, seeds, eps=eps)
+    return coeffs
 
 
 def kseed_apply(params, seeds, coeffs, lr):
-    """Server/client replay: θ ← θ − lr Σ_k c_k v_k (seed-reconstructed)."""
+    """Server/client replay: θ ← θ − lr Σ_k c_k v_k (seed-reconstructed).
+    The perturbation for seed k depends on the *tree structure* of ``params``
+    — materialization must use the same structure the coefficients were
+    estimated on (see ``FedKSeed.commit_trainable``)."""
     for s, c in zip(seeds, coeffs):
         v = _perturbation(jax.random.PRNGKey(int(s)), params)
         params = tree_axpy(-lr * c, v, params)

@@ -18,34 +18,53 @@ import jax
 import jax.numpy as jnp
 
 from ..core.adapters import ActiveAdapters
-from ..fed.strategies import TrainablePlan, cohort_fedavg, make_client_update
+from ..fed.strategies import (GRAD_PROGRAMS, TrainablePlan, cohort_fedavg,
+                              make_client_update)
 from ..models.config import ChainConfig, ModelConfig
 from ..models.transformer import ChainSegments, decode_step, prefill
 from ..optim.base import make_optimizer
-from ..utils.tree import tree_map
 
 
 def _make_plan_train_step(cfg: ModelConfig, chain: ChainConfig,
                           plan: TrainablePlan):
-    """step(params, adapters, batch) -> (adapters', metrics) for any plan.
+    """step(params, adapters, batch, key=None) -> (adapters', metrics) for
+    any plan — the plan's gradient program (``grad=``) dispatches exactly as
+    on the single-host cohort path.
 
     batch leaves: (C, local_steps, b, ...) — client cohorts × local steps ×
     per-step microbatch; vmap strips C, scan strips ls.  M-RoPE ``positions``
     carry their 3-axis after the cohort axes: (C, ls, 3, b, S).  FedAvg is
     the uniform mean over the cohort axis — under pjit it lowers to the
     cross-replica all-reduce that *is* the paper's round communication.
+    Stochastic programs (``"spsa"``) take a PRNG ``key``, folded per cohort
+    row then per local step (same derivation as the federated engine).
     """
+    if GRAD_PROGRAMS[plan.grad].whole_client:
+        raise ValueError(
+            f"grad program {plan.grad!r} returns a program-defined upload, "
+            "not an adapter delta — the pod step's FedAvg + scatter commit "
+            "cannot consume it (use the federated engine's cohort path)")
     opt = make_optimizer(chain.optimizer, chain.lr)
     client_update = make_client_update(cfg, chain, plan, opt)
 
-    def step(params, adapters, batch):
+    def step(params, adapters, batch, key=None):
+        if key is None and GRAD_PROGRAMS[plan.grad].needs_rng:
+            raise ValueError(
+                f"grad program {plan.grad!r} is stochastic: pass a PRNG key "
+                "to the train step (step(params, adapters, batch, key))")
         trainable0 = {"adapters": plan.adapters.train_slice(adapters)}
-        finals, losses = jax.vmap(
-            lambda cb: client_update(trainable0, params, adapters, cb, {}))(
-                batch)
-        deltas = tree_map(lambda f, t0: f - t0, finals, trainable0)
         C = jax.tree_util.tree_leaves(batch)[0].shape[0]
-        new = cohort_fedavg(trainable0, deltas, jnp.ones((C,), jnp.float32),
+        if key is None:
+            updates, losses = jax.vmap(
+                lambda cb: client_update(trainable0, params, adapters, cb,
+                                         {}))(batch)
+        else:
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(C))
+            updates, losses = jax.vmap(
+                lambda cb, k: client_update(trainable0, params, adapters, cb,
+                                            {"grad_key": k}))(batch, keys)
+        new = cohort_fedavg(trainable0, updates, jnp.ones((C,), jnp.float32),
                             {})
         adapters = plan.adapters.scatter_train(adapters, new["adapters"])
         return adapters, {"loss": jnp.mean(losses)}
@@ -64,11 +83,15 @@ def make_fed_train_step(cfg: ModelConfig, chain: ChainConfig,
     return _make_plan_train_step(cfg, chain, plan)
 
 
-def make_e2e_train_step(cfg: ModelConfig, chain: ChainConfig):
+def make_e2e_train_step(cfg: ModelConfig, chain: ChainConfig,
+                        grad: str = "ad", grad_cfg: tuple = ()):
     """Full Adapters† — end-to-end update of every adapter (the paper's
-    memory-unconstrained upper bound).  Same batch layout as the fed step."""
+    memory-unconstrained upper bound).  Same batch layout as the fed step.
+    ``grad``/``grad_cfg`` select the gradient program (``"spsa"`` gives the
+    pod-scale backprop-free variant; pass the step a PRNG ``key``)."""
     plan = TrainablePlan(adapters=ActiveAdapters.full(cfg.total_chain_layers),
-                         train_head=False, loss="ce", remat=True)
+                         train_head=False, loss="ce", remat=True,
+                         grad=grad, grad_cfg=tuple(grad_cfg))
     return _make_plan_train_step(cfg, chain, plan)
 
 

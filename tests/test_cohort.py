@@ -1,5 +1,7 @@
-"""Batched cohort execution (ISSUE 2): cohort-vs-sequential equivalence for
-a windowed (chainfed), a layer-masked (fedra) and a rank-masked (flora)
+"""Batched cohort execution (ISSUE 2) + GradProgram dispatch (ISSUE 4):
+cohort-vs-sequential equivalence for a windowed (chainfed), a layer-masked
+(fedra), a rank-masked (flora), a perturbation-grad (fwdllm), a seed-space
+(fedkseed), a transform-hooked (c2a) and an embedding-tuning (fedembed)
 strategy, the cohort batch stacking/padding, the fused FedAvg, the
 plan-driven pod step, and fused-vs-unfused adapter numerics."""
 import dataclasses
@@ -38,7 +40,7 @@ def build_sim(seed=3, n_clients=6, clients_per_round=3, batch_size=4):
 
 def run_one_round(name, path, rounds=2):
     """Fresh sim + strategy (identical seeds), then ``rounds`` rounds on the
-    requested path; returns the aggregated (adapters, head)."""
+    requested path; returns the aggregated (adapters, head, embed)."""
     sim = build_sim()
     opts = {"use_foat": False} if name == "chainfed" else {}
     strat = make_strategy(name, CFG, CHAIN, KEY, **opts)
@@ -53,19 +55,35 @@ def run_one_round(name, path, rounds=2):
             strat.round(sim, clients, r)
     head = None if strat.head is None else np.asarray(strat.head["w"])
     return (np.asarray(strat.adapters["down"]),
-            np.asarray(strat.adapters["up"]), head)
+            np.asarray(strat.adapters["up"]), head,
+            np.asarray(strat.params["embed"]["table"], np.float32))
 
 
 # ------------------------------------------------- cohort ≡ sequential round
-@pytest.mark.parametrize("name", ["chainfed", "fedra", "flora"])
+@pytest.mark.parametrize("name", ["chainfed", "fedra", "flora", "fwdllm",
+                                  "fedkseed", "c2a", "fedembed"])
 def test_cohort_matches_sequential(name):
-    """Windowed (chainfed), layer-masked (fedra) and rank-masked (flora)
-    rounds must produce the same aggregated adapters/head on both paths."""
+    """Windowed (chainfed), layer-masked (fedra), rank-masked (flora),
+    perturbation-grad (fwdllm), seed-space (fedkseed), transform-hooked
+    (c2a) and embedding-tuning (fedembed) rounds must produce the same
+    aggregated adapters/head/embedding on both paths."""
     seq = run_one_round(name, "sequential")
     coh = run_one_round(name, "cohort")
     for a, b in zip(seq, coh):
         if a is not None:
             np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-5)
+
+
+def test_grad_program_round_uses_cohort_step():
+    """Non-"ad" grad programs ride the batched cohort path: one cohort
+    compilation, no per-client/per-step dispatch."""
+    for name in ("fwdllm", "fedkseed"):
+        sim = build_sim()
+        strat = make_strategy(name, CFG, CHAIN, KEY)
+        clients = sim.sample_clients(strat.memory_method)
+        strat.round(sim, clients, 0)
+        assert len(strat.engine._cohort) == 1, name
+        assert len(strat.engine._steps) == 0, name
 
 
 def test_cohort_round_uses_cohort_step():

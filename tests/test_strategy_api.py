@@ -24,11 +24,11 @@ CHAIN = ChainConfig(window=2, local_steps=1, lr=1e-3)
 KEY = jax.random.PRNGKey(0)
 
 ALL_NAMES = ["full_adapters", "linear_probing", "fedadapter", "c2a",
-             "fwdllm", "fedkseed", "flora", "fedra", "chainfed"]
+             "fwdllm", "fedkseed", "flora", "fedra", "fedembed", "chainfed"]
 
 
 # ---------------------------------------------------------------- registry
-def test_registry_lists_all_nine():
+def test_registry_lists_all_builtins():
     avail = available_strategies()
     for name in ALL_NAMES:
         assert name in avail, name
@@ -102,7 +102,7 @@ def test_layer_masked_step_confines_updates():
     strat = make_strategy("fedadapter", CFG,
                           CHAIN.replace(optimizer="sgd", lr=1e-2), KEY)
     plan = strat.plan(None, 0)
-    mask = strat.plan_masks(None, 0)["layer_mask"]
+    mask = strat.plan_masks(None, None, 0)["layer_mask"]
     assert float(mask.sum()) < CFG.total_chain_layers  # partial at round 0
     batch = {"tokens": jnp.ones((2, 8), jnp.int32),
              "labels": jnp.ones((2, 8), jnp.int32)}
