@@ -144,8 +144,65 @@ def bench_one(name, wl: Workload, chain, rounds, seed=0):
     return out
 
 
+def mode_workload(smoke: bool) -> Workload:
+    """The scheduler-mode sweep runs a mildly compute-bound workload (batch
+    4, seq 16): the modes share the same per-update math, so the comparison
+    isolates the *scheduling* overhead (event heap, buffered commits,
+    staleness weighting) rather than re-measuring dispatch latency."""
+    cfg = get_config("bert_tiny").reduced() if smoke else get_config("bert_tiny")
+    return Workload(cfg, seq_len=16, batch_size=4, n_clients=8,
+                    clients_per_round=4, local_steps=2, train_head=False)
+
+
+def bench_modes(modes, smoke: bool, rounds: int, seed=0):
+    """Throughput + wallclock-vs-accuracy sweep over scheduler modes: one
+    fresh (sim, strategy) per mode, a warmup schedule covering every DLCT
+    offset, then ``rounds`` timed server commits.  ``steps_per_s`` counts
+    committed client-updates × local steps per host-wall second — the
+    number the CI gate compares (async must hold ≥ 0.9× sync)."""
+    from repro.fed.registry import make_strategy
+    from repro.fed.runtime import FedScheduler
+
+    rounds = max(rounds, 6)     # enough commits for a stable steps/s gate
+    wl = mode_workload(smoke)
+    chain = ChainConfig(window=3, local_steps=wl.local_steps, lr=1e-3,
+                        train_head=wl.train_head)
+    n_offsets = max(1, wl.cfg.total_chain_layers - chain.window + 1)
+    out = {}
+    for mode in modes:
+        sim = make_bench_sim(wl, seed=seed)
+        strat = make_strategy("chainfed", wl.cfg, chain,
+                              jax.random.PRNGKey(seed), use_foat=False)
+        # warmup covers every window offset so the timed region hits only
+        # cached compilations (same protocol as time_path)
+        FedScheduler(sim, strat, mode=mode).run(n_offsets,
+                                                eval_every=n_offsets + 1)
+        _block(strat)
+        sched = FedScheduler(sim, strat, mode=mode)
+        t0 = time.perf_counter()
+        hist = sched.run(rounds, eval_every=max(1, rounds // 4))
+        _block(strat)
+        dt = time.perf_counter() - t0
+        steps = sched.committed_updates * chain.local_steps
+        out[mode] = {
+            "s_per_commit": dt / max(1, rounds),
+            "steps_per_s": steps / dt,
+            "committed_updates": sched.committed_updates,
+            "virtual_wallclock_s": hist[-1].wallclock if hist else 0.0,
+            "stale_updates": sum(m.stale_updates for m in hist),
+            "history": [{"round": m.round, "wallclock": m.wallclock,
+                         "loss": m.loss, "acc": m.acc,
+                         "stale_updates": m.stale_updates} for m in hist],
+        }
+        print(f"round/modes/{mode},{out[mode]['s_per_commit']*1e6:.0f},"
+              f"steps_per_s={out[mode]['steps_per_s']:.2f}"
+              f";virtual_s={out[mode]['virtual_wallclock_s']:.1f}",
+              flush=True)
+    return out
+
+
 def run(fast: bool = False, smoke: bool = False, rounds: int = None,
-        out_path=DEFAULT_OUT):
+        out_path=DEFAULT_OUT, modes=None):
     rounds = rounds or (2 if smoke else (4 if fast else 8))
     # smoke keeps one windowed, one full-stack and one perturbation-based
     # strategy so the CI gate covers every grad-program dispatch shape
@@ -172,6 +229,8 @@ def run(fast: bool = False, smoke: bool = False, rounds: int = None,
     doc = {"backend": jax.default_backend(),
            "mode": "smoke" if smoke else ("fast" if fast else "full"),
            "results": results}
+    if modes:
+        doc["modes"] = bench_modes(modes, smoke, rounds)
     pathlib.Path(out_path).write_text(json.dumps(doc, indent=2) + "\n")
     return rows, doc
 
@@ -181,12 +240,17 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config + regression guard: cohort per-step "
-                         "time must be ≤ 1.5× the legacy path")
+                         "time must be ≤ 1.5× the legacy path, and (with "
+                         "--modes) async ≥ 0.9× sync steps/s")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--modes", default=None,
+                    help="comma-separated scheduler modes to sweep "
+                         "(e.g. sync,semisync,async)")
     ap.add_argument("--out", default=str(DEFAULT_OUT))
     args = ap.parse_args(argv)
+    modes = [m.strip() for m in args.modes.split(",")] if args.modes else None
     rows, doc = run(fast=args.fast, smoke=args.smoke, rounds=args.rounds,
-                    out_path=args.out)
+                    out_path=args.out, modes=modes)
     if args.smoke:
         for rec in doc["results"]:
             per_step_cohort = 1.0 / rec["cohort"]["steps_per_s"]
@@ -196,6 +260,15 @@ def main(argv=None):
                 f"{per_step_cohort:.4f}s/step vs legacy "
                 f"{per_step_legacy:.4f}s/step")
         print("# smoke OK: cohort path within 1.5× of legacy per step")
+        if modes and "sync" in doc.get("modes", {}) \
+                and "async" in doc.get("modes", {}):
+            s = doc["modes"]["sync"]["steps_per_s"]
+            a = doc["modes"]["async"]["steps_per_s"]
+            assert a >= 0.9 * s, (
+                f"async runtime regressed: {a:.2f} steps/s vs sync "
+                f"{s:.2f} steps/s (gate: ≥ 0.9×)")
+            print(f"# smoke OK: async {a:.2f} steps/s ≥ 0.9× sync "
+                  f"{s:.2f} steps/s")
 
 
 if __name__ == "__main__":

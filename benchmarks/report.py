@@ -117,6 +117,45 @@ def round_throughput_table(path=ROUND_JSON):
     return "\n".join(lines)
 
 
+def scheduler_modes_table(path=ROUND_JSON):
+    """§Scheduler-modes tables from the ``modes`` section of
+    BENCH_round_throughput.json (written by ``benchmarks.bench_round
+    --modes ...``): a per-mode throughput summary plus the
+    wall-clock-vs-accuracy trajectory that makes async/semisync runs
+    comparable to sync on the virtual clock; None when absent."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    doc = json.loads(path.read_text())
+    modes = doc.get("modes")
+    if not modes:
+        return None
+    sync_sps = modes.get("sync", {}).get("steps_per_s")
+    lines = ["| mode | s/commit | steps/s | vs sync | virtual wallclock s | "
+             "stale updates |",
+             "|---|---|---|---|---|---|"]
+    for mode, r in modes.items():
+        rel = (f"{r['steps_per_s'] / sync_sps:.2f}×"
+               if sync_sps else "—")
+        lines.append(
+            f"| {mode} | {r['s_per_commit'] * 1e3:.1f}ms "
+            f"| {r['steps_per_s']:.2f} | {rel} "
+            f"| {r['virtual_wallclock_s']:.1f} | {r['stale_updates']} |")
+    lines += ["", "Wall-clock vs accuracy (virtual seconds → eval accuracy):",
+              "",
+              "| mode | " + " | ".join(
+                  f"eval {i}" for i in range(max(
+                      len(r.get("history", [])) for r in modes.values()))) +
+              " |",
+              "|---|" + "---|" * max(len(r.get("history", []))
+                                     for r in modes.values())]
+    for mode, r in modes.items():
+        cells = [f"{h['wallclock']:.1f}s → {h['acc']:.3f}"
+                 for h in r.get("history", [])]
+        lines.append(f"| {mode} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
 def serve_throughput_table(path=SERVE_JSON):
     """§Serve-throughput table from BENCH_serve_throughput.json (written by
     ``benchmarks.bench_serve``); None when the artifact is absent."""
@@ -155,6 +194,10 @@ def main():
     if rt is not None:
         print("\n## §Round throughput (single host)\n")
         print(rt)
+    mt = scheduler_modes_table()
+    if mt is not None:
+        print("\n## §Scheduler modes (event-driven runtime, virtual clock)\n")
+        print(mt)
     st = serve_throughput_table()
     if st is not None:
         print("\n## §Serve throughput (single host)\n")

@@ -121,6 +121,46 @@ def _pack(params, acts, ad):
             "adapter_state": int(ad), "total": int(params + acts + ad)}
 
 
+def round_flops(cfg: ModelConfig, method: str, batch: int, seq: int,
+                local_steps: int = 1, window: int = 3, l_start: int = 0,
+                n_samples: int = 4, kseeds: int = 8,
+                lora_rank: int = 8) -> float:
+    """Analytic FLOPs for one client's local round under each method's
+    execution model — the compute half of the event-driven runtime's
+    virtual-clock cost (``repro.fed.runtime``; the communication half is
+    ``Strategy.comm_bytes_per_round`` over ``DeviceProfile.bandwidth``).
+
+    The estimate is the standard 2·params·tokens forward cost with a 2×
+    forward surcharge for the layers backprop traverses; zeroth-order
+    methods pay forward passes only (2 per perturbation/seed), and
+    CHAINFED's chain execution pays forward for prefix+window but backward
+    for the window alone (the suffix is never executed)."""
+    L = cfg.total_chain_layers
+    tokens = batch * seq
+    f_layer = 2.0 * layer_param_count(cfg) * tokens
+    f_emb = 2.0 * (cfg.padded_vocab * cfg.d_model + cfg.d_model) * tokens
+    f_full = 2.0 * total_param_count(cfg) * tokens
+
+    if method in ("full_adapters", "fedadapter", "c2a", "flora", "fedembed"):
+        step = 3.0 * f_full                      # fwd + bwd through all layers
+    elif method == "linear_probing":
+        step = f_full + 2.0 * f_emb              # bwd touches the head only
+    elif method == "fwdllm":
+        step = 2.0 * max(1, n_samples) * f_full  # antithetic forwards only
+    elif method == "fedkseed":
+        step = 2.0 * max(1, kseeds) * f_full     # 2 forwards per seed
+    elif method == "fedra":
+        keep = max(1, L // 2)
+        step = 3.0 * (f_emb + keep * f_layer)    # resident half-chain fwd+bwd
+    elif method == "chainfed":
+        run = min(L, max(0, l_start) + max(1, window))
+        step = (f_emb + run * f_layer            # prefix+window forward
+                + 2.0 * max(1, window) * f_layer)  # window-only backward
+    else:
+        raise ValueError(method)
+    return float(step) * max(1, local_steps)
+
+
 def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
                          l_start: int = 0, lora_rank: int = 8, kseeds: int = 0) -> int:
     """Uplink bytes per client per round (paper §H.2 communication claim)."""

@@ -1,8 +1,81 @@
 """Federated data partitioning: IID and Dirichlet non-IID (paper §5.1,
-α = 1), plus per-client batch iteration."""
+α = 1), per-client batch iteration, and device-profile sampling (the
+heterogeneous edge population the event-driven runtime schedules over)."""
 from __future__ import annotations
 
+import dataclasses
+from typing import List, Optional, Tuple
+
 import numpy as np
+
+
+# ========================================================== device profiles
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Static hardware description of one edge client.
+
+    ``flops`` is the effective *training* throughput (FLOP/s, all overheads
+    amortized in), ``bandwidth`` the uplink in bytes/s, ``memory`` the
+    device RAM budget in bytes.  ``repro.fed.runtime`` derives each client's
+    per-round virtual wall-clock from these plus the analytic cost model in
+    ``repro.core.memory``; strategies may read ``tier``/``memory`` to assign
+    memory-stratified perturbation budgets (per-tier SPSA ``n_samples``,
+    FedKSeed ``K``)."""
+    tier: str
+    flops: float        # effective compute throughput (FLOP/s)
+    bandwidth: float    # uplink bytes/s
+    memory: int         # bytes
+
+
+# (name, memory-budget ceiling as a fraction of the full-adapter reference
+# footprint, effective FLOP/s, uplink bytes/s) — mirrors the paper's device
+# spread (§5.1: 4–12 GB phones/SBCs vs the ~27 GB LLaMA2-7B requirement):
+# low ≈ a phone-class NPU on metered uplink, mid ≈ a flagship phone / SBC,
+# high ≈ a desktop-class edge box on broadband.
+DEVICE_TIERS: Tuple[Tuple[str, float, float, float], ...] = (
+    ("low", 0.40, 2.0e9, 2.5e6),
+    ("mid", 0.90, 8.0e9, 1.0e7),
+    ("high", float("inf"), 2.5e10, 4.0e7),
+)
+
+
+def profile_tier(mem_ratio: float,
+                 tiers=DEVICE_TIERS) -> Tuple[str, float, float]:
+    """Tier row for a device whose memory budget is ``mem_ratio`` × the
+    reference footprint."""
+    for name, ceil, flops, bw in tiers:
+        if mem_ratio <= ceil:
+            return name, flops, bw
+    name, _, flops, bw = tiers[-1]
+    return name, flops, bw
+
+
+def sample_profiles(budgets, ref: int, seed: int = 0, jitter: float = 0.2,
+                    tiers=DEVICE_TIERS) -> List[DeviceProfile]:
+    """Device profiles for a client population with known memory ``budgets``.
+
+    The tier is deterministic in ``budget / ref`` (so the memory wall and
+    the compute/link speeds tell one consistent story per device);
+    compute/link throughputs are jittered ±``jitter`` with an rng private to
+    this function — the caller's sampling stream is untouched, so adding
+    profiles to an existing testbed never perturbs client selection."""
+    rng = np.random.default_rng(np.uint32(seed) ^ np.uint32(0x9E3779B9))
+    out = []
+    for b in np.asarray(budgets, np.int64):
+        name, flops, bw = profile_tier(float(b) / float(max(1, ref)), tiers)
+        jf, jb = 1.0 + jitter * rng.uniform(-1, 1, 2)
+        out.append(DeviceProfile(tier=name, flops=flops * jf,
+                                 bandwidth=bw * jb, memory=int(b)))
+    return out
+
+
+def uniform_profiles(n: int, flops: float = 1.0e10, bandwidth: float = 1.0e7,
+                     memory: Optional[int] = None) -> List[DeviceProfile]:
+    """A homogeneous population (every device identical) — the degenerate
+    case where ``async``/``semisync`` scheduling reduces to ``sync``."""
+    return [DeviceProfile(tier="uniform", flops=flops, bandwidth=bandwidth,
+                          memory=int(memory) if memory else 0)
+            for _ in range(n)]
 
 
 def iid_partition(n_samples: int, n_clients: int, seed: int = 0):

@@ -24,16 +24,28 @@ class FedKSeed(Strategy):
     K = 8
     EPS = 1e-3
 
-    def __init__(self, cfg, chain, key):
+    def __init__(self, cfg, chain, key, k_by_tier=None):
         super().__init__(cfg, chain, key)
         self.seeds = tuple(range(1000, 1000 + self.K))
+        # memory-stratified seed budgets (ISSUE 5): a client's tier selects
+        # a *prefix* of the shared seed list, so small devices pay fewer
+        # forward passes; each K is its own plan and the cohort/event
+        # runtimes bucket by plan — per-bucket compiled steps, per-bucket
+        # coefficient aggregation/materialization, no ragged cohorts
+        self.k_by_tier = dict(k_by_tier) if k_by_tier else None
+
+    def _seeds(self, client):
+        if self.k_by_tier and getattr(client, "profile", None):
+            k = int(self.k_by_tier.get(client.profile.tier, self.K))
+            return self.seeds[:max(1, min(k, self.K))]
+        return self.seeds
 
     def plan(self, client, round_idx) -> TrainablePlan:
         return TrainablePlan(
             adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
             train_head=self.head is not None,
             grad="kseed",
-            grad_cfg=(("seeds", self.seeds), ("eps", self.EPS)))
+            grad_cfg=(("seeds", self._seeds(client)), ("eps", self.EPS)))
 
     # The kseed program perturbs {"_base": params, **trainable}; the seed
     # reconstruction is tree-structure-dependent, so materialization must
@@ -53,7 +65,8 @@ class FedKSeed(Strategy):
         return agg
 
     def commit_trainable(self, plan, new):
-        full = kseed_apply(self._full_tree(), self.seeds,
+        seeds = plan.grad_options["seeds"]    # the plan's (possibly tiered) K
+        full = kseed_apply(self._full_tree(), seeds,
                            [float(c) for c in new["kseed"]], self.chain.lr)
         self._params = full["_base"]
         self.adapters = full["adapters"]

@@ -3,11 +3,21 @@ forward/zeroth-order gradients on the trainables — eliminates activation
 storage at the cost of noisy gradient estimates (the paper's Table 1 shows
 its accuracy penalty, incl. non-convergence on 20NEWS).
 
-The whole method is a plan: full adapter span + CE loss + the ``"spsa"``
-gradient program, so the batched cohort path (vmap over clients, fused
-FedAvg, donation) comes for free from ``PlanEngine.cohort_step``.  Per-client
-RNG is derived as ``fold_in(fold_in(fold_in(key, round), client), step)`` —
-stateless, so re-running a round reproduces bit-identical updates."""
+The whole method is a plan: full adapter span + CE loss + a perturbation
+gradient program — ``"spsa"`` (antithetic central differences, the memory
+profile of forward gradients) or the true forward-mode ``"jvp"`` program
+(``jax.jvp`` per direction, FwdLLM's actual estimator; registered as the
+``fwdllm_jvp`` variant) — so the batched cohort path (vmap over clients,
+fused FedAvg) comes for free from ``PlanEngine``.  Per-client RNG is derived
+as ``fold_in(fold_in(fold_in(key, round), client), step)`` — stateless, so
+re-running a round reproduces bit-identical updates.
+
+**Memory-stratified perturbation budgets** (ISSUE 5): ``samples_by_tier``
+maps a client's ``DeviceProfile.tier`` to its ``n_samples`` — big devices
+draw more perturbation directions per step, small ones fewer.  Since
+``n_samples`` lives in the plan's frozen ``grad_cfg``, each tier is its own
+(hashable) plan: the cohort/event runtimes bucket clients by plan and run
+one compiled step per tier, with no recompiles as cohorts mix."""
 from __future__ import annotations
 
 import jax
@@ -24,17 +34,34 @@ class FwdLLM(Strategy):
     N_PERTURB = 4
     EPS = 1e-3
 
-    def __init__(self, cfg, chain, key):
+    def __init__(self, cfg, chain, key, grad_program="spsa",
+                 n_samples=None, samples_by_tier=None):
         super().__init__(cfg, chain, key)
         self._base_key = jax.random.fold_in(key, 1717)
+        self.grad_program = grad_program
+        self.n_samples = n_samples or self.N_PERTURB
+        self.samples_by_tier = dict(samples_by_tier) if samples_by_tier \
+            else None
+
+    def _n_samples(self, client) -> int:
+        if self.samples_by_tier and getattr(client, "profile", None):
+            return int(self.samples_by_tier.get(client.profile.tier,
+                                                self.n_samples))
+        return int(self.n_samples)
 
     def plan(self, client, round_idx) -> TrainablePlan:
+        cfg = (("n_samples", self._n_samples(client)),)
+        if self.grad_program == "spsa":    # jvp is exact — no eps knob
+            cfg = (("eps", self.EPS),) + cfg
         return TrainablePlan(
             adapters=ActiveAdapters.full(self.cfg.total_chain_layers),
             train_head=self.head is not None,
-            grad="spsa",
-            grad_cfg=(("eps", self.EPS), ("n_samples", self.N_PERTURB)))
+            grad=self.grad_program,
+            grad_cfg=cfg)
 
     def plan_masks(self, sim, client, round_idx):
         k = jax.random.fold_in(self._base_key, round_idx)
         return {"grad_key": jax.random.fold_in(k, client.cid)}
+
+
+register_strategy("fwdllm_jvp", grad_program="jvp")(FwdLLM)

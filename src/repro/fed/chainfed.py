@@ -4,6 +4,16 @@ shared ``PlanEngine`` — no second trainer class.  The per-round plan carries
 an ``ActiveAdapters.window`` spec; since plans key the engine's jit cache,
 the DLCT cyclic window reuses ≤ L compilations (per-offset stage cache).
 
+**Stage advance is event-driven** (ISSUE 5): the DLCT window no longer
+follows the caller's round index but the strategy's own *commit* counter —
+every server commit (a lockstep round, a semisync deadline cut, or an async
+buffer flush on the virtual clock) is one stage event.  With the default
+``advance="commits"`` policy the window advances every ``advance_every``
+commits, which on the sync path is bit-identical to the old
+round-counting schedule; ``advance="plateau"`` instead advances as soon as
+the committed window's loss stops improving (patience/tol below), so fast
+stages release their slot early — convergence events, not clock ticks.
+
 Ablation switches (paper Table 4), also registered as named variants:
   use_dlct=False → window size 1, no co-tuning overlap   (chainfed_wo_dlct)
   use_gpo=False  → λ = 0 (pure local objective)          (chainfed_wo_gpo)
@@ -25,18 +35,37 @@ class ChainFed(Strategy):
     memory_method = "chainfed"
 
     def __init__(self, cfg: ModelConfig, chain: ChainConfig, key,
-                 use_dlct=True, use_gpo=True, use_foat=True):
+                 use_dlct=True, use_gpo=True, use_foat=True,
+                 advance="commits", plateau_patience=3, plateau_tol=1e-3):
         if not use_dlct:
             chain = chain.replace(window=1)
         if not use_gpo:
             chain = chain.replace(lam=0.0)
+        if advance not in ("commits", "plateau"):
+            raise ValueError(f"advance policy {advance!r}: commits|plateau")
         self.use_foat = use_foat
+        self.advance = advance
+        self.plateau_patience = plateau_patience
+        self.plateau_tol = plateau_tol
         super().__init__(cfg, chain, key)
         self.l_start = 0
         self.schedule: ChainSchedule = make_schedule(cfg, 0, chain.window)
         self._foat_done = False
+        # event-driven stage state: commits since start, commits in the
+        # current stage, the stage's best committed loss and its streak of
+        # non-improving commits (plateau mode)
+        self._commits = 0
+        self._stage = 0
+        self._stage_commits = 0
+        self._stage_best = float("inf")
+        self._stage_bad = 0
 
     # ---- Phase 1: FOAT runs once, before federated rounds (Algorithm 1) ----
+    def begin(self, sim):
+        """Scheduler entry hook: FOAT is a clock-0 event for the semisync /
+        async modes (the sync path keeps the legacy inside-round ordering)."""
+        self.maybe_setup_foat(sim)
+
     def maybe_setup_foat(self, sim):
         if self._foat_done:
             return
@@ -62,15 +91,64 @@ class ChainFed(Strategy):
                                       self.chain.window)
         return self.l_start, scores
 
-    # ---- Phase 2: staged rounds as window plans --------------------------
+    # ---- Phase 2: staged windows advanced by commit events ---------------
     def plan(self, client, round_idx) -> TrainablePlan:
-        seg = self.schedule.segments(round_idx, self.chain.advance_every)
+        seg = self.schedule.segments(self._stage)
         spec = ActiveAdapters.window(self.cfg.total_chain_layers, seg.prefix,
                                      seg.window)
         # remat=True keeps the window scan checkpointed (forward_chain's
         # long-standing default for the GPO staged forward)
         return TrainablePlan(adapters=spec, train_head=self.head is not None,
                              loss="gpo", lam=self.chain.lam, remat=True)
+
+    def begin_commit(self):
+        """One *server* commit may aggregate several plan groups (async
+        buffers mixing dispatch stages, semisync carry-over): debounce the
+        per-``commit_trainable`` stage bookkeeping to a single event."""
+        self._in_commit = True
+        self._commit_pending = False
+
+    def end_commit(self):
+        self._in_commit = False
+        if self._commit_pending:
+            self._commit_pending = False
+            self._note_commit()
+
+    def commit_trainable(self, plan: TrainablePlan, new):
+        """Every committed aggregation — lockstep round, semisync deadline
+        cut, or async buffer flush — is one stage event; the DLCT window
+        advances on these, not on the caller's round numbering."""
+        super().commit_trainable(plan, new)
+        if getattr(self, "_in_commit", False):
+            self._commit_pending = True
+            return
+        self._note_commit()
+
+    def _note_commit(self):
+        self._commits += 1
+        self._stage_commits += 1
+        if self.advance == "plateau":
+            loss = self._last_round_loss
+            loss = float(loss) if loss is not None else float("inf")
+            # federated per-commit losses are noisy: a plateau is a *streak*
+            # of `patience` consecutive commits without improvement — one
+            # bad commit on a healthy downtrend resets nothing away
+            if loss < self._stage_best - self.plateau_tol:
+                self._stage_bad = 0
+            else:
+                self._stage_bad += 1
+            if loss < self._stage_best:
+                self._stage_best = loss
+            if self._stage_bad >= max(1, self.plateau_patience):
+                self._next_stage()
+        elif self._stage_commits >= max(1, self.chain.advance_every):
+            self._next_stage()
+
+    def _next_stage(self):
+        self._stage += 1
+        self._stage_commits = 0
+        self._stage_best = float("inf")
+        self._stage_bad = 0
 
     def round(self, sim, clients, round_idx):
         self.maybe_setup_foat(sim)
@@ -89,3 +167,4 @@ class ChainFed(Strategy):
 register_strategy("chainfed_wo_dlct", use_dlct=False)(ChainFed)
 register_strategy("chainfed_wo_gpo", use_gpo=False)(ChainFed)
 register_strategy("chainfed_wo_foat", use_foat=False)(ChainFed)
+register_strategy("chainfed_plateau", advance="plateau")(ChainFed)

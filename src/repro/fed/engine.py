@@ -14,7 +14,9 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from ..core.memory import peak_memory
-from ..data.partition import ClientSampler, dirichlet_partition, iid_partition
+from ..data.partition import (ClientSampler, DeviceProfile,
+                              dirichlet_partition, iid_partition,
+                              sample_profiles)
 from ..models.config import FedConfig, ModelConfig
 
 
@@ -31,6 +33,7 @@ class Client:
     sampler: ClientSampler
     n_samples: int
     mem_budget: int      # bytes
+    profile: Optional[DeviceProfile] = None   # device clock / link / tier
 
 
 class FedSim:
@@ -54,9 +57,13 @@ class FedSim:
                           tokens.shape[1])["total"]
         lo, hi = budget_range
         budgets = (self.rng.uniform(lo, hi, fed.n_clients) * ref).astype(np.int64)
+        # device profiles are deterministic in (budget, seed) and drawn from
+        # a *separate* rng stream — self.rng's draws (and hence client
+        # sampling) are identical with or without profiles
+        profiles = sample_profiles(budgets, ref, seed=fed.seed)
         self.clients: List[Client] = [
             Client(i, ClientSampler(shards[i], batch_size, fed.seed + i),
-                   len(shards[i]), int(budgets[i]))
+                   len(shards[i]), int(budgets[i]), profiles[i])
             for i in range(fed.n_clients)]
         self.memory_constrained = memory_constrained
         self.batch_size = batch_size
@@ -148,24 +155,18 @@ class RoundMetrics:
     acc: float
     n_participants: int
     comm_bytes: int = 0
+    wallclock: float = 0.0      # virtual seconds since experiment start
+    stale_updates: int = 0      # aggregated updates computed at an older
+                                # model version (semisync carry / async)
 
 
 def run_rounds(sim: FedSim, strategy, rounds: int, eval_every: int = 5,
                verbose: bool = False) -> List[RoundMetrics]:
-    """Generic driver: sample → local updates → aggregate → (eval)."""
-    history = []
-    eval_b = sim.eval_batch()
-    for r in range(rounds):
-        clients = sim.sample_clients(strategy.memory_method,
-                                     **strategy.memory_kwargs(r))
-        if clients:
-            strategy.round(sim, clients, r)
-        if (r + 1) % eval_every == 0 or r == rounds - 1:
-            loss, acc = strategy.evaluate(eval_b)
-            m = RoundMetrics(r, loss, acc, len(clients),
-                             strategy.comm_bytes_per_round())
-            history.append(m)
-            if verbose:
-                print(f"  round {r:3d} n={len(clients):2d} "
-                      f"loss={loss:.4f} acc={acc:.4f}")
-    return history
+    """Legacy lockstep driver — now a thin wrapper over the event-driven
+    ``FedScheduler`` in ``sync`` mode, which reproduces the historical
+    sample → local updates → aggregate → (eval) loop bit-identically while
+    also tracking each round's virtual wall-clock (the slowest sampled
+    device's compute + uplink time)."""
+    from .runtime import FedScheduler
+    return FedScheduler(sim, strategy, mode="sync").run(
+        rounds, eval_every=eval_every, verbose=verbose)

@@ -95,13 +95,22 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
                    rounds: int = 20, eval_every: int = 5, seed: int = 0,
                    memory_constrained: bool = True, pretrain_steps: int = 0,
                    params=None, sim=None, verbose: bool = False,
-                   strategy_opts: Optional[dict] = None) -> ExperimentResult:
+                   strategy_opts: Optional[dict] = None,
+                   mode: str = "sync",
+                   scheduler_opts: Optional[dict] = None) -> ExperimentResult:
     """High-level entry point: build (or accept) the federated testbed, make
     the named strategy, optionally swap in a pretrained base, run rounds.
 
     ``sim``/``params`` short-circuit testbed construction so benchmarks can
     share one pretrained base across methods; ``pretrain_steps`` > 0 LM-
     pretrains a base on the task corpus when ``params`` is not given.
+
+    ``mode`` selects the event-driven runtime's aggregation mode
+    (``"sync"`` — the legacy lockstep protocol — ``"semisync"`` or
+    ``"async"``; see ``repro.fed.runtime.FedScheduler``), and
+    ``scheduler_opts`` forwards its knobs (``buffer_size``, ``concurrency``,
+    ``deadline_quantile``, ``straggler``, ``bucket_pad``, ...).  In async
+    mode ``rounds`` counts server commits.
     """
     import jax
     import numpy as np
@@ -143,6 +152,12 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
     if params is not None:
         strat.params = params
 
-    history = run_rounds(sim, strat, rounds, eval_every=eval_every,
-                         verbose=verbose)
+    if mode == "sync" and not scheduler_opts:
+        history = run_rounds(sim, strat, rounds, eval_every=eval_every,
+                             verbose=verbose)
+    else:
+        from .runtime import FedScheduler
+        history = FedScheduler(sim, strat, mode=mode,
+                               **(scheduler_opts or {})).run(
+            rounds, eval_every=eval_every, verbose=verbose)
     return ExperimentResult(strat, sim, history)

@@ -1,0 +1,429 @@
+"""Event-driven heterogeneous federation runtime (ISSUE 5 tentpole).
+
+The lockstep ``run_rounds`` loop treated every eligible client as
+interchangeable; real edge cohorts are not — the paper's whole premise is
+the memory (and speed) disparity across devices.  ``FedScheduler`` replaces
+the round loop with a **virtual clock**: every ``Client`` carries a
+``DeviceProfile`` (compute FLOP/s, uplink bytes/s, memory — sampled in
+``repro.data.partition``), each dispatched client's round cost is derived
+from the analytic cost model (``core.memory.round_flops`` for compute,
+``Strategy.comm_bytes_per_round`` over the link for upload), and the
+scheduler pops client-*completion* events off a heap instead of iterating
+rounds.
+
+Three aggregation modes, all through the same ``PlanEngine`` machinery:
+
+* ``sync``     — bit-identical to the legacy ``run_rounds`` (which is now a
+  thin wrapper over this mode): sample a cohort, run one fused
+  ``cohort_step`` per plan group, advance the clock by the slowest sampled
+  device's compute + uplink time.
+* ``semisync`` — deadline cutoff: the server waits only until the
+  ``deadline_quantile``-fastest sampled device has finished; stragglers are
+  ``"drop"``-ed (their work is wasted — the realistic accounting) or
+  ``"carry"``-ed, committing in the round they actually finish with a
+  staleness-discounted weight.
+* ``async``    — FedBuff-style buffered aggregation: a fixed ``concurrency``
+  of clients works continuously, completions accumulate in a buffer, and
+  every ``buffer_size`` arrivals the server commits them with
+  ``Strategy.staleness_weight``-discounted weights folded into the fused
+  FedAvg tensordot, bumps the model version, and dispatches replacements.
+
+**Bucketed dispatch** keeps the event loop jit-friendly: when a wave of
+clients starts, they are grouped by their (hashable) ``TrainablePlan`` —
+which carries ``grad_cfg``, so per-tier heterogeneous SPSA ``n_samples`` /
+FedKSeed ``K`` form separate buckets — and each bucket runs ONE jitted
+``PlanEngine.cohort_updates`` (vmap over the bucket axis) at the model
+version current at dispatch.  Buckets are padded to a fixed ``bucket_pad``
+(default: the concurrency), so the set of compilations is exactly
+{(plan, bucket_pad)} — nothing recompiles inside the event loop, however
+completions interleave.  The per-client updates park on the heap until
+their completion events fire; committing a buffer is a cheap
+staleness-weighted tensordot onto the *current* state — updates computed at
+version v and applied at version v' > v are exactly what the staleness
+discount prices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.memory import round_flops
+from ..utils.tree import tree_map
+from .engine import FedSim, RoundMetrics
+from .strategies import cohort_fedavg, stack_masks
+
+MODES = ("sync", "semisync", "async")
+
+
+def client_round_time(sim: FedSim, strategy, client, plan=None) -> float:
+    """Virtual seconds for one client's local round: analytic compute FLOPs
+    over the device's effective throughput, plus the strategy's per-round
+    uplink over the device's link.  ``plan`` (when given) supplies the
+    gradient-program knobs — per-tier ``n_samples``/``seeds`` budgets make
+    slow devices cheaper per round, which is the whole point of
+    memory-stratified perturbation budgets."""
+    kw = dict(strategy.memory_kwargs(0))
+    opts = dict(plan.grad_options) if plan is not None else {}
+    if "n_samples" in opts:
+        kw["n_samples"] = opts["n_samples"]
+    if "seeds" in opts:
+        kw["kseeds"] = len(opts["seeds"])
+    if plan is not None and plan.is_window:
+        # the executed prefix walks with the DLCT stage — charge the plan's
+        # actual window position, not the round-0 FOAT boundary
+        seg = plan.window_segments
+        kw["l_start"], kw["window"] = seg.prefix, seg.window
+    flops = round_flops(sim.cfg, strategy.memory_method, sim.batch_size,
+                        sim.seq_len,
+                        local_steps=strategy.chain.local_steps, **kw)
+    prof = client.profile
+    if prof is None:
+        return 1.0
+    return flops / prof.flops + strategy.comm_bytes_per_round() / prof.bandwidth
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One dispatched client parked on the virtual clock: its update was
+    computed at dispatch (model version ``version``) and lives as row
+    ``bi`` of its bucket's stacked ``(C, ...)`` update tree — kept stacked
+    so a commit of a whole contiguous bucket (the common case) is a single
+    prefix slice per leaf instead of C gathers + a restack.  It commits
+    when its completion event fires."""
+    finish: float
+    client: object
+    plan: object
+    bucket: object          # the dispatch bucket's stacked (C, ...) updates
+    bi: int                 # this client's row in the bucket
+    masks: dict
+    weight: float           # sample count (staleness discount applied later)
+    version: int            # model version the update was computed at
+    seq: int = 0            # dispatch order — deterministic heap tie-break
+    loss: object = None     # device scalar: this client's mean local loss
+
+    def __lt__(self, other):
+        return (self.finish, self.seq) < (other.finish, other.seq)
+
+
+def _stack_updates(entries: List["_Pending"]):
+    """Cohort-axis update stack for a commit group (already sorted back
+    into dispatch order): a whole contiguous bucket reuses its
+    already-stacked tree — at most one prefix slice per leaf — while mixed
+    groups (straggler carry-over, partial buffers) fall back to per-entry
+    gathers."""
+    first = entries[0]
+    if (all(e.bucket is first.bucket for e in entries)
+            and [e.bi for e in entries] == list(range(len(entries)))):
+        n = len(entries)
+        rows = jax.tree_util.tree_leaves(first.bucket)[0].shape[0]
+        if n == rows:
+            return first.bucket
+        return tree_map(lambda u: u[:n], first.bucket)
+    return tree_map(lambda *us: jnp.stack(us),
+                    *[tree_map(lambda u: u[e.bi], e.bucket)
+                      for e in entries])
+
+
+class FedScheduler:
+    """Event-driven federation driver over a heterogeneous device population.
+
+    Parameters
+    ----------
+    mode : ``"sync"`` | ``"semisync"`` | ``"async"``
+    concurrency : clients working in parallel (async; default
+        ``fed.clients_per_round``).
+    buffer_size : completions per server commit (async; default
+        = concurrency — with uniform device profiles this makes ``async``
+        coincide with ``sync``).
+    deadline_quantile : fraction of the sampled cohort the server waits for
+        (semisync; default 0.75 — the slowest quarter are stragglers).
+    straggler : ``"drop"`` (aborted at the deadline: work wasted, device
+        freed) or ``"carry"`` (stragglers keep computing — excluded from
+        resampling — and commit late with a staleness-discounted weight) —
+        semisync only.
+    bucket_pad : fixed bucket size dispatch waves are padded to (default:
+        concurrency).  Keys the jit cache as (plan, bucket_pad): a fixed pad
+        means no recompiles inside the event loop even when heterogeneous
+        per-tier plans split a wave into uneven buckets.
+    staleness_cap : drop (instead of discount) updates staler than this many
+        versions (async; default: keep all).
+    """
+
+    def __init__(self, sim: FedSim, strategy, mode: str = "sync", *,
+                 concurrency: Optional[int] = None,
+                 buffer_size: Optional[int] = None,
+                 deadline_quantile: float = 0.75,
+                 straggler: str = "drop",
+                 bucket_pad: Optional[int] = None,
+                 staleness_cap: Optional[int] = None):
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; one of {MODES}")
+        if straggler not in ("drop", "carry"):
+            raise ValueError(f"straggler policy {straggler!r}: drop|carry")
+        self.sim, self.strategy, self.mode = sim, strategy, mode
+        self.concurrency = concurrency or sim.fed.clients_per_round
+        self.buffer_size = buffer_size or self.concurrency
+        if self.buffer_size > self.concurrency:
+            raise ValueError(
+                f"buffer_size {self.buffer_size} > concurrency "
+                f"{self.concurrency}: at most `concurrency` completions can "
+                f"ever be outstanding, so a larger buffer would never fill")
+        self.deadline_quantile = deadline_quantile
+        self.straggler = straggler
+        self.bucket_pad = bucket_pad or self.concurrency
+        self.staleness_cap = staleness_cap
+        self.clock = 0.0            # virtual seconds
+        self.version = 0            # server model version (commits so far)
+        self._times = {}            # (cid, plan) -> cached round time
+        self._seq = 0               # dispatch counter (heap tie-break)
+        self._agg_jit = {}          # plan -> jitted commit aggregation
+        self.committed_updates = 0  # client updates aggregated so far
+
+    # ------------------------------------------------------------------ run
+    def run(self, rounds: int, eval_every: int = 5,
+            verbose: bool = False) -> List[RoundMetrics]:
+        """Drive ``rounds`` server commits and return the metric history.
+        In sync/semisync a commit is a round; in async it is a buffer flush
+        — histories are comparable via ``RoundMetrics.wallclock``."""
+        if self.mode == "sync":
+            # sync preserves the legacy ordering exactly: one-off setup
+            # (chainfed FOAT) runs *inside* the first Strategy.round, after
+            # that round's eligibility sampling — bit-identical histories
+            return self._run_sync(rounds, eval_every, verbose)
+        self.strategy.begin(self.sim)
+        if self.mode == "semisync":
+            return self._run_semisync(rounds, eval_every, verbose)
+        return self._run_async(rounds, eval_every, verbose)
+
+    # ------------------------------------------------------------- plumbing
+    def _round_time(self, client, plan) -> float:
+        key = (client.cid, plan)
+        if key not in self._times:
+            self._times[key] = client_round_time(self.sim, self.strategy,
+                                                 client, plan)
+        return self._times[key]
+
+    def _metric(self, r, eval_b, n, stale, verbose) -> RoundMetrics:
+        loss, acc = self.strategy.evaluate(eval_b)
+        m = RoundMetrics(r, loss, acc, n,
+                         self.strategy.comm_bytes_per_round(),
+                         wallclock=self.clock, stale_updates=stale)
+        if verbose:
+            print(f"  round {r:3d} n={n:2d} loss={loss:.4f} acc={acc:.4f} "
+                  f"t={self.clock:.1f}s stale={stale}")
+        return m
+
+    def _sample(self, n: int, round_idx: int, busy=frozenset()):
+        """Sample ``n`` clients from the eligible pool, never re-dispatching
+        a client that is still in flight (``busy``: cids parked on the
+        event heap — a device cannot compute two overlapping local rounds).
+        When ``n`` equals the configured cohort size and nothing is busy
+        this is exactly ``sim.sample_clients`` — the same rng draws in the
+        same order as the sync path, which is what makes
+        async-with-uniform-latencies coincide with sync."""
+        sim, strat = self.sim, self.strategy
+        if not busy and n == sim.fed.clients_per_round:
+            return sim.sample_clients(strat.memory_method,
+                                      **strat.memory_kwargs(round_idx))
+        pool = [c for c in sim.eligible(strat.memory_method,
+                                        **strat.memory_kwargs(round_idx))
+                if c.cid not in busy]
+        if not pool or n <= 0:
+            return []
+        k = min(n, len(pool))
+        idx = sim.rng.choice(len(pool), k, replace=False)
+        return [pool[i] for i in idx]
+
+    # ------------------------------------------------------- dispatch waves
+    def _dispatch(self, clients, round_idx: int) -> List[_Pending]:
+        """Start a wave of clients at the current model version: bucket by
+        plan, pad each bucket to ``bucket_pad``, run one jitted
+        ``cohort_updates`` per bucket, and return the per-client pending
+        completions (absolute finish times on the virtual clock)."""
+        strat, sim = self.strategy, self.sim
+        groups = {}
+        for c in clients:
+            groups.setdefault(strat.plan(c, round_idx), []).append(c)
+        pending = []
+        for plan, bucket in groups.items():
+            n = len(bucket)
+            batches = sim.cohort_batches(bucket, strat.chain.local_steps)
+            mask_list = [strat.plan_masks(sim, c, round_idx) for c in bucket]
+            masks = stack_masks(mask_list)
+            pad = max(0, self.bucket_pad - n)
+            if pad:
+                # pad with *copies of already-drawn rows* — no extra sampler
+                # draws, so padding never perturbs the data stream; padded
+                # rows are computed and discarded (weightless)
+                rep = lambda x: jnp.concatenate(
+                    [x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
+                batches = tree_map(rep, batches)
+                masks = {k: rep(v) for k, v in masks.items()}
+            tr0 = strat.init_trainable(plan)
+            step = strat.engine.cohort_updates(plan)
+            updates, losses = step(tr0, strat.params, strat.adapters,
+                                   batches, masks)
+            for i, c in enumerate(bucket):
+                self._seq += 1
+                pending.append(_Pending(
+                    finish=self.clock + self._round_time(c, plan),
+                    client=c, plan=plan, bucket=updates, bi=i,
+                    masks=mask_list[i], weight=float(c.n_samples),
+                    version=self.version, seq=self._seq, loss=losses[i]))
+        return pending
+
+    # --------------------------------------------------------------- commit
+    def _commit(self, entries: List[_Pending]):
+        """Fold a batch of completed updates into the current model: group
+        by plan, stack each group's updates/masks along the cohort axis, and
+        run the strategy's in-graph aggregation (default fused FedAvg) with
+        weights = sample count × staleness discount.  Returns ``(kept,
+        stale)`` — updates committed (post ``staleness_cap`` filter; 0 means
+        the model did not move and the caller must not count a commit) and
+        how many of them were stale."""
+        strat = self.strategy
+        if self.staleness_cap is not None:
+            entries = [e for e in entries
+                       if self.version - e.version <= self.staleness_cap]
+        if not entries:
+            return 0, 0
+        groups = {}
+        for e in entries:
+            groups.setdefault(e.plan, []).append(e)
+        stale = 0
+        # convergence-driven schedules (chainfed plateau advance) read the
+        # committed mean local loss lazily — one value for the *whole*
+        # server commit, not whichever plan group happened to run last
+        strat._last_round_loss = jnp.mean(
+            jnp.stack([e.loss for e in entries]))
+        strat.begin_commit()
+        for plan, es in groups.items():
+            # completion events interleave arbitrarily; restoring dispatch
+            # order makes the cohort axis deterministic (and identical to
+            # the sync cohort order), and re-enables the whole-bucket
+            # zero-copy fast path in _stack_updates
+            es.sort(key=lambda e: e.seq)
+            ups = _stack_updates(es)
+            masks = stack_masks([e.masks for e in es])
+            w = jnp.asarray([e.weight *
+                             strat.staleness_weight(self.version - e.version)
+                             for e in es], jnp.float32)
+            stale += sum(1 for e in es if e.version < self.version)
+            tr0 = strat.init_trainable(plan)
+            if plan not in self._agg_jit:
+                agg = strat.cohort_aggregate(plan)
+                self._agg_jit[plan] = jax.jit(
+                    agg if agg is not None else cohort_fedavg)
+            strat.commit_trainable(plan, self._agg_jit[plan](tr0, ups, w,
+                                                             masks))
+        strat.end_commit()
+        self.version += 1
+        self.committed_updates += len(entries)
+        return len(entries), stale
+
+    # ------------------------------------------------------------ sync mode
+    def _run_sync(self, rounds, eval_every, verbose):
+        """The legacy lockstep protocol, verbatim — same rng draws, same
+        ``Strategy.round`` dispatch (fused cohort step, donation), same eval
+        cadence — plus the virtual clock: each round costs the slowest
+        sampled device's compute + uplink time."""
+        sim, strat = self.sim, self.strategy
+        history = []
+        eval_b = sim.eval_batch()
+        for r in range(rounds):
+            clients = sim.sample_clients(strat.memory_method,
+                                         **strat.memory_kwargs(r))
+            if clients:
+                # cost reads the plan *before* the commit — stage-advance
+                # strategies (chainfed) move to the next plan on commit
+                dt = max(self._round_time(c, strat.plan(c, r))
+                         for c in clients)
+                strat.round(sim, clients, r)
+                self.clock += dt
+                self.version += 1
+                self.committed_updates += len(clients)
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                history.append(self._metric(r, eval_b, len(clients), 0,
+                                            verbose))
+        return history
+
+    # -------------------------------------------------------- semisync mode
+    def _run_semisync(self, rounds, eval_every, verbose):
+        """Deadline-cutoff rounds: a full cohort is dispatched, but the
+        server commits when the ``deadline_quantile``-fastest device is done.
+        Stragglers are dropped — the server *aborts* them at the deadline,
+        so their work is wasted but the device is freed for the next round —
+        or carried: a carried update was computed at dispatch and is still
+        cooking, so the device stays busy (excluded from resampling) and its
+        update commits in a later round at exactly the staleness its
+        lateness earned it."""
+        sim = self.sim
+        history = []
+        eval_b = sim.eval_batch()
+        carried: List[_Pending] = []
+        for r in range(rounds):
+            # a carried straggler is still computing — never resample it
+            # into the new cohort mid-flight
+            clients = self._sample(sim.fed.clients_per_round, r,
+                                   busy=frozenset(p.client.cid
+                                                  for p in carried))
+            wave = self._dispatch(clients, r) if clients else []
+            if wave:
+                lat = sorted(p.finish - self.clock for p in wave)
+                q = min(len(lat) - 1,
+                        max(0, int(np.ceil(self.deadline_quantile * len(lat)))
+                            - 1))
+                deadline = self.clock + lat[q]
+            else:
+                deadline = self.clock
+            on_time = [p for p in wave if p.finish <= deadline]
+            stragglers = [p for p in wave if p.finish > deadline]
+            arrivals = [p for p in carried if p.finish <= deadline]
+            carried = [p for p in carried if p.finish > deadline]
+            if self.straggler == "carry":
+                carried += stragglers
+            self.clock = deadline
+            kept, stale = self._commit(on_time + arrivals)
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                history.append(self._metric(r, eval_b, kept, stale, verbose))
+        return history
+
+    # ----------------------------------------------------------- async mode
+    def _run_async(self, commits, eval_every, verbose):
+        """FedBuff-style buffered async: ``concurrency`` clients in flight,
+        completion events popped off the heap, a commit (and replacement
+        dispatch wave) every ``buffer_size`` arrivals."""
+        history = []
+        eval_b = self.sim.eval_batch()
+        heap: List[_Pending] = []
+        for p in self._dispatch(self._sample(self.concurrency, 0), 0):
+            heapq.heappush(heap, p)
+        buffered: List[_Pending] = []
+        done = 0
+        while done < commits and (heap or buffered):
+            if heap:
+                p = heapq.heappop(heap)
+                self.clock = p.finish
+                buffered.append(p)
+            if len(buffered) >= self.buffer_size or not heap:
+                if not buffered:
+                    break
+                kept, stale = self._commit(buffered)
+                buffered = []
+                if kept:        # a staleness_cap can void a whole buffer —
+                    done += 1   # the model didn't move, don't count a commit
+                    if done % eval_every == 0 or done == commits:
+                        history.append(self._metric(done - 1, eval_b, kept,
+                                                    stale, verbose))
+                if done < commits:
+                    busy = frozenset(p.client.cid for p in heap)
+                    refill = self.concurrency - len(heap)
+                    for q in self._dispatch(
+                            self._sample(refill, done, busy), done):
+                        heapq.heappush(heap, q)
+        return history

@@ -56,6 +56,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.adapters import ActiveAdapters
 from ..core.memory import comm_bytes_per_round
@@ -63,7 +64,8 @@ from ..models.config import ChainConfig, ModelConfig
 from ..models.transformer import (ChainSegments, forward_chain, forward_full,
                                   init_adapters, init_cls_head, init_lm)
 from ..optim.base import make_optimizer
-from ..optim.zeroth import kseed_directional, spsa_value_and_grad
+from ..optim.zeroth import (forward_value_and_grad, kseed_directional,
+                            spsa_value_and_grad)
 from ..train.losses import accuracy, cross_entropy, gpo_loss, moe_penalty
 from ..utils.tree import tree_map
 
@@ -319,6 +321,29 @@ def _spsa_program(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan,
     return grad_fn
 
 
+@register_grad_program("jvp", needs_rng=True)
+def _jvp_program(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan,
+                 loss_fn):
+    """True forward-mode gradient program (FwdLLM fidelity): ``jax.jvp``
+    per perturbation direction — the exact directional derivative in one
+    forward pass, no finite-difference bias and no ``eps`` knob, with the
+    same no-activation-storage memory profile as ``"spsa"``.  Knobs:
+    ``n_samples`` (default 4); RNG from ``masks["grad_key"]``."""
+    n_samples = plan.grad_options.get("n_samples", 4)
+
+    def grad_fn(trainable, params, frozen_adapters, batch, masks):
+        def scalar_loss(tr):
+            loss, _ = loss_fn(tr, params, frozen_adapters, batch, masks)
+            return loss
+
+        loss, grads, _ = forward_value_and_grad(scalar_loss, trainable,
+                                                masks["grad_key"],
+                                                n_samples=n_samples)
+        return loss, {"local": loss, "global": loss}, grads
+
+    return grad_fn
+
+
 @register_grad_program("kseed", whole_client=True)
 def _kseed_program(cfg: ModelConfig, chain: ChainConfig, plan: TrainablePlan,
                    loss_fn):
@@ -422,6 +447,7 @@ class PlanEngine:
         self.cfg, self.chain, self.opt = cfg, chain, opt
         self._steps = {}
         self._cohort = {}
+        self._cohort_updates = {}
         self._client_updates = {}
         self._eval = None
 
@@ -545,6 +571,35 @@ class PlanEngine:
             self._cohort[plan] = call
         return self._cohort[plan]
 
+    def cohort_updates(self, plan: TrainablePlan):
+        """One jitted *dispatch wave* for a plan bucket:
+
+            step(trainable0, params, frozen_adapters, batches, masks)
+                -> (updates, losses)
+
+        Same layout as ``cohort_step`` (``(C, local_steps, b, ...)`` batch
+        leaves, ``(C, ...)`` masks) but the per-client updates come back
+        stacked ``(C, ...)`` **unaggregated** — the event-driven runtime
+        (``repro.fed.runtime``) computes a bucket's updates when the clients
+        are *dispatched*, parks them on the virtual clock until each client's
+        completion event, and folds staleness-discounted weights into the
+        fused FedAvg tensordot only at commit time.  Nothing is donated: the
+        round-start state must survive (updates from one model version are
+        applied onto a later one — that is what staleness *is*)."""
+        if plan not in self._cohort_updates:
+            client_update = make_client_update(self.cfg, self.chain, plan,
+                                               self.opt)
+
+            @jax.jit
+            def step(trainable0, params, frozen_adapters, batches, masks):
+                return jax.vmap(client_update,
+                                in_axes=(None, None, None, 0, 0))(
+                                    trainable0, params, frozen_adapters,
+                                    batches, masks)
+
+            self._cohort_updates[plan] = step
+        return self._cohort_updates[plan]
+
     def eval_fn(self):
         if self._eval is None:
             cfg = self.cfg
@@ -610,6 +665,7 @@ class Strategy:
         self.head = init_cls_head(self._params) if chain.train_head else None
         self.opt = make_optimizer(chain.optimizer, chain.lr)
         self.engine = PlanEngine(cfg, chain, self.opt)
+        self._last_round_loss = None    # device scalar from the latest step
 
     # base params are swappable (pretrained checkpoints); the head re-derives
     @property
@@ -657,6 +713,32 @@ class Strategy:
         self._params, self.adapters, self.head = self.engine.commit(
             plan, self._params, self.adapters, self.head, new)
 
+    # ----------------------------------------------------- scheduler hooks
+    def begin(self, sim):
+        """One-off setup before any scheduling (FOAT boundary detection,
+        warm starts).  The event-driven runtime calls this once at clock 0
+        for every mode; the default is a no-op."""
+
+    def begin_commit(self):
+        """Bracket for one *server* commit that may span several plan
+        groups (the event-driven runtime's buffered commits): strategies
+        whose ``commit_trainable`` also does per-commit bookkeeping
+        (chainfed's stage events) debounce it between ``begin_commit`` /
+        ``end_commit`` so one server commit fires exactly one event,
+        however many plan groups it aggregates.  Base: no-ops."""
+
+    def end_commit(self):
+        pass
+
+    def staleness_weight(self, staleness: int) -> float:
+        """Aggregation-weight discount for an update computed ``staleness``
+        model versions before it is committed (FedBuff's polynomial decay:
+        1/√(1+s)).  Multiplies the client's sample count inside the fused
+        FedAvg tensordot; fresh updates (``staleness == 0``) keep weight 1.
+        Strategies override for bespoke decay (or ``return 1.0`` to ignore
+        staleness entirely)."""
+        return float(1.0 / np.sqrt(1.0 + max(0, staleness)))
+
     # -------------------------------------------------- generic plan round
     def cohort_aggregate(self, plan: TrainablePlan):
         """In-graph aggregation override for the cohort step, or None for the
@@ -694,6 +776,9 @@ class Strategy:
             step = self.engine.cohort_step(plan, self.cohort_aggregate(plan))
             new, _loss = step(tr0, self._params, self.adapters, batches, masks,
                               weights)
+            # device scalar, never blocked on here — convergence-driven
+            # schedulers (chainfed plateau advance) read it lazily
+            self._last_round_loss = _loss
             self.commit_trainable(plan, new)
 
     def sequential_round(self, sim, clients, round_idx):

@@ -57,6 +57,28 @@ def _decode_jit(params, adapters, tok, cache, idx, cfg, enc_len=None,
 
 
 @jax.jit
+def _sample_jit(logits, temps, topks, key):
+    """Per-row sampling: each batch row carries its own (traced) temperature
+    and top-k — routed per row exactly like tenant ids, so one compiled
+    sampler serves any tenant mix and re-registering sampling params never
+    re-jits.  ``temps <= 0`` rows are greedy (bit-identical to the old
+    ``argmax`` path); ``topks <= 0`` disables the top-k cut.  Sampling uses
+    the Gumbel-max trick on the top-k-masked, temperature-scaled logits."""
+    V = logits.shape[-1]
+    # top_k ≤ 0 or ≥ V both mean "no cut" — clamp so an over-large k never
+    # wraps the kth-largest index negative (which would *tighten* the cut)
+    k = jnp.where(topks <= 0, V, jnp.minimum(topks, V)).astype(jnp.int32)
+    srt = jnp.sort(logits, axis=-1)                       # ascending
+    kth = jnp.take_along_axis(srt, (V - k)[:, None], axis=-1)
+    masked = jnp.where(logits >= kth, logits, -jnp.inf)
+    g = -jnp.log(-jnp.log(
+        jax.random.uniform(key, logits.shape) + 1e-20) + 1e-20)
+    z = masked / jnp.maximum(temps, 1e-6)[:, None] + g
+    return jnp.where(temps > 0, jnp.argmax(z, axis=-1),
+                     jnp.argmax(logits, axis=-1)).astype(jnp.int32)
+
+
+@jax.jit
 def _splice_jit(big, small, slot):
     """Write a single-row prefill cache (padded to the decode horizon) into
     row ``slot`` of the serve loop's batch cache — the continuous-batching
@@ -118,6 +140,14 @@ def generate(params, adapters, cfg, prompt_tokens, max_new: int,
     return jnp.concatenate(out, axis=1)
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-tenant decode-time sampling configuration.  ``temperature <= 0``
+    means greedy; ``top_k <= 0`` means no top-k cut."""
+    temperature: float = 0.0
+    top_k: int = 0
+
+
 @dataclasses.dataclass
 class Request:
     """One queued generation request (prompt already padded to the serve
@@ -141,16 +171,20 @@ class ServeEngine:
     def __init__(self, params, cfg, base_adapters):
         self.params, self.cfg = params, cfg
         self.library = AdapterLibrary(base=base_adapters)
+        self._sampling = {}         # tenant name -> SamplingParams
 
     # ------------------------------------------------------------- tenants
     def register_tenant(self, name, stack=None, ckpt=None,
-                        spec: ActiveAdapters | None = None):
+                        spec: ActiveAdapters | None = None,
+                        sampling: SamplingParams | None = None):
         """Register a tenant's chain-tuned stack.
 
         ``stack`` — a full ``(L, ...)`` stack, or (with ``spec``) only the
         spec's trainable window, scattered into the library base.
         ``ckpt`` — a ``ckpt.io.save_adapter_stack`` file loaded into the
-        matching structure instead of an in-memory stack."""
+        matching structure instead of an in-memory stack.
+        ``sampling`` — this tenant's decode-time ``SamplingParams``
+        (default greedy)."""
         if (stack is None) == (ckpt is None):
             raise ValueError("register_tenant: exactly one of stack / ckpt")
         if ckpt is not None:
@@ -159,7 +193,18 @@ class ServeEngine:
             like = spec.train_slice(base) if spec is not None else base
             stack, _meta = load_adapter_stack(ckpt, like)
         self.library.add(name, stack, spec=spec)
+        if sampling is not None:
+            self._sampling[name] = sampling
         return name
+
+    def set_sampling(self, name, temperature: float = 0.0, top_k: int = 0):
+        """(Re)configure a tenant's decode-time sampling.  Params are traced
+        per-row data in the serve loop — changing them never recompiles."""
+        self.library.tenant_id(name)     # raises on unknown tenant
+        self._sampling[name] = SamplingParams(temperature, top_k)
+
+    def _tenant_sampling(self, name) -> SamplingParams:
+        return self._sampling.get(name, SamplingParams())
 
     def fuse_tenants(self, name, parts, weights=None):
         """Serve a weighted multi-task composition as a synthetic tenant."""
@@ -176,16 +221,24 @@ class ServeEngine:
 
     # ------------------------------------------- continuous (slot) batching
     def serve(self, requests, slots: int = 4, prompt_len: int = 16,
-              max_new_cap: int = 16):
+              max_new_cap: int = 16, sample_seed: int = 0):
         """Slot-based continuous batching over a request queue.
 
         A fixed ``(slots,)``-row decode program runs every step; each row
-        carries its own decode depth (vector ``idx``) and tenant id.  When a
-        row finishes, the next queued request is admitted by a single-row
-        jitted prefill + a jitted cache splice — the decode program never
-        re-jits, whatever the admission pattern.  Drained slots park at
-        ``idx = horizon`` (their cache writes one-hot to nothing) until the
-        queue refills them.
+        carries its own decode depth (vector ``idx``), tenant id **and the
+        tenant's sampling params** (temperature / top-k — per-row traced
+        data through ``_sample_jit``, exactly like tenant routing, so mixed
+        greedy/sampling batches never re-jit).  When a row finishes, the
+        next queued request is admitted by a single-row jitted prefill + a
+        jitted cache splice — the decode program never re-jits, whatever
+        the admission pattern.  Drained slots park at ``idx = horizon``
+        (their cache writes one-hot to nothing) until the queue refills
+        them.
+
+        Sampling is reproducible: row randomness derives from
+        ``sample_seed`` folded with the decode-step / admission counters.
+        Tenants without registered ``SamplingParams`` decode greedily —
+        bit-identical to the pre-sampling serve loop.
 
         Rows are independent through attention/SSM state, so outputs equal
         the static-batch path row-for-row on dense/ssm/hybrid families
@@ -194,6 +247,9 @@ class ServeEngine:
         """
         cfg = self.cfg
         lib = self.library.stacked_scan()
+        # independent streams for the decode loop and admissions, each
+        # folded with its own counter — replays are bit-identical
+        step_key, admit_key = jax.random.split(jax.random.PRNGKey(sample_seed))
         total = prompt_len + max_new_cap
         if cfg.sliding_window is not None and total > cfg.sliding_window:
             raise NotImplementedError(
@@ -208,21 +264,32 @@ class ServeEngine:
         tok = np.zeros((slots, 1), np.int32)
         idx = np.full((slots,), park, np.int32)
         tids = np.zeros((slots,), np.int32)
+        temps = np.zeros((slots,), np.float32)    # per-row sampling params,
+        topks = np.zeros((slots,), np.int32)      # refreshed at admission
         live = [None] * slots             # per-slot (rid, remaining)
         out = {r.rid: [] for r in queue}
+        n_admits = 0
+        n_steps = 0
 
         def admit(slot, req):
-            nonlocal cache
+            nonlocal cache, n_admits
             tid = self.library.tenant_ids([req.tenant])
+            sp = self._tenant_sampling(req.tenant)
             lg, pcache, _ = _prefill_jit(self.params, lib,
                                          {"tokens": jnp.asarray(req.tokens)[None]},
                                          cfg=cfg, tenant_ids=tid)
             cache = _splice_jit(cache, pcache, slot)
-            first = int(jnp.argmax(lg, axis=-1)[0])
+            n_admits += 1
+            first = int(_sample_jit(
+                lg, jnp.asarray([sp.temperature], jnp.float32),
+                jnp.asarray([sp.top_k], jnp.int32),
+                jax.random.fold_in(admit_key, n_admits))[0])
             out[req.rid].append(first)
             tok[slot, 0] = first
             idx[slot] = prompt_len
             tids[slot] = int(tid[0])
+            temps[slot] = sp.temperature
+            topks[slot] = sp.top_k
             live[slot] = [req.rid, req.max_new - 1]
 
         while queue or any(live):
@@ -238,7 +305,12 @@ class ServeEngine:
             lg, cache, _ = _decode_jit(self.params, lib, jnp.asarray(tok),
                                        cache, jnp.asarray(idx), cfg=cfg,
                                        tenant_ids=jnp.asarray(tids))
-            nxt = np.asarray(jnp.argmax(lg, axis=-1), np.int32)
+            n_steps += 1
+            nxt = np.asarray(_sample_jit(lg, jnp.asarray(temps),
+                                         jnp.asarray(topks),
+                                         jax.random.fold_in(step_key,
+                                                            n_steps)),
+                             np.int32)
             for s in range(slots):
                 if live[s] is None:
                     continue

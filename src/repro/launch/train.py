@@ -34,6 +34,21 @@ def main(argv=None):
     ap.add_argument("--dataset", default="agnews", choices=list(DATASETS))
     ap.add_argument("--method", default="chainfed",
                     choices=available_strategies())
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "semisync", "async"],
+                    help="event-driven runtime aggregation mode (sync = "
+                         "legacy lockstep rounds; async counts --rounds as "
+                         "server commits)")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="async: completions per server commit (FedBuff "
+                         "buffer; default = concurrency)")
+    ap.add_argument("--concurrency", type=int, default=None,
+                    help="async: clients in flight (default clients/round)")
+    ap.add_argument("--deadline-quantile", type=float, default=0.75,
+                    help="semisync: cohort fraction the server waits for")
+    ap.add_argument("--straggler", default="drop", choices=["drop", "carry"],
+                    help="semisync: drop stragglers or commit them late "
+                         "with a staleness-discounted weight")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--clients-per-round", type=int, default=4)
@@ -65,17 +80,29 @@ def main(argv=None):
                     dirichlet_alpha=args.alpha, seed=args.seed)
 
     print(f"== {args.method} on {cfg.arch_id} ({args.task}/{args.dataset}) "
-          f"rounds={args.rounds} Q={args.window} λ={args.lam} T={args.threshold}")
+          f"mode={args.mode} rounds={args.rounds} Q={args.window} "
+          f"λ={args.lam} T={args.threshold}")
+    sched = {}
+    if args.mode == "async":
+        sched = {k: v for k, v in (("buffer_size", args.buffer_size),
+                                   ("concurrency", args.concurrency))
+                 if v is not None}
+    elif args.mode == "semisync":
+        sched = {"deadline_quantile": args.deadline_quantile,
+                 "straggler": args.straggler}
     t0 = time.time()
     result = run_experiment(
         args.method, cfg=cfg, chain=chain, fed=fed, task=args.task,
         dataset=args.dataset, batch_size=args.batch_size, rounds=args.rounds,
         eval_every=args.eval_every, seed=args.seed,
-        memory_constrained=not args.unconstrained_memory, verbose=True)
+        memory_constrained=not args.unconstrained_memory, verbose=True,
+        mode=args.mode, scheduler_opts=sched or None)
     strat, hist = result.strategy, result.history
     dt = time.time() - t0
     final = hist[-1] if hist else None
-    print(f"== done in {dt:.1f}s  final acc={final.acc if final else float('nan'):.4f}")
+    print(f"== done in {dt:.1f}s  final acc="
+          f"{final.acc if final else float('nan'):.4f}  virtual wallclock="
+          f"{final.wallclock if final else 0.0:.1f}s")
 
     if args.save and hasattr(strat, "params"):
         from ..ckpt.io import save_train_state

@@ -49,6 +49,27 @@ def spsa_value_and_grad(loss_fn, params, key, eps=1e-3, n_samples=1):
     return jnp.mean(losses), g, coeffs
 
 
+def forward_value_and_grad(loss_fn, params, key, n_samples=1):
+    """True forward-mode estimate of (loss, grad): for each random direction
+    v, ``jax.jvp`` evaluates the *exact* directional derivative ⟨∇loss, v⟩
+    in one forward pass (no finite-difference bias, no eps knob), and the
+    gradient estimate is the mean of ⟨∇loss, v⟩·v over ``n_samples``
+    directions — FwdLLM's actual forward-gradient estimator, vs the SPSA
+    central-difference surrogate which matches its memory profile only.
+    Directions are drawn exactly like ``spsa_value_and_grad`` (same key →
+    same perturbations), so on a quadratic the two agree to float precision
+    (central differences are exact there)."""
+    def one(k):
+        v = _perturbation(k, params)
+        loss, dl = jax.jvp(loss_fn, (params,), (v,))
+        return tree_map(lambda u: dl * u, v), dl, loss
+
+    keys = jax.random.split(key, n_samples)
+    grads, coeffs, losses = jax.vmap(one)(keys)
+    g = tree_map(lambda u: jnp.mean(u, axis=0), grads)
+    return jnp.mean(losses), g, coeffs
+
+
 def spsa_grad(loss_fn, params, key, eps=1e-3, n_samples=1):
     """Gradient-only view of ``spsa_value_and_grad`` (legacy signature)."""
     _, g, coeffs = spsa_value_and_grad(loss_fn, params, key, eps=eps,

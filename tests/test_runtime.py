@@ -1,0 +1,330 @@
+"""Event-driven federation runtime (ISSUE 5): sync-mode bit-identity with
+the legacy ``run_rounds`` loop, async ≡ sync under uniform latencies with
+buffer = cohort size, staleness-weight monotonicity, device-profile
+sampling, the virtual-clock cost model, and heterogeneous per-tier
+``n_samples`` bucketing with no cross-bucket recompiles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.memory import round_flops
+from repro.data.partition import (DEVICE_TIERS, DeviceProfile,
+                                  sample_profiles, uniform_profiles)
+from repro.data.synthetic import (DATASETS, classification_batch,
+                                  make_classification)
+from repro.fed.engine import FedSim, RoundMetrics, run_rounds
+from repro.fed.registry import make_strategy
+from repro.fed.runtime import FedScheduler, client_round_time
+from repro.models.config import ChainConfig, FedConfig
+
+CFG = get_config("bert_tiny").replace(n_layers=4, d_model=64, d_ff=128)
+CHAIN = ChainConfig(window=2, local_steps=2, lr=1e-3)
+KEY = jax.random.PRNGKey(0)
+
+
+def build_sim(seed=3, n_clients=6, clients_per_round=3, batch_size=4,
+              uniform=False):
+    spec = dataclasses.replace(DATASETS["agnews"], vocab=CFG.vocab_size)
+    tokens, labels = make_classification(spec)
+    batch_fn = lambda idx: classification_batch(spec, tokens, labels, idx)
+    fed = FedConfig(n_clients=n_clients, clients_per_round=clients_per_round,
+                    seed=seed)
+    sim = FedSim(CFG, fed, tokens, labels, batch_fn, batch_size=batch_size,
+                 memory_constrained=False)
+    if uniform:
+        for c, p in zip(sim.clients, uniform_profiles(n_clients)):
+            c.profile = p
+    return sim
+
+
+def legacy_run_rounds(sim, strategy, rounds, eval_every=5):
+    """The pre-runtime lockstep loop, verbatim — the bit-identity oracle."""
+    history = []
+    eval_b = sim.eval_batch()
+    for r in range(rounds):
+        clients = sim.sample_clients(strategy.memory_method,
+                                     **strategy.memory_kwargs(r))
+        if clients:
+            strategy.round(sim, clients, r)
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            loss, acc = strategy.evaluate(eval_b)
+            history.append(RoundMetrics(r, loss, acc, len(clients),
+                                        strategy.comm_bytes_per_round()))
+    return history
+
+
+def run_mode(name, mode, rounds=4, eval_every=2, opts=None, uniform=False,
+             legacy=False, seed=3, strategy_opts=None):
+    sim = build_sim(seed=seed, uniform=uniform)
+    strat = make_strategy(name, CFG, CHAIN, KEY, **(strategy_opts or {}))
+    if legacy:
+        hist = legacy_run_rounds(sim, strat, rounds, eval_every=eval_every)
+    elif mode == "sync" and not opts:
+        hist = run_rounds(sim, strat, rounds, eval_every=eval_every)
+    else:
+        hist = FedScheduler(sim, strat, mode=mode, **(opts or {})).run(
+            rounds, eval_every=eval_every)
+    head = None if strat.head is None else np.asarray(strat.head["w"])
+    return hist, (np.asarray(strat.adapters["down"]),
+                  np.asarray(strat.adapters["up"]), head)
+
+
+# --------------------------------------------- sync ≡ legacy (bit-identical)
+@pytest.mark.parametrize("name", ["chainfed", "full_adapters", "fedra"])
+def test_sync_reproduces_legacy_run_rounds(name):
+    """``FedScheduler(mode="sync")`` (the ``run_rounds`` wrapper) must
+    reproduce the legacy lockstep history bit-identically: same rng draws,
+    same cohort dispatch, same eval cadence — for chainfed (stage-advance,
+    FOAT) and two baselines (one with a bespoke in-graph aggregation)."""
+    h_legacy, s_legacy = run_mode(name, "sync", legacy=True)
+    h_sync, s_sync = run_mode(name, "sync")
+    assert [(m.round, m.loss, m.acc, m.n_participants, m.comm_bytes)
+            for m in h_legacy] == \
+           [(m.round, m.loss, m.acc, m.n_participants, m.comm_bytes)
+            for m in h_sync]
+    for a, b in zip(s_legacy, s_sync):
+        if a is not None:
+            np.testing.assert_array_equal(a, b)
+    # the wrapper additionally tracks the virtual clock
+    assert all(m.wallclock > 0 for m in h_sync)
+    assert [m.wallclock for m in h_sync] == sorted(m.wallclock
+                                                   for m in h_sync)
+
+
+# ------------------------------- async degenerates to sync (uniform devices)
+@pytest.mark.parametrize("name", ["full_adapters", "fwdllm"])
+def test_async_uniform_buffer_equals_sync(name):
+    """With identical device profiles and buffer = concurrency = cohort
+    size, every buffer flush contains exactly one full dispatch wave with
+    zero staleness — async must match the sync trajectory (allclose: the
+    aggregation runs unfused vs fused)."""
+    h_sync, s_sync = run_mode(name, "sync", uniform=True)
+    h_async, s_async = run_mode(name, "async", uniform=True,
+                                opts={"buffer_size": 3, "concurrency": 3})
+    assert len(h_sync) == len(h_async)
+    for a, b in zip(h_sync, h_async):
+        assert a.n_participants == b.n_participants
+        assert b.stale_updates == 0
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(a.acc, b.acc, rtol=1e-5, atol=1e-6)
+    for a, b in zip(s_sync, s_async):
+        if a is not None:
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-5)
+
+
+def test_async_heterogeneous_differs_and_counts_staleness():
+    """With heterogeneous latencies and a small buffer, commits interleave:
+    the trajectory departs from sync and stale updates appear (discounted,
+    not dropped)."""
+    hist, _ = run_mode("full_adapters", "async", rounds=6, eval_every=1,
+                       opts={"buffer_size": 1, "concurrency": 3})
+    assert len(hist) == 6
+    assert sum(m.stale_updates for m in hist) >= 0
+    assert all(np.isfinite(m.loss) for m in hist)
+    wall = [m.wallclock for m in hist]
+    assert wall == sorted(wall) and wall[0] > 0
+
+
+# ------------------------------------------------------------------ semisync
+@pytest.mark.parametrize("straggler", ["drop", "carry"])
+def test_semisync_modes_run(straggler):
+    hist, _ = run_mode("chainfed", "semisync", rounds=4, eval_every=2,
+                       opts={"deadline_quantile": 0.5,
+                             "straggler": straggler})
+    assert len(hist) == 2
+    assert all(np.isfinite(m.loss) for m in hist)
+    if straggler == "drop":
+        # the deadline cuts the cohort: fewer participants than sampled
+        assert all(m.n_participants <= 3 for m in hist)
+    else:
+        # carried stragglers commit late, staleness-discounted
+        assert sum(m.stale_updates for m in hist) >= 0
+
+
+def test_semisync_full_quantile_commits_everyone():
+    hist, _ = run_mode("full_adapters", "semisync", rounds=2, eval_every=1,
+                       opts={"deadline_quantile": 1.0})
+    assert all(m.n_participants == 3 for m in hist)
+    assert all(m.stale_updates == 0 for m in hist)
+
+
+# ------------------------------------------------- staleness weight contract
+def test_staleness_weight_monotone_and_fresh_unit():
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    ws = [strat.staleness_weight(s) for s in range(8)]
+    assert ws[0] == pytest.approx(1.0)
+    assert all(a >= b for a, b in zip(ws, ws[1:]))   # non-increasing
+    assert all(w > 0 for w in ws)                    # discounted, never dropped
+
+
+# ------------------------------------- heterogeneous n_samples (bucketing)
+def test_heterogeneous_nsamples_buckets_without_recompiles():
+    """fwdllm with per-tier perturbation budgets: one experiment runs ≥ 2
+    distinct ``n_samples`` plans; the runtime buckets dispatch waves by plan
+    and compiles exactly one ``cohort_updates`` per bucket — further events
+    never add compilations (the acceptance criterion)."""
+    sim = build_sim(n_clients=8, clients_per_round=4)
+    # split the population over two tiers with distinct budgets
+    for i, c in enumerate(sim.clients):
+        tier = "low" if i % 2 == 0 else "high"
+        c.profile = DeviceProfile(tier=tier, flops=2e9 if tier == "low"
+                                  else 2e10, bandwidth=1e7, memory=1 << 30)
+    strat = make_strategy("fwdllm", CFG, CHAIN, KEY,
+                          samples_by_tier={"low": 2, "high": 6})
+    plans = {strat.plan(c, 0) for c in sim.clients}
+    assert len(plans) == 2          # two distinct grad_cfg → two buckets
+    sched = FedScheduler(sim, strat, mode="async", buffer_size=4,
+                         concurrency=4, bucket_pad=4)
+    sched.run(3, eval_every=3)
+    progs = strat.engine._cohort_updates
+    assert set(progs) == plans      # one compiled step per (plan, grad_cfg)
+    traces = {p: f._cache_size() for p, f in progs.items()
+              if hasattr(f, "_cache_size")}
+    sched2 = FedScheduler(sim, strat, mode="async", buffer_size=4,
+                          concurrency=4, bucket_pad=4)
+    sched2.run(3, eval_every=3)
+    assert set(strat.engine._cohort_updates) == plans
+    for p, f in progs.items():      # no recompiles inside the event loop
+        if hasattr(f, "_cache_size"):
+            assert f._cache_size() == traces[p] == 1, p
+
+
+def test_kseed_tiered_seed_budgets():
+    """FedKSeed per-tier K: tiered clients select seed prefixes; the round
+    commits per plan-group through each group's own seed set."""
+    sim = build_sim(n_clients=4, clients_per_round=4)
+    for i, c in enumerate(sim.clients):
+        c.profile = DeviceProfile(tier="low" if i < 2 else "high",
+                                  flops=1e9, bandwidth=1e7, memory=1 << 30)
+    strat = make_strategy("fedkseed", CFG, CHAIN, KEY,
+                          k_by_tier={"low": 4, "high": 8})
+    before = np.asarray(strat.adapters["down"]).copy()
+    clients = sim.sample_clients(strat.memory_method)
+    strat.round(sim, clients, 0)
+    plans = {strat.plan(c, 0) for c in clients}
+    assert {len(p.grad_options["seeds"]) for p in plans} == {4, 8}
+    assert not np.array_equal(before, np.asarray(strat.adapters["down"]))
+
+
+# ------------------------------------------------ profiles & the cost model
+def test_sample_profiles_deterministic_and_tiered():
+    budgets = np.asarray([10, 50, 120], np.int64)
+    p1 = sample_profiles(budgets, ref=100, seed=7)
+    p2 = sample_profiles(budgets, ref=100, seed=7)
+    assert p1 == p2
+    assert [p.tier for p in p1] == ["low", "mid", "high"]
+    assert p1[0].flops < p1[2].flops
+    assert [p.memory for p in p1] == [10, 50, 120]
+
+
+def test_fedsim_clients_carry_profiles():
+    sim = build_sim()
+    assert all(c.profile is not None for c in sim.clients)
+    assert all(c.profile.memory == c.mem_budget for c in sim.clients)
+    names = [t[0] for t in DEVICE_TIERS]
+    assert all(c.profile.tier in names for c in sim.clients)
+
+
+def test_round_flops_orders_methods_sensibly():
+    kw = dict(batch=4, seq=32, local_steps=1)
+    full = round_flops(CFG, "full_adapters", **kw)
+    chain = round_flops(CFG, "chainfed", window=2, l_start=1, **kw)
+    probe = round_flops(CFG, "linear_probing", **kw)
+    fwd = round_flops(CFG, "fwdllm", n_samples=8, **kw)
+    assert chain < full          # windowed backward beats full backprop
+    assert probe < full
+    assert fwd > round_flops(CFG, "fwdllm", n_samples=2, **kw)
+    assert round_flops(CFG, "full_adapters", local_steps=4, batch=4,
+                       seq=32) == pytest.approx(4 * full)
+
+
+def test_client_round_time_uses_profile_and_plan():
+    sim = build_sim()
+    strat = make_strategy("fwdllm", CFG, CHAIN, KEY,
+                          samples_by_tier={"low": 2, "high": 8})
+    c = sim.clients[0]
+    slow = dataclasses.replace(c.profile, flops=1e9, bandwidth=1e6)
+    fast = dataclasses.replace(c.profile, flops=1e11, bandwidth=1e9)
+    plan = strat.plan(c, 0)
+    c.profile = slow
+    t_slow = client_round_time(sim, strat, c, plan)
+    c.profile = fast
+    t_fast = client_round_time(sim, strat, c, plan)
+    assert t_slow > t_fast > 0
+
+
+def test_scheduler_rejects_unknown_mode():
+    sim = build_sim()
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    with pytest.raises(ValueError, match="unknown mode"):
+        FedScheduler(sim, strat, mode="warp")
+    with pytest.raises(ValueError, match="straggler"):
+        FedScheduler(sim, strat, mode="semisync", straggler="shrug")
+    with pytest.raises(ValueError, match="buffer_size"):
+        # a buffer larger than the in-flight set could never fill
+        FedScheduler(sim, strat, mode="async", concurrency=2, buffer_size=4)
+
+
+def test_sample_never_redispatches_inflight_clients():
+    """A device cannot compute two overlapping local rounds: clients parked
+    on the event heap are excluded from replacement sampling."""
+    sim = build_sim(n_clients=4, clients_per_round=2)
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="async")
+    busy = frozenset(c.cid for c in sim.clients[:3])
+    for _ in range(8):
+        got = sched._sample(2, 0, busy=busy)
+        assert all(c.cid not in busy for c in got)
+    assert sched._sample(2, 0, busy=frozenset(c.cid for c in sim.clients)) \
+        == []
+
+
+def test_staleness_cap_voided_buffer_not_counted_as_commit():
+    """When the cap filters out every buffered entry the model does not
+    move — the flush must not consume a commit or record a metric."""
+    sim = build_sim(uniform=True)
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="async", buffer_size=2,
+                         concurrency=3, staleness_cap=0)
+    hist = sched.run(4, eval_every=1)
+    assert sched.version == len(hist) or len(hist) <= sched.version
+    assert all(m.stale_updates == 0 for m in hist)   # capped, never stale
+    assert sched.committed_updates >= len(hist)
+
+
+def test_chainfed_one_stage_event_per_server_commit():
+    """A multi-plan-group server commit (async buffers mixing dispatch
+    stages) must fire exactly ONE stage event — begin/end_commit debounce
+    the per-group ``commit_trainable`` bookkeeping."""
+    strat = make_strategy("chainfed", CFG, CHAIN, KEY, use_foat=False)
+    plan = strat.plan(None, 0)
+    new = strat.init_trainable(plan)
+    before = strat._commits
+    strat.begin_commit()
+    strat.commit_trainable(plan, new)
+    strat.commit_trainable(strat.plan(None, 0), strat.init_trainable(plan))
+    strat.end_commit()
+    assert strat._commits == before + 1
+    # outside a bracket (the sync round path) every commit is an event
+    strat.commit_trainable(strat.plan(None, 0),
+                           strat.init_trainable(strat.plan(None, 0)))
+    assert strat._commits == before + 2
+
+
+# ------------------------------------------------ chainfed plateau advance
+def test_chainfed_plateau_advances_on_convergence_events():
+    """The DLCT window advances on commit/convergence events, not round
+    numbering: the plateau policy holds a stage while its committed loss
+    improves and releases it when improvement stalls."""
+    sim = build_sim()
+    strat = make_strategy("chainfed_plateau", CFG, CHAIN, KEY,
+                          use_foat=False, plateau_patience=1,
+                          plateau_tol=1e9)   # huge tol → immediate plateau
+    strat._foat_done = True
+    run_rounds(sim, strat, 4, eval_every=4)
+    assert strat._stage >= 1                 # advanced by events
+    assert strat._commits == 4

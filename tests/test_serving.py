@@ -224,6 +224,93 @@ def test_continuous_batching_matches_static(setup):
         np.testing.assert_array_equal(served[i], np.asarray(ref[i]))
 
 
+# ==================================================== per-tenant sampling
+def test_sample_jit_respects_topk_and_temperature():
+    """The per-row sampler: greedy rows (temp ≤ 0) are exact argmax, top-k
+    rows never leave their top-k set, and top_k=1 is argmax regardless of
+    temperature — per-row params routed like tenant ids."""
+    from repro.launch.serve import _sample_jit
+
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(key, (4, 32))
+    greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    # row 0 greedy, row 1 top-1 sampling (≡ greedy), rows 2/3 top-k sampled
+    temps = jnp.asarray([0.0, 5.0, 1.0, 2.0], jnp.float32)
+    topks = jnp.asarray([0, 1, 4, 8], jnp.int32)
+    seen = set()
+    for i in range(24):
+        tok = np.asarray(_sample_jit(logits, temps, topks,
+                                     jax.random.fold_in(key, i)))
+        assert tok[0] == greedy[0]
+        assert tok[1] == greedy[1]
+        for row, k in ((2, 4), (3, 8)):
+            topset = np.argsort(np.asarray(logits[row]))[-k:]
+            assert tok[row] in topset, (row, k)
+        seen.add(int(tok[3]))
+    assert len(seen) > 1        # hot rows actually sample
+    # top_k ≥ V is "no cut", identical to top_k = 0 (no negative wrap)
+    wide = _sample_jit(logits, temps, jnp.asarray([0, 1, 32 + 9, 8]),
+                       jax.random.fold_in(key, 0))
+    base = _sample_jit(logits, temps, jnp.asarray([0, 1, 0, 8]),
+                       jax.random.fold_in(key, 0))
+    np.testing.assert_array_equal(np.asarray(wide), np.asarray(base))
+
+
+def test_serve_sampling_defaults_greedy_and_topk1_exact(setup):
+    """Tenants without SamplingParams decode greedily (bit-identical to the
+    pre-sampling loop == static generation); a tenant with high temperature
+    but top_k=1 must still emit exactly the greedy tokens."""
+    params, base = setup
+    engine, names = _engine(params, base)
+    engine.set_sampling(names[1], temperature=7.5, top_k=1)
+    P, G, n_req = 8, 6, 5
+    prompts = jax.random.randint(KEY, (n_req, P), 4, CFG.vocab_size)
+    tenants = [names[i % len(names)] for i in range(n_req)]
+    reqs = [Request(i, np.asarray(prompts[i]), tenants[i], G)
+            for i in range(n_req)]
+    served = engine.serve(reqs, slots=3, prompt_len=P, max_new_cap=G)
+    ref = engine.generate(prompts, tenants, G)     # greedy reference
+    for i in range(n_req):
+        np.testing.assert_array_equal(served[i], np.asarray(ref[i]))
+
+
+def test_serve_mixed_sampling_reproducible_no_rejits(setup):
+    """A mixed greedy/sampling batch: sampled tenants diverge from greedy,
+    greedy tenants don't, reruns with the same seed are bit-identical, and
+    sampling params ride as traced data (no new decode compilations)."""
+    from repro.launch.serve import SamplingParams, _decode_jit, _sample_jit
+
+    params, base = setup
+    engine, names = _engine(params, base)
+    engine.set_sampling(names[2], temperature=3.0, top_k=8)
+    with pytest.raises(KeyError):
+        engine.set_sampling("ghost", temperature=1.0)
+    assert engine._tenant_sampling(names[2]) == SamplingParams(3.0, 8)
+    P, G, n_req = 8, 6, 6
+    prompts = jax.random.randint(KEY, (n_req, P), 4, CFG.vocab_size)
+    tenants = [names[i % len(names)] for i in range(n_req)]
+    reqs = [Request(i, np.asarray(prompts[i]), tenants[i], G)
+            for i in range(n_req)]
+    ref = engine.generate(prompts, tenants, G)     # greedy reference
+    served = engine.serve(reqs, slots=3, prompt_len=P, max_new_cap=G)
+    counts = ((_decode_jit._cache_size(), _sample_jit._cache_size())
+              if hasattr(_decode_jit, "_cache_size") else None)
+    again = engine.serve(reqs, slots=3, prompt_len=P, max_new_cap=G)
+    hot = engine.serve(reqs, slots=3, prompt_len=P, max_new_cap=G,
+                       sample_seed=99)
+    sampled_rows = [i for i, t in enumerate(tenants) if t == names[2]]
+    greedy_rows = [i for i, t in enumerate(tenants) if t != names[2]]
+    for i in greedy_rows:
+        np.testing.assert_array_equal(served[i], np.asarray(ref[i]))
+    assert any(not np.array_equal(hot[i], np.asarray(ref[i]))
+               for i in sampled_rows)
+    for i in range(n_req):      # same seed → bit-identical replay
+        np.testing.assert_array_equal(served[i], again[i])
+    if counts is not None:      # params/seed are traced data: no re-jits
+        assert (_decode_jit._cache_size(),
+                _sample_jit._cache_size()) == counts
+
+
 def test_tenant_checkpoint_roundtrip(tmp_path, setup):
     """save_adapter_stack → register_tenant(ckpt=...) serves the same rows,
     for both full stacks and partial-chain (spec) checkpoints."""

@@ -121,14 +121,21 @@ def test_layer_masked_step_confines_updates():
 
 def test_chainfed_plan_jit_cache_per_offset():
     """The DLCT cyclic window reuses compiled steps: one cache entry per
-    offset, revisits hit the cache (the old per-stage behavior)."""
+    offset, revisits hit the cache.  Since ISSUE 5 the window advances on
+    *commit events* (`_next_stage`), not the caller's round index — the
+    per-offset cache survives the event-driven schedule."""
     strat = make_strategy("chainfed", CFG, CHAIN, KEY, use_foat=False)
     n_offsets = strat.schedule.n_stages
-    plans = [strat.plan(None, r) for r in range(2 * n_offsets)]
+    plans = []
+    for _ in range(2 * n_offsets):          # two full cycles of stage events
+        plans.append(strat.plan(None, 0))
+        strat._next_stage()
     for p in plans:
         strat.engine.local_step(p)
     assert len(strat.engine._steps) == n_offsets
-    assert strat.plan(None, 0) == strat.plan(None, n_offsets)  # cyclic
+    assert plans[0] == plans[n_offsets]     # cyclic
+    # the round index is inert: plans depend only on committed stage events
+    assert strat.plan(None, 0) == strat.plan(None, 123)
 
 
 # ------------------------------------------------------------------ engine
