@@ -137,9 +137,12 @@ def bench_one(name, wl: Workload, chain, rounds, seed=0):
             strat._foat_done = True   # FOAT is one-off setup, not round cost
         s_per_round = time_path(strat, sim, rounds, warmup, path)
         steps = wl.clients_per_round * chain.local_steps
+        round_bytes = strat.comm_bytes_per_round() * wl.clients_per_round
         out[path] = {"s_per_round": s_per_round,
                      "rounds_per_s": 1.0 / s_per_round,
-                     "steps_per_s": steps / s_per_round}
+                     "steps_per_s": steps / s_per_round,
+                     "bytes_per_round": round_bytes,
+                     "bytes_per_s": round_bytes / s_per_round}
     out["speedup"] = out["legacy"]["s_per_round"] / out["cohort"]["s_per_round"]
     return out
 
@@ -184,9 +187,12 @@ def bench_modes(modes, smoke: bool, rounds: int, seed=0):
         _block(strat)
         dt = time.perf_counter() - t0
         steps = sched.committed_updates * chain.local_steps
+        bytes_moved = sched.committed_updates * strat.comm_bytes_per_round()
         out[mode] = {
             "s_per_commit": dt / max(1, rounds),
             "steps_per_s": steps / dt,
+            "bytes_moved": bytes_moved,
+            "bytes_per_s": bytes_moved / dt,
             "committed_updates": sched.committed_updates,
             "virtual_wallclock_s": hist[-1].wallclock if hist else 0.0,
             "stale_updates": sum(m.stale_updates for m in hist),
@@ -224,7 +230,8 @@ def run(fast: bool = False, smoke: bool = False, rounds: int = None,
                 f"round/{wname}/{name},{r['cohort']['s_per_round']*1e6:.0f},"
                 f"speedup={r['speedup']:.2f}"
                 f";legacy_us={r['legacy']['s_per_round']*1e6:.0f}"
-                f";steps_per_s={r['cohort']['steps_per_s']:.2f}")
+                f";steps_per_s={r['cohort']['steps_per_s']:.2f}"
+                f";bytes_per_round={r['cohort']['bytes_per_round']}")
             print(rows[-1], flush=True)
     doc = {"backend": jax.default_backend(),
            "mode": "smoke" if smoke else ("fast" if fast else "full"),

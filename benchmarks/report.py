@@ -9,6 +9,7 @@ import argparse
 import json
 import pathlib
 
+from .bench_privacy import DEFAULT_OUT as PRIVACY_JSON
 from .bench_round import DEFAULT_OUT as ROUND_JSON
 from .bench_serve import DEFAULT_OUT as SERVE_JSON
 from .roofline import DRYRUN, PEAK_FLOPS, HBM_BW, ICI_BW, analyze
@@ -180,6 +181,32 @@ def serve_throughput_table(path=SERVE_JSON):
     return "\n".join(lines)
 
 
+def privacy_table(path=PRIVACY_JSON):
+    """§Privacy-and-robustness table from BENCH_privacy.json (written by
+    ``benchmarks.bench_privacy``); None when the artifact is absent."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    doc = json.loads(path.read_text())
+    s, d, f = doc.get("secure", {}), doc.get("dp", {}), doc.get("faults", {})
+    lines = [f"backend: {doc.get('backend', '?')}", "",
+             "| gate | result |",
+             "|---|---|",
+             f"| secure-agg vs FedAvg (zero dropouts) | max diff "
+             f"{s.get('max_adapter_diff', float('nan')):.2e}, masks cancel "
+             f"bit-exactly: {s.get('masks_cancel_bitexact', '?')} |",
+             f"| DP chainfed smoke | ε = {d.get('epsilon', float('nan')):.2f}"
+             f", final loss {d.get('final_loss', float('nan')):.4f}, "
+             f"seed-reproducible: {d.get('reproducible', '?')} |",
+             f"| fault injection (20% drop + 10% byz, trimmed-mean) | "
+             f"{f.get('commits', '?')}/{f.get('requested_commits', '?')} "
+             f"commits, {f.get('fault_dropouts', '?')} dropouts recovered "
+             f"via {f.get('redispatches', '?')} re-dispatches, loss "
+             f"{f.get('faulty_loss', float('nan')):.4f} "
+             f"(clean {f.get('clean_loss', float('nan')):.4f}) |"]
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
@@ -202,6 +229,10 @@ def main():
     if st is not None:
         print("\n## §Serve throughput (single host)\n")
         print(st)
+    pt = privacy_table()
+    if pt is not None:
+        print("\n## §Privacy & robustness gates\n")
+        print(pt)
 
 
 if __name__ == "__main__":

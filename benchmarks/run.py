@@ -11,15 +11,16 @@ import argparse
 import sys
 import time
 
-from . import (bench_round, bench_serve, fig3_memory, fig8_window,
-               fig9_lambda, roofline, table1_main, table2_threshold,
-               table3_instruction, table4_ablation)
+from . import (bench_privacy, bench_round, bench_serve, fig3_memory,
+               fig8_window, fig9_lambda, roofline, table1_main,
+               table2_threshold, table3_instruction, table4_ablation)
 
 SUITES = {
     "fig3": fig3_memory,
     "roofline": roofline,
     "round": bench_round,
     "serve": bench_serve,
+    "privacy": bench_privacy,
     "table1": table1_main,
     "table2": table2_threshold,
     "table3": table3_instruction,

@@ -1,7 +1,8 @@
 """Paper Table 1: CHAINFED vs lower bound (No-FT), memory-unaware methods
 (Linear Probing, FedAdapter, C2A), memory-aware methods (FwdLLM, FedKSeed,
-FLoRA, FedRA) and the idealized upper bound (Full Adapters†), on text
-classification, IID + non-IID, under the memory wall.
+FLoRA, FedRA, layerwise pruning/dropout — Wu et al. arXiv:2508.17209, Wang
+et al. arXiv:2503.10217) and the idealized upper bound (Full Adapters†), on
+text classification, IID + non-IID, under the memory wall.
 
 Claim validated: CHAINFED orders above every baseline (incl. the upper bound)
 because the memory wall excludes clients from memory-hungry methods while
@@ -15,7 +16,8 @@ from repro.models.config import ChainConfig
 
 DATASETS_USED = ["yelp_p", "agnews"]
 METHODS = ["no_ft", "linear_probing", "fedadapter", "c2a", "fwdllm",
-           "fedkseed", "flora", "fedra", "chainfed", "full_adapters"]
+           "fedkseed", "flora", "fedra", "layer_pruning", "layer_dropout",
+           "chainfed", "full_adapters"]
 
 
 def run(rounds=16, fast=False):

@@ -68,7 +68,7 @@ def activation_bytes_per_layer(cfg: ModelConfig, batch: int, seq: int) -> int:
 
 def peak_memory(cfg: ModelConfig, method: str, batch: int, seq: int,
                 window: int = 3, l_start: int = 0, lora_rank: int = 8,
-                layer_offload: bool = True) -> dict:
+                layer_offload: bool = True, keep_layers: int = 0) -> dict:
     """Returns {params, activations, adapter_state, total} bytes for a local
     client step under each method's execution model."""
     b = _b(cfg)
@@ -102,6 +102,18 @@ def peak_memory(cfg: ModelConfig, method: str, batch: int, seq: int,
         keep = max(1, L // 2)
         return _pack(p_emb + p_layer * keep, a_layer * keep,
                      ad_layer * keep * (1 + opt_mult))
+    if method == "layer_pruning":
+        # a fixed retained subset: pruned layers are gone for the whole run,
+        # so neither their params nor activations are ever resident
+        keep = keep_layers or max(1, L // 2)
+        return _pack(p_emb + p_layer * keep, a_layer * keep,
+                     ad_layer * keep * (1 + opt_mult))
+    if method == "layer_dropout":
+        # per-round random retain: the full stack must stay on device (any
+        # layer can wake next round) but only the active subset trains
+        keep = keep_layers or max(1, L // 2)
+        return _pack(p_all, a_layer * keep,
+                     ad_layer * keep * (1 + opt_mult))
     if method == "chainfed":
         # prefix streams through (offload: one transient layer resident),
         # window fully resident with adapter training state, suffix never
@@ -124,7 +136,7 @@ def _pack(params, acts, ad):
 def round_flops(cfg: ModelConfig, method: str, batch: int, seq: int,
                 local_steps: int = 1, window: int = 3, l_start: int = 0,
                 n_samples: int = 4, kseeds: int = 8,
-                lora_rank: int = 8) -> float:
+                lora_rank: int = 8, keep_layers: int = 0) -> float:
     """Analytic FLOPs for one client's local round under each method's
     execution model — the compute half of the event-driven runtime's
     virtual-clock cost (``repro.fed.runtime``; the communication half is
@@ -152,6 +164,11 @@ def round_flops(cfg: ModelConfig, method: str, batch: int, seq: int,
     elif method == "fedra":
         keep = max(1, L // 2)
         step = 3.0 * (f_emb + keep * f_layer)    # resident half-chain fwd+bwd
+    elif method in ("layer_pruning", "layer_dropout"):
+        # dropped/pruned layers are skipped outright (residual passthrough):
+        # forward + backward through the retained subset only
+        keep = keep_layers or max(1, L // 2)
+        step = 3.0 * (f_emb + keep * f_layer)
     elif method == "chainfed":
         run = min(L, max(0, l_start) + max(1, window))
         step = (f_emb + run * f_layer            # prefix+window forward
@@ -162,8 +179,12 @@ def round_flops(cfg: ModelConfig, method: str, batch: int, seq: int,
 
 
 def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
-                         l_start: int = 0, lora_rank: int = 8, kseeds: int = 0) -> int:
-    """Uplink bytes per client per round (paper §H.2 communication claim)."""
+                         l_start: int = 0, lora_rank: int = 8, kseeds: int = 0,
+                         keep_layers: int = 0) -> int:
+    """Uplink bytes per client per round (paper §H.2 communication claim).
+    Payload only — the privacy machinery's overhead (secure-agg key
+    agreement, DP metadata) is ``privacy_comm_overhead`` and composes in
+    ``Strategy.comm_bytes_per_round``."""
     b = _b(cfg)
     L = cfg.total_chain_layers
     ad_layer = 2 * cfg.d_model * cfg.adapter.rank * b
@@ -181,4 +202,23 @@ def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
         return cfg.padded_vocab * cfg.d_model * b
     if method == "fedra":
         return ad_layer * (L // 2)
+    if method in ("layer_pruning", "layer_dropout"):
+        return ad_layer * (keep_layers or max(1, L // 2))
     return ad_layer * L   # full adapters / fedadapter / c2a / fwdllm
+
+
+def privacy_comm_overhead(cohort: int, secure: bool = False,
+                          dp: bool = False, key_bytes: int = 32) -> int:
+    """Per-client per-round uplink overhead of the privacy machinery.
+
+    Secure aggregation (Bonawitz et al.): each client exchanges a DH public
+    key and an encrypted pairwise-seed share with every other roster member
+    at session setup, plus one secret share per peer for dropout recovery —
+    ≈ 3 · (cohort − 1) · key_bytes.  DP adds a constant metadata record
+    (clip bound + noise seed commitment, 16 B)."""
+    total = 0
+    if secure:
+        total += max(0, cohort - 1) * 3 * key_bytes
+    if dp:
+        total += 16
+    return total

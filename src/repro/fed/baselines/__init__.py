@@ -10,6 +10,7 @@ from .fedra import FedRA
 from .flora import FLoRA
 from .full_adapters import FullAdapters
 from .fwdllm import FwdLLM
+from .layerwise import LayerDropout, LayerPruning
 from .linear_probing import LinearProbing
 
 BASELINES = {
@@ -22,4 +23,6 @@ BASELINES = {
     "flora": FLoRA,
     "fedra": FedRA,
     "fedembed": FedEmbed,
+    "layer_pruning": LayerPruning,
+    "layer_dropout": LayerDropout,
 }

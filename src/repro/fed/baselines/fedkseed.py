@@ -64,6 +64,12 @@ class FedKSeed(Strategy):
 
         return agg
 
+    def apply_update(self, plan, trainable0, mean_update):
+        """Secure-aggregation finalization: the masked sum already *is* the
+        weighted-mean coefficient vector — commit it as-is (coefficients are
+        not deltas on the trainable)."""
+        return {"kseed": mean_update["kseed"]}
+
     def commit_trainable(self, plan, new):
         seeds = plan.grad_options["seeds"]    # the plan's (possibly tiered) K
         full = kseed_apply(self._full_tree(), seeds,
@@ -80,5 +86,5 @@ class FedKSeed(Strategy):
             return
         self.commit_trainable(plans[0], self.engine.fedavg(deltas, weights))
 
-    def comm_bytes_per_round(self):
+    def base_comm_bytes(self):
         return self.K * 8

@@ -19,6 +19,9 @@ from ..strategies import Strategy, TrainablePlan, cohort_fedavg
 class FedRA(Strategy):
     name = "fedra"
     memory_method = "fedra"
+    # holder-normalized aggregation needs each client's plaintext layer
+    # mask against its update — not recoverable from a masked sum
+    secure_compatible = False
 
     def __init__(self, cfg, chain, key):
         super().__init__(cfg, chain, key)

@@ -1,0 +1,89 @@
+"""Layerwise-sparsity baselines (PAPERS.md second axis).
+
+* ``layer_pruning`` — federated layer pruning (Wu et al., arXiv:2508.17209):
+  a **fixed** evenly-spaced subset of layers survives for the whole run;
+  every client trains the same retained adapters, pruned layers' adapters
+  are frozen at init.  Memory and compute scale with the retained count —
+  the structural counterpart of CHAINFED's window without the chain
+  schedule.
+* ``layer_dropout`` — federated layer dropout (Wang et al.,
+  arXiv:2503.10217): each client independently redraws a **random** retained
+  subset every round.  Aggregation is per-layer holder-normalized (only the
+  clients that trained a layer vote on it) — exactly FedRA's aggregation,
+  which both inherit; what differs is the allocation policy (evenly-spaced
+  static vs per-dispatch random) and the device-side memory story (pruning
+  discards layers outright; dropout keeps the full stack resident since any
+  layer can wake next round).
+
+Both are pure ``TrainablePlan`` layer masks — no engine changes — and
+register as ordinary registry strategies for ``benchmarks/table1_main.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..registry import register_strategy
+from .fedra import FedRA
+
+
+def evenly_spaced(total: int, keep: int) -> np.ndarray:
+    """``keep`` layer indices spread uniformly over ``total`` (always
+    includes layer 0; deterministic — the pruned architecture is a run-level
+    constant)."""
+    keep = max(1, min(keep, total))
+    return np.unique(np.round(np.linspace(0, total - 1, keep)).astype(int))
+
+
+@register_strategy("layer_pruning")
+class LayerPruning(FedRA):
+    """Fixed retained subset shared by every client — the holder
+    normalization degenerates to plain FedAvg over the retained layers
+    (every client holds them), but riding FedRA's aggregation keeps one
+    code path for both allocation policies."""
+    name = "layer_pruning"
+    memory_method = "layer_pruning"
+    keep_ratio = 0.5
+
+    def __init__(self, cfg, chain, key, keep_ratio=None):
+        super().__init__(cfg, chain, key)
+        if keep_ratio is not None:
+            self.keep_ratio = float(keep_ratio)
+        L = cfg.total_chain_layers
+        self.keep_layers = max(1, int(round(self.keep_ratio * L)))
+        mask = np.zeros((L,), np.float32)
+        mask[evenly_spaced(L, self.keep_layers)] = 1.0
+        self._mask = jnp.asarray(mask)
+
+    def client_mask(self, client, round_idx):
+        return self._mask
+
+    def memory_kwargs(self, round_idx):
+        return {"keep_layers": self.keep_layers}
+
+
+@register_strategy("layer_dropout")
+class LayerDropout(FedRA):
+    """Per-client per-round random retained subset.  Differs from FedRA
+    only in framing (dropout regularization vs memory-budget allocation)
+    and in the memory model: the full stack stays resident on device."""
+    name = "layer_dropout"
+    memory_method = "layer_dropout"
+    keep_ratio = 0.5
+
+    def __init__(self, cfg, chain, key, keep_ratio=None):
+        super().__init__(cfg, chain, key)
+        if keep_ratio is not None:
+            self.keep_ratio = float(keep_ratio)
+        L = cfg.total_chain_layers
+        self.keep_layers = max(1, int(round(self.keep_ratio * L)))
+
+    def client_mask(self, client, round_idx):
+        L = self.cfg.total_chain_layers
+        sel = self._rng.choice(L, self.keep_layers, replace=False)
+        mask = np.zeros((L,), np.float32)
+        mask[sel] = 1.0
+        return jnp.asarray(mask)
+
+    def memory_kwargs(self, round_idx):
+        return {"keep_layers": self.keep_layers}

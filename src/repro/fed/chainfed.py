@@ -158,7 +158,7 @@ class ChainFed(Strategy):
     def memory_kwargs(self, round_idx):
         return {"window": self.chain.window, "l_start": self.l_start}
 
-    def comm_bytes_per_round(self) -> int:
+    def base_comm_bytes(self) -> int:
         return comm_bytes_per_round(self.cfg, "chainfed",
                                     window=self.chain.window,
                                     l_start=self.l_start)

@@ -158,6 +158,8 @@ class RoundMetrics:
     wallclock: float = 0.0      # virtual seconds since experiment start
     stale_updates: int = 0      # aggregated updates computed at an older
                                 # model version (semisync carry / async)
+    dp_epsilon: float = 0.0     # cumulative privacy spend (ε at the DP
+                                # config's δ) — 0 when DP is off
 
 
 def run_rounds(sim: FedSim, strategy, rounds: int, eval_every: int = 5,

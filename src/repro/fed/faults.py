@@ -1,0 +1,138 @@
+"""Fault injection and byzantine-robust aggregation.
+
+`ClientBehavior` describes how a population misbehaves; the event-driven
+``FedScheduler`` consults a `FaultModel` at dispatch time:
+
+* **dropout** — the client fails mid-round; its completion event is replaced
+  by a timeout event on the same heap (the server learns of the failure at
+  ``timeout_factor ×`` the expected round time).  Async mode re-dispatches a
+  replacement client on the same heap; semisync excludes the entry from the
+  wave commit (exercising secure-agg dropout recovery when masking is on).
+* **byzantine** — a fixed subset of clients (``byzantine_frac`` of the
+  population, chosen once from the behavior seed) scales its genuine update
+  by ``byzantine_scale`` (negative = sign flip) before upload.  Applied as
+  one jitted per-bucket scale-vector multiply — shape-stable, so the
+  no-recompile guarantee of the event loop holds.
+* **straggler** — intermittent slowdown: with ``straggler_prob`` a round
+  takes ``straggler_factor ×`` its oracle latency.
+
+All draws are deterministic per ``(seed, cid, dispatch seq)`` — replaying a
+run replays its faults.
+
+The robust aggregators (trimmed mean, coordinate median, norm-clip) register
+in the strategy-level ``AGGREGATORS`` registry and drop into the same fused
+aggregation seam as weighted FedAvg (``Strategy.aggregator = "trimmed_mean"``
+or ``run_experiment(aggregator=...)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils.tree import tree_map
+from .strategies import (cohort_fedavg, cohort_norms, register_aggregator,
+                         scale_cohort)
+
+
+# ============================================================ client faults
+@dataclasses.dataclass(frozen=True)
+class ClientBehavior:
+    """Population misbehavior knobs (all probabilities per dispatch)."""
+    dropout_prob: float = 0.0
+    byzantine_frac: float = 0.0
+    byzantine_scale: float = -10.0
+    straggler_prob: float = 0.0
+    straggler_factor: float = 4.0
+    timeout_factor: float = 1.0   # failure detected at this × round time
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultDraw:
+    dropped: bool
+    slowdown: float
+
+
+class FaultModel:
+    """Deterministic realization of a `ClientBehavior` over a population:
+    the byzantine set is fixed once per run; dropout/straggler draws key off
+    ``(seed, cid, seq)`` so every dispatch is independently — and
+    reproducibly — faulty."""
+
+    def __init__(self, behavior: ClientBehavior, n_clients: int):
+        self.behavior = behavior
+        n_byz = int(round(behavior.byzantine_frac * n_clients))
+        if n_byz > 0:
+            rng = np.random.default_rng((behavior.seed, 0xB52))
+            self.byzantine = frozenset(
+                int(c) for c in rng.choice(n_clients, n_byz, replace=False))
+        else:
+            self.byzantine = frozenset()
+
+    def is_byzantine(self, cid: int) -> bool:
+        return cid in self.byzantine
+
+    def draw(self, cid: int, seq: int) -> FaultDraw:
+        b = self.behavior
+        rng = np.random.default_rng((b.seed, cid, seq))
+        dropped = bool(rng.random() < b.dropout_prob)
+        slow = b.straggler_factor if rng.random() < b.straggler_prob else 1.0
+        return FaultDraw(dropped=dropped, slowdown=float(slow))
+
+    def update_scales(self, cids) -> np.ndarray:
+        """(C,) multiplier vector for a dispatch bucket — byzantine members
+        get ``byzantine_scale``, honest ones 1.  Fed to one jitted
+        ``scale_cohort`` so corruption costs no recompile."""
+        s = self.behavior.byzantine_scale
+        return np.asarray([s if self.is_byzantine(c) else 1.0 for c in cids],
+                          np.float32)
+
+
+# ======================================================= robust aggregators
+def _trim_counts(cohort: int, trim: float) -> int:
+    """Per-side trim count: ⌊trim·C⌋, capped so at least one row survives."""
+    k = int(np.floor(trim * cohort))
+    return min(k, (cohort - 1) // 2)
+
+
+@register_aggregator("trimmed_mean")
+def trimmed_mean(trim: float = 0.2):
+    """Coordinate-wise trimmed mean: sort the cohort axis, drop the top and
+    bottom ``⌊trim·C⌋`` values per coordinate, average the rest.  Ignores
+    sample weights (robustness and weighting pull opposite ways — a
+    byzantine client should not buy influence with a large dataset)."""
+    def agg(trainable0, deltas, weights, masks):
+        cohort = weights.shape[0]
+        k = _trim_counts(cohort, trim)
+        def red(t0, d):
+            s = jnp.sort(d.astype(jnp.float32), axis=0)
+            m = jnp.mean(s[k:cohort - k], axis=0)
+            return (t0 + m).astype(t0.dtype)
+        return tree_map(red, trainable0, deltas)
+    return agg
+
+
+@register_aggregator("median")
+def coordinate_median():
+    """Coordinate-wise median over the cohort axis."""
+    def agg(trainable0, deltas, weights, masks):
+        return tree_map(
+            lambda t0, d: (t0 + jnp.median(d.astype(jnp.float32), axis=0)
+                           ).astype(t0.dtype),
+            trainable0, deltas)
+    return agg
+
+
+@register_aggregator("norm_clip")
+def norm_clip(clip: float = 0.0):
+    """Clip every client's update norm to ``clip`` (or, when 0, to the cohort's
+    median norm — a scale-free default) and take the weighted FedAvg.
+    Neutralizes magnitude attacks while keeping sample weighting."""
+    def agg(trainable0, deltas, weights, masks):
+        norms = cohort_norms(deltas)
+        ref = jnp.float32(clip) if clip > 0 else jnp.median(norms)
+        clipped = scale_cohort(deltas, jnp.minimum(1.0, ref / (norms + 1e-12)))
+        return cohort_fedavg(trainable0, clipped, weights, masks)
+    return agg

@@ -1,0 +1,362 @@
+"""Privacy subsystem: in-graph DP-FedAvg and secure-aggregation simulation.
+
+Two independent mechanisms that compose with any registry strategy through
+the ``PlanEngine``/``FedScheduler`` aggregation seams (no per-strategy code):
+
+**DP-FedAvg** (`enable_dp`) — per-client update clipping and Gaussian noise
+fused into the cohort aggregation.  ``make_private_aggregate`` wraps the
+resolved 5-arg aggregation: clip every client's stacked ``(C, ...)`` update
+to an L2 bound, force uniform weights (sample-count weighting would make the
+per-client sensitivity data-dependent), aggregate, then add
+``N(0, (σ·clip/C)²)`` per coordinate — all inside the jitted cohort step, so
+the DP run compiles once like the clean run.  Noise keys are ``fold_in``'d
+from the DP seed by round (and leaf), so a run is bit-reproducible from its
+seed.  An `RDPAccountant` tracks the Rényi-DP curve of the subsampled
+Gaussian mechanism and reports ``(ε, δ)`` per round in ``RoundMetrics``.
+
+**Secure aggregation** (`enable_secure_agg`) — the Bonawitz-style masking
+protocol simulated faithfully enough to test the systems questions: updates
+are quantized to a fixed-point int32 field, every client pair derives an
+additive mask from a shared seed (``fold_in`` of the session key by the
+ordered pair), the lower-id client adds the mask and the higher-id client
+subtracts it, and sums are taken with int32 wraparound so the masks cancel
+**bit-exactly** in the server's sum.  The server only ever holds masked
+per-client uploads.  When a masked client drops after dispatch, survivors
+reconstruct the dropped client's pairwise masks from the shared seeds and
+the server subtracts them — the round still commits (`SecureSession.
+unmask_sum` with a non-empty dropped set).  With zero dropouts the
+dequantized result equals plain FedAvg to quantization precision (~2⁻¹⁶).
+
+DP composes with secure aggregation: clipping is client-side (before
+masking), the noise is added server-side after unmasking — the central-DP
+simulation of distributed noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils.tree import tree_map
+from .strategies import cohort_norms, scale_cohort
+
+
+# ==================================================== differential privacy
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Client-level DP-FedAvg knobs.
+
+    clip              per-client L2 bound on the uploaded update
+    noise_multiplier  σ — noise std in units of the mean's sensitivity
+                      (clip / cohort size)
+    delta             target δ for the ε report
+    seed              root of the fold_in'd per-round noise keys
+    """
+    clip: float = 1.0
+    noise_multiplier: float = 1.0
+    delta: float = 1e-5
+    seed: int = 0
+
+
+def clip_cohort(deltas, clip: float):
+    """Scale each client's ``(C, ...)`` update so its global L2 norm is at
+    most ``clip`` (below-bound updates pass through unscaled)."""
+    norms = cohort_norms(deltas)
+    return scale_cohort(deltas, jnp.minimum(1.0, clip / (norms + 1e-12)))
+
+
+def gaussian_noise_tree(rng, tree, std):
+    """Per-leaf Gaussian noise from fold_in'd leaf keys (stable leaf order
+    via tree flattening), matching each leaf's shape, float32."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(rng, len(leaves)) if leaves else []
+    noise = [std * jax.random.normal(k, l.shape, jnp.float32)
+             for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noise)
+
+
+def make_private_aggregate(dp: DPConfig, base_agg):
+    """Wrap a 5-arg aggregation with the DP mechanism: clip → uniform-weight
+    aggregate → add ``N(0, (σ·clip/C)²)`` to every committed coordinate.
+    Traceable — lives inside the jitted cohort step / commit."""
+    def agg(trainable0, deltas, weights, masks, rng):
+        clipped = clip_cohort(deltas, dp.clip)
+        # uniform weights: with sample-count weights the per-client
+        # sensitivity of the mean would be w_i·clip/Σw — data-dependent
+        uniform = jnp.ones_like(weights)
+        new = base_agg(trainable0, clipped, uniform, masks, rng)
+        cohort = weights.shape[0]
+        std = dp.noise_multiplier * dp.clip / cohort
+        noise = gaussian_noise_tree(jax.random.fold_in(rng, 0x0D9), new, std)
+        return tree_map(lambda x, n: (x.astype(jnp.float32) + n
+                                      ).astype(x.dtype), new, noise)
+    return agg
+
+
+DEFAULT_RDP_ORDERS = tuple(range(2, 64)) + (80, 96, 128, 192, 256, 512)
+
+
+def _log_binom(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))
+
+
+def rdp_gaussian(alpha: int, noise_multiplier: float, q: float) -> float:
+    """RDP of one step of the Poisson-subsampled Gaussian mechanism at
+    integer order ``alpha``.  ``q >= 1`` is the unsubsampled closed form
+    α/(2σ²); ``q < 1`` is the exact integer-order expansion (Mironov,
+    Talwar & Zhang 2019, eq. 9):
+
+        RDP(α) = log( Σ_{k=0}^{α} C(α,k) (1−q)^{α−k} q^k e^{k(k−1)/(2σ²)} )
+                 / (α − 1)
+    """
+    if noise_multiplier <= 0:
+        return float("inf")
+    if q <= 0:
+        return 0.0
+    s2 = float(noise_multiplier) ** 2
+    if q >= 1.0:
+        return alpha / (2.0 * s2)
+    terms = []
+    for k in range(alpha + 1):
+        t = _log_binom(alpha, k) + k * math.log(q) + k * (k - 1) / (2.0 * s2)
+        if q < 1.0:
+            t += (alpha - k) * math.log1p(-q)
+        terms.append(t)
+    m = max(terms)
+    return (m + math.log(sum(math.exp(t - m) for t in terms))) / (alpha - 1)
+
+
+class RDPAccountant:
+    """Moments accountant over a fixed grid of integer Rényi orders.  Each
+    server commit adds one mechanism invocation (`step`); `epsilon` converts
+    the accumulated RDP curve to ``(ε, δ)`` via the standard bound
+    ε = min_α [ RDP(α) + log(1/δ)/(α−1) ]."""
+
+    def __init__(self, orders: Sequence[int] = DEFAULT_RDP_ORDERS):
+        self.orders = tuple(int(a) for a in orders)
+        self._rdp = np.zeros(len(self.orders))
+        self.steps = 0
+
+    def step(self, noise_multiplier: float, q: float = 1.0, steps: int = 1):
+        self._rdp = self._rdp + steps * np.array(
+            [rdp_gaussian(a, noise_multiplier, q) for a in self.orders])
+        self.steps += steps
+
+    def epsilon(self, delta: float) -> tuple:
+        """Best ``(ε, order)`` over the grid at the given δ."""
+        if self.steps == 0:
+            return 0.0, self.orders[0]
+        orders = np.array(self.orders, dtype=np.float64)
+        eps = self._rdp + math.log(1.0 / delta) / (orders - 1.0)
+        i = int(np.argmin(eps))
+        return float(eps[i]), self.orders[i]
+
+
+def enable_dp(strategy, dp: Optional[DPConfig] = None):
+    """Attach client-level DP to a constructed strategy (post-construction:
+    strategy ``__init__`` signatures are bespoke).  Must run before the
+    first round — the engine caches compiled cohort steps per plan, and the
+    DP wrapper has to be in the first trace."""
+    dp = dp if dp is not None else DPConfig()
+    if strategy.engine._cohort or strategy.engine._cohort_updates:
+        raise RuntimeError(
+            "enable_dp after cohort steps compiled: the cached aggregation "
+            "would silently stay non-private — enable DP before training")
+    strategy.dp = dp
+    strategy._dp_key = jax.random.PRNGKey(dp.seed)
+    strategy.dp_accountant = RDPAccountant()
+    return strategy
+
+
+# ====================================================== secure aggregation
+@dataclasses.dataclass(frozen=True)
+class SecureAggConfig:
+    """Pairwise-masking simulation knobs.
+
+    fixedpoint_bits  fractional bits of the int32 field encoding (quantized
+                     value = round(x · 2^bits); masks cancel bit-exactly in
+                     int32 wraparound sums)
+    seed             root of the per-session mask keys
+    cohort           roster size hint for the comm-overhead model
+    """
+    fixedpoint_bits: int = 16
+    seed: int = 0
+    cohort: int = 0
+
+
+class SecureSession:
+    """One masking session: the roster fixed at dispatch, pairwise mask
+    seeds derived from the session key.  All arithmetic on the int32 field
+    (wraparound = mod 2³²), so masking is exactly invertible."""
+
+    def __init__(self, cfg: SecureAggConfig, key, cids: Sequence[int]):
+        self.cfg = cfg
+        self.key = key
+        self.cids = tuple(cids)
+        self._index = {cid: i for i, cid in enumerate(self.cids)}
+        self._scale = float(2 ** cfg.fixedpoint_bits)
+
+    # ------------------------------------------------------------- encoding
+    def quantize(self, tree):
+        return tree_map(
+            lambda x: jnp.round(x.astype(jnp.float32) * self._scale
+                                ).astype(jnp.int32), tree)
+
+    def dequantize(self, tree):
+        return tree_map(lambda x: x.astype(jnp.float32) / self._scale, tree)
+
+    # ---------------------------------------------------------------- masks
+    def _pair_mask(self, a: int, b: int, ref_tree):
+        """The shared additive mask of the unordered pair (a, b): uniform
+        int32 bits per leaf from the fold_in'd pair key.  Symmetric — both
+        clients derive the identical tree."""
+        i, j = sorted((self._index[a], self._index[b]))
+        k = jax.random.fold_in(jax.random.fold_in(self.key, i), j)
+        leaves, treedef = jax.tree_util.tree_flatten(ref_tree)
+        keys = jax.random.split(k, len(leaves)) if leaves else []
+        masks = [jax.lax.bitcast_convert_type(
+                     jax.random.bits(kk, l.shape, jnp.uint32), jnp.int32)
+                 for kk, l in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, masks)
+
+    def _sign(self, a: int, b: int) -> int:
+        """Lower roster index adds the pair mask, higher subtracts it."""
+        return 1 if self._index[a] < self._index[b] else -1
+
+    def mask_update(self, cid: int, float_tree):
+        """What client ``cid`` uploads: its quantized update plus the signed
+        sum of its pairwise masks (int32, wraps)."""
+        out = self.quantize(float_tree)
+        for other in self.cids:
+            if other == cid:
+                continue
+            m = self._pair_mask(cid, other, float_tree)
+            s = self._sign(cid, other)
+            out = tree_map(lambda x, mm: x + s * mm, out, m)
+        return out
+
+    def unmask_sum(self, masked_trees, survivors: Sequence[int]):
+        """Sum the survivors' masked uploads and remove the residual masks
+        of dropped roster members (pairs among survivors cancel on their
+        own).  Returns the int32 field sum — exactly the sum of the
+        survivors' quantized updates, bit for bit."""
+        total = masked_trees[0]
+        for t in masked_trees[1:]:
+            total = tree_map(lambda a, b: a + b, total, t)
+        surv = set(survivors)
+        dropped = [c for c in self.cids if c not in surv]
+        for d in dropped:
+            for s_cid in survivors:
+                m = self._pair_mask(s_cid, d, total)
+                s = self._sign(s_cid, d)
+                total = tree_map(lambda x, mm: x - s * mm, total, m)
+        return total
+
+
+def _clip_single(tree, clip: float):
+    batched = tree_map(lambda x: x[None], tree)
+    return tree_map(lambda x: x[0], clip_cohort(batched, clip))
+
+
+def _session_field_sum(strategy, session: "SecureSession", contributions,
+                       wsum: float):
+    """The unmasked int32 field sum of one session's survivors.  Each client
+    pre-scales its (DP-clipped, when enabled) update by ``w_i/Σw`` before
+    quantizing and masking, so the field sum *is* the weighted-mean
+    contribution — no plaintext post-division.  Roster members missing from
+    ``contributions`` are the dropped set; their reconstructed masks are
+    removed inside ``unmask_sum``."""
+    dp = strategy.dp
+    masked = []
+    for cid, u, w in contributions:
+        if dp is not None:
+            u, w = _clip_single(u, dp.clip), 1.0
+        scaled = tree_map(lambda x: x.astype(jnp.float32) * (w / wsum), u)
+        masked.append(session.mask_update(cid, scaled))
+    return session.unmask_sum(masked, [c for c, _, _ in contributions])
+
+
+def secure_commit(strategy, plan, trainable0, groups, rng=None):
+    """Server-side secure commit over one or more masking sessions.
+
+    ``groups`` — list of ``(session, contributions)`` where contributions is
+    ``[(cid, update_tree, weight)]`` for that session's surviving roster
+    members (weights already include any staleness discount; an event-driven
+    commit can mix arrivals from several dispatch buckets, each with its own
+    session).  With DP enabled, updates are clipped client-side (pre-mask),
+    weights are forced uniform, and the Gaussian noise lands on the unmasked
+    mean — the central-DP simulation of distributed noise."""
+    dp = strategy.dp
+    n_contrib = sum(len(c) for _, c in groups)
+    if dp is not None:
+        wsum = float(max(1, n_contrib))
+    else:
+        wsum = float(sum(w for _, cs in groups for _, _, w in cs)) or 1.0
+    total, ref = None, groups[0][0]
+    for session, contribs in groups:
+        if not contribs:
+            continue    # every roster member dropped: no uploads arrived
+        s = _session_field_sum(strategy, session, contribs, wsum)
+        total = s if total is None else tree_map(lambda a, b: a + b, total, s)
+    if total is None:
+        return trainable0
+    mean = ref.dequantize(total)
+    if dp is not None:
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        std = dp.noise_multiplier * dp.clip / max(1, n_contrib)
+        noise = gaussian_noise_tree(jax.random.fold_in(rng, 0x0D9), mean,
+                                    std)
+        mean = tree_map(lambda x, n: x + n, mean, noise)
+    return strategy.apply_update(plan, trainable0, mean)
+
+
+def new_session(strategy, cids) -> "SecureSession":
+    """A fresh masking session for a fixed roster — the dispatch-time key
+    agreement.  Keys fold a per-strategy session counter, so replaying a
+    run replays its masks."""
+    strategy._secure_sessions += 1
+    return SecureSession(
+        strategy.secure,
+        jax.random.fold_in(strategy._secure_key, strategy._secure_sessions),
+        cids)
+
+
+def secure_round(strategy, plan, trainable0, updates, weights, cids,
+                 rng=None):
+    """Sync-path secure aggregation of one full cohort (``updates`` stacked
+    ``(C, ...)``): a fresh session whose roster is exactly the cohort —
+    nobody drops on the lockstep path."""
+    session = new_session(strategy, cids)
+    w = np.asarray(jax.device_get(weights), np.float64)
+    contributions = [
+        (cid, tree_map(lambda x: x[i], updates), float(w[i]))
+        for i, cid in enumerate(cids)]
+    return secure_commit(strategy, plan, trainable0,
+                         [(session, contributions)], rng=rng)
+
+
+def enable_secure_agg(strategy, cfg: Optional[SecureAggConfig] = None):
+    """Attach secure-aggregation simulation to a constructed strategy.
+    Requires a linear weighted-mean aggregation (the server never sees
+    plaintext per-client updates, so holder-normalized schemes like FedRA
+    cannot run under masking — they set ``secure_compatible = False``)."""
+    cfg = cfg if cfg is not None else SecureAggConfig()
+    if not getattr(strategy, "secure_compatible", True):
+        raise ValueError(
+            f"strategy {strategy.name!r} aggregation is not a linear "
+            "weighted mean of client uploads — secure aggregation cannot "
+            "reproduce it from the masked sum")
+    if strategy.aggregator != "fedavg":
+        raise ValueError(
+            "secure aggregation only supports the linear fedavg mean; "
+            f"robust aggregator {strategy.aggregator!r} needs plaintext "
+            "per-client updates")
+    strategy.secure = cfg
+    strategy._secure_key = jax.random.PRNGKey(cfg.seed)
+    strategy._secure_sessions = 0
+    return strategy

@@ -97,7 +97,11 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
                    params=None, sim=None, verbose: bool = False,
                    strategy_opts: Optional[dict] = None,
                    mode: str = "sync",
-                   scheduler_opts: Optional[dict] = None) -> ExperimentResult:
+                   scheduler_opts: Optional[dict] = None,
+                   dp=None, secure_agg=None,
+                   aggregator: Optional[str] = None,
+                   aggregator_opts: Optional[dict] = None,
+                   faults=None) -> ExperimentResult:
     """High-level entry point: build (or accept) the federated testbed, make
     the named strategy, optionally swap in a pretrained base, run rounds.
 
@@ -111,6 +115,18 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
     ``scheduler_opts`` forwards its knobs (``buffer_size``, ``concurrency``,
     ``deadline_quantile``, ``straggler``, ``bucket_pad``, ...).  In async
     mode ``rounds`` counts server commits.
+
+    Privacy & robustness (``repro.fed.privacy`` / ``repro.fed.faults``):
+
+    * ``dp`` — a ``DPConfig`` (or its kwargs as a dict) enables client-level
+      DP-FedAvg; per-round ε lands in ``RoundMetrics.dp_epsilon``.
+    * ``secure_agg`` — ``True``, a ``SecureAggConfig``, or its kwargs:
+      pairwise-masked aggregation (sync/semisync only).
+    * ``aggregator`` (+ ``aggregator_opts``) — a registered robust
+      aggregation (``trimmed_mean``, ``median``, ``norm_clip``) replacing
+      weighted FedAvg for strategies without a bespoke one.
+    * ``faults`` — a ``ClientBehavior`` (or its kwargs): dropout/byzantine/
+      straggler injection; needs ``mode`` semisync or async.
     """
     import jax
     import numpy as np
@@ -151,6 +167,28 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
         params = pretrained_base(cfg, sim.tokens, steps=pretrain_steps)
     if params is not None:
         strat.params = params
+
+    if aggregator is not None:
+        from .strategies import make_aggregator
+        make_aggregator(aggregator, **(aggregator_opts or {}))  # validate
+        strat.aggregator = aggregator
+        strat.aggregator_opts = dict(aggregator_opts or {})
+    if dp is not None:
+        from .privacy import DPConfig, enable_dp
+        enable_dp(strat, DPConfig(**dp) if isinstance(dp, dict) else dp)
+    if secure_agg:
+        from .privacy import SecureAggConfig, enable_secure_agg
+        sa = (SecureAggConfig() if secure_agg is True
+              else SecureAggConfig(**secure_agg)
+              if isinstance(secure_agg, dict) else secure_agg)
+        if not sa.cohort:
+            sa = dataclasses.replace(sa, cohort=sim.fed.clients_per_round)
+        enable_secure_agg(strat, sa)
+    if faults is not None:
+        from .faults import ClientBehavior
+        fb = (ClientBehavior(**faults) if isinstance(faults, dict)
+              else faults)
+        scheduler_opts = {**(scheduler_opts or {}), "faults": fb}
 
     if mode == "sync" and not scheduler_opts:
         history = run_rounds(sim, strat, rounds, eval_every=eval_every,

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from collections import deque
 from typing import List, Optional
 
 import jax
@@ -54,8 +55,10 @@ import numpy as np
 
 from ..core.memory import round_flops
 from ..utils.tree import tree_map
+from . import privacy
 from .engine import FedSim, RoundMetrics
-from .strategies import cohort_fedavg, stack_masks
+from .faults import ClientBehavior, FaultModel
+from .strategies import scale_cohort, stack_masks
 
 MODES = ("sync", "semisync", "async")
 
@@ -105,6 +108,11 @@ class _Pending:
     version: int            # model version the update was computed at
     seq: int = 0            # dispatch order — deterministic heap tie-break
     loss: object = None     # device scalar: this client's mean local loss
+    start: float = 0.0      # dispatch clock — observed latency = finish-start
+    failed: bool = False    # fault-injected dropout: `finish` is the server's
+                            # timeout event, the update never arrives
+    session: object = None  # secure-agg masking session of this entry's
+                            # dispatch bucket (None when masking is off)
 
     def __lt__(self, other):
         return (self.finish, self.seq) < (other.finish, other.seq)
@@ -152,6 +160,11 @@ class FedScheduler:
         per-tier plans split a wave into uneven buckets.
     staleness_cap : drop (instead of discount) updates staler than this many
         versions (async; default: keep all).
+    faults : ``ClientBehavior`` (or a prebuilt ``FaultModel``) — inject
+        dropouts (timeout event + async re-dispatch on the same heap),
+        byzantine update corruption, and intermittent stragglers.  Requires
+        an event-driven mode: the lockstep sync path has no timeout
+        machinery to detect a failure with.
     """
 
     def __init__(self, sim: FedSim, strategy, mode: str = "sync", *,
@@ -160,11 +173,26 @@ class FedScheduler:
                  deadline_quantile: float = 0.75,
                  straggler: str = "drop",
                  bucket_pad: Optional[int] = None,
-                 staleness_cap: Optional[int] = None):
+                 staleness_cap: Optional[int] = None,
+                 faults=None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; one of {MODES}")
         if straggler not in ("drop", "carry"):
             raise ValueError(f"straggler policy {straggler!r}: drop|carry")
+        if faults is not None and mode == "sync":
+            raise ValueError(
+                "fault injection needs the event-driven runtime (semisync/"
+                "async): the lockstep sync path has no timeout events")
+        if strategy.secure is not None:
+            if mode == "async":
+                raise ValueError(
+                    "secure aggregation needs round-scoped masking sessions; "
+                    "async FedBuff commits mix arbitrary dispatch waves — "
+                    "use sync or semisync")
+            if mode == "semisync" and straggler == "carry":
+                raise ValueError(
+                    "secure aggregation with straggler='carry' would commit "
+                    "one session across several rounds; use straggler='drop'")
         self.sim, self.strategy, self.mode = sim, strategy, mode
         self.concurrency = concurrency or sim.fed.clients_per_round
         self.buffer_size = buffer_size or self.concurrency
@@ -177,12 +205,21 @@ class FedScheduler:
         self.straggler = straggler
         self.bucket_pad = bucket_pad or self.concurrency
         self.staleness_cap = staleness_cap
+        if isinstance(faults, ClientBehavior):
+            faults = FaultModel(faults, sim.fed.n_clients)
+        self.faults: Optional[FaultModel] = faults
         self.clock = 0.0            # virtual seconds
         self.version = 0            # server model version (commits so far)
         self._times = {}            # (cid, plan) -> cached round time
         self._seq = 0               # dispatch counter (heap tie-break)
         self._agg_jit = {}          # plan -> jitted commit aggregation
+        self._corrupt_jit = None    # jitted byzantine per-bucket scaling
         self.committed_updates = 0  # client updates aggregated so far
+        self.fault_dropouts = 0     # dispatches lost to injected dropouts
+        self.redispatches = 0       # replacement dispatches (async recovery)
+        # observed round latencies (on-time actuals; stragglers enter
+        # censored at the deadline) — the adaptive semisync deadline
+        self._lat_window = deque(maxlen=512)
 
     # ------------------------------------------------------------------ run
     def run(self, rounds: int, eval_every: int = 5,
@@ -210,12 +247,18 @@ class FedScheduler:
 
     def _metric(self, r, eval_b, n, stale, verbose) -> RoundMetrics:
         loss, acc = self.strategy.evaluate(eval_b)
+        eps = 0.0
+        if self.strategy.dp is not None:
+            eps, _ = self.strategy.dp_accountant.epsilon(
+                self.strategy.dp.delta)
         m = RoundMetrics(r, loss, acc, n,
                          self.strategy.comm_bytes_per_round(),
-                         wallclock=self.clock, stale_updates=stale)
+                         wallclock=self.clock, stale_updates=stale,
+                         dp_epsilon=eps)
         if verbose:
+            dp = f" ε={eps:.2f}" if self.strategy.dp is not None else ""
             print(f"  round {r:3d} n={n:2d} loss={loss:.4f} acc={acc:.4f} "
-                  f"t={self.clock:.1f}s stale={stale}")
+                  f"t={self.clock:.1f}s stale={stale}{dp}")
         return m
 
     def _sample(self, n: int, round_idx: int, busy=frozenset()):
@@ -268,13 +311,37 @@ class FedScheduler:
             step = strat.engine.cohort_updates(plan)
             updates, losses = step(tr0, strat.params, strat.adapters,
                                    batches, masks)
+            if self.faults is not None and self.faults.byzantine:
+                # corruption is one shape-stable jitted multiply over the
+                # padded bucket — the event loop's no-recompile guarantee
+                # holds with byzantine clients in play
+                scales = np.ones(n + pad, np.float32)
+                scales[:n] = self.faults.update_scales(
+                    [c.cid for c in bucket])
+                if self._corrupt_jit is None:
+                    self._corrupt_jit = jax.jit(scale_cohort)
+                updates = self._corrupt_jit(updates,
+                                            jnp.asarray(scales))
+            session = (privacy.new_session(strat,
+                                           [c.cid for c in bucket])
+                       if strat.secure is not None else None)
             for i, c in enumerate(bucket):
                 self._seq += 1
+                t = self._round_time(c, plan)
+                failed = False
+                if self.faults is not None:
+                    draw = self.faults.draw(c.cid, self._seq)
+                    t *= draw.slowdown
+                    if draw.dropped:
+                        failed = True
+                        t *= self.faults.behavior.timeout_factor
+                        self.fault_dropouts += 1
                 pending.append(_Pending(
-                    finish=self.clock + self._round_time(c, plan),
+                    finish=self.clock + t,
                     client=c, plan=plan, bucket=updates, bi=i,
                     masks=mask_list[i], weight=float(c.n_samples),
-                    version=self.version, seq=self._seq, loss=losses[i]))
+                    version=self.version, seq=self._seq, loss=losses[i],
+                    start=self.clock, failed=failed, session=session))
         return pending
 
     # --------------------------------------------------------------- commit
@@ -301,29 +368,52 @@ class FedScheduler:
         # server commit, not whichever plan group happened to run last
         strat._last_round_loss = jnp.mean(
             jnp.stack([e.loss for e in entries]))
+        dp_rng = (jax.random.fold_in(strat._dp_key, self.version)
+                  if strat.dp is not None else None)
         strat.begin_commit()
-        for plan, es in groups.items():
+        for gi, (plan, es) in enumerate(groups.items()):
             # completion events interleave arbitrarily; restoring dispatch
             # order makes the cohort axis deterministic (and identical to
             # the sync cohort order), and re-enables the whole-bucket
             # zero-copy fast path in _stack_updates
             es.sort(key=lambda e: e.seq)
-            ups = _stack_updates(es)
-            masks = stack_masks([e.masks for e in es])
-            w = jnp.asarray([e.weight *
-                             strat.staleness_weight(self.version - e.version)
-                             for e in es], jnp.float32)
             stale += sum(1 for e in es if e.version < self.version)
             tr0 = strat.init_trainable(plan)
-            if plan not in self._agg_jit:
-                agg = strat.cohort_aggregate(plan)
-                self._agg_jit[plan] = jax.jit(
-                    agg if agg is not None else cohort_fedavg)
-            strat.commit_trainable(plan, self._agg_jit[plan](tr0, ups, w,
-                                                             masks))
+            rng = (jax.random.fold_in(dp_rng, gi)
+                   if dp_rng is not None else jax.random.PRNGKey(0))
+            if strat.secure is not None:
+                # per-session unmasking: each dispatch bucket agreed its
+                # own pairwise masks — survivors unmask per session,
+                # dropped roster members' masks are reconstructed
+                sgroups = {}
+                for e in es:
+                    sgroups.setdefault(id(e.session),
+                                       (e.session, []))[1].append(
+                        (e.client.cid,
+                         tree_map(lambda u: u[e.bi], e.bucket),
+                         e.weight * strat.staleness_weight(
+                             self.version - e.version)))
+                new = privacy.secure_commit(strat, plan, tr0,
+                                            list(sgroups.values()), rng=rng)
+            else:
+                ups = _stack_updates(es)
+                masks = stack_masks([e.masks for e in es])
+                w = jnp.asarray(
+                    [e.weight
+                     * strat.staleness_weight(self.version - e.version)
+                     for e in es], jnp.float32)
+                if plan not in self._agg_jit:
+                    self._agg_jit[plan] = jax.jit(
+                        strat.resolve_aggregate(plan))
+                new = self._agg_jit[plan](tr0, ups, w, masks, rng)
+            strat.commit_trainable(plan, new)
         strat.end_commit()
         self.version += 1
         self.committed_updates += len(entries)
+        if strat.dp is not None:
+            strat.dp_accountant.step(
+                strat.dp.noise_multiplier,
+                q=len(entries) / max(1, len(self.sim.clients)))
         return len(entries), stale
 
     # ------------------------------------------------------------ sync mode
@@ -361,7 +451,24 @@ class FedScheduler:
         or carried: a carried update was computed at dispatch and is still
         cooking, so the device stays busy (excluded from resampling) and its
         update commits in a later round at exactly the staleness its
-        lateness earned it."""
+        lateness earned it.
+
+        The deadline is **online-adaptive**: the server keeps a rolling
+        window of observed client latencies (on-time rounds contribute
+        their actual latency; aborted stragglers contribute the deadline —
+        a censored observation, all the server ever measures for them) and
+        sets each round's cutoff at the running ``deadline_quantile`` of
+        that window.  The first rounds bootstrap from the current wave's
+        oracle latencies (the cold-start estimate PR 5 used every round);
+        ``deadline_quantile >= 1.0`` means wait-for-everyone and bypasses
+        estimation entirely.  A progress guard keeps the deadline at or
+        above the wave's fastest finisher so every round commits someone.
+
+        Fault-injected dropouts never commit: a failed entry's event is the
+        server's timeout, the entry is excluded from the wave (and from
+        the carry set), and — when secure aggregation is on — its pairwise
+        masks are reconstructed from the surviving roster (the dropout-
+        recovery path)."""
         sim = self.sim
         history = []
         eval_b = sim.eval_batch()
@@ -373,20 +480,37 @@ class FedScheduler:
                                    busy=frozenset(p.client.cid
                                                   for p in carried))
             wave = self._dispatch(clients, r) if clients else []
-            if wave:
+            if not wave:
+                deadline = self.clock
+            elif self.deadline_quantile >= 1.0:
+                deadline = max(p.finish for p in wave)
+            elif len(self._lat_window) >= 8:
+                est = float(np.quantile(np.asarray(self._lat_window),
+                                        self.deadline_quantile))
+                # progress guard: however wrong the estimate, at least the
+                # wave's fastest device commits this round
+                deadline = max(self.clock + est,
+                               min(p.finish for p in wave))
+            else:
+                # cold start: bootstrap from this wave's oracle latencies
                 lat = sorted(p.finish - self.clock for p in wave)
                 q = min(len(lat) - 1,
                         max(0, int(np.ceil(self.deadline_quantile * len(lat)))
                             - 1))
                 deadline = self.clock + lat[q]
-            else:
-                deadline = self.clock
-            on_time = [p for p in wave if p.finish <= deadline]
-            stragglers = [p for p in wave if p.finish > deadline]
+            failed = [p for p in wave if p.failed]
+            live = [p for p in wave if not p.failed]
+            on_time = [p for p in live if p.finish <= deadline]
+            stragglers = [p for p in live if p.finish > deadline]
             arrivals = [p for p in carried if p.finish <= deadline]
             carried = [p for p in carried if p.finish > deadline]
             if self.straggler == "carry":
                 carried += stragglers
+            for p in on_time:
+                self._lat_window.append(p.finish - p.start)
+            for p in stragglers + failed:
+                # censored: the server only knows they hadn't finished
+                self._lat_window.append(max(deadline - p.start, 0.0))
             self.clock = deadline
             kept, stale = self._commit(on_time + arrivals)
             if (r + 1) % eval_every == 0 or r == rounds - 1:
@@ -397,7 +521,13 @@ class FedScheduler:
     def _run_async(self, commits, eval_every, verbose):
         """FedBuff-style buffered async: ``concurrency`` clients in flight,
         completion events popped off the heap, a commit (and replacement
-        dispatch wave) every ``buffer_size`` arrivals."""
+        dispatch wave) every ``buffer_size`` arrivals.
+
+        A fault-injected dropout surfaces as a *timeout event* on the same
+        heap: when it fires, the update is discarded (it never arrived) and
+        the server immediately dispatches a replacement client — the
+        re-dispatch rides the identical bucketed path (padded to
+        ``bucket_pad``), so recovery costs no recompilation."""
         history = []
         eval_b = self.sim.eval_batch()
         heap: List[_Pending] = []
@@ -409,6 +539,15 @@ class FedScheduler:
             if heap:
                 p = heapq.heappop(heap)
                 self.clock = p.finish
+                if p.failed:
+                    # timeout event: the client died mid-round — re-dispatch
+                    # a replacement on the same heap and keep draining
+                    busy = frozenset(q.client.cid for q in heap)
+                    for q in self._dispatch(self._sample(1, done, busy),
+                                            done):
+                        heapq.heappush(heap, q)
+                        self.redispatches += 1
+                    continue
                 buffered.append(p)
             if len(buffered) >= self.buffer_size or not heap:
                 if not buffered:

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 from typing import Optional
 
 import jax
@@ -437,6 +438,72 @@ def cohort_fedavg(trainable0, deltas, weights, masks):
         trainable0, deltas)
 
 
+def cohort_norms(deltas):
+    """Per-client global L2 norm over a stacked ``(C, ...)`` update tree:
+    returns ``(C,)`` — the quantity DP clipping and the norm-clip robust
+    aggregator bound."""
+    sq = [jnp.sum(jnp.square(d.astype(jnp.float32)).reshape(d.shape[0], -1),
+                  axis=1)
+          for d in jax.tree_util.tree_leaves(deltas)]
+    return jnp.sqrt(sum(sq))
+
+
+def scale_cohort(deltas, scales):
+    """Multiply each client's update by its ``(C,)`` scale factor."""
+    return tree_map(
+        lambda d: (d.astype(jnp.float32)
+                   * scales.reshape((-1,) + (1,) * (d.ndim - 1))), deltas)
+
+
+# ======================================================= aggregator registry
+AGGREGATORS = {}
+
+
+def register_aggregator(name):
+    """Register a cohort-aggregation *factory* under ``name``:
+    ``factory(**opts) -> agg(trainable0, deltas, weights, masks)``.  The
+    default ``"fedavg"`` is the fused sample-weighted mean; the robust
+    variants (trimmed mean, coordinate median, norm-clip — byzantine
+    tolerance, see ``repro.fed.faults``) register alongside it.  A strategy
+    selects one via its ``aggregator`` / ``aggregator_opts`` attributes
+    (``run_experiment(aggregator=...)``, ``launch.train --aggregator``)."""
+    def deco(fn):
+        AGGREGATORS[name] = fn
+        return fn
+    return deco
+
+
+def make_aggregator(name, **opts):
+    from . import faults  # noqa: F401  (registers the robust aggregators)
+    if name not in AGGREGATORS:
+        raise KeyError(f"unknown aggregator {name!r}; available: "
+                       f"{', '.join(sorted(AGGREGATORS))}")
+    return AGGREGATORS[name](**opts)
+
+
+@register_aggregator("fedavg")
+def _fedavg_factory():
+    return cohort_fedavg
+
+
+def as_rng_aggregate(agg):
+    """Normalize an aggregation to the engine's 5-arg calling convention
+    ``agg(trainable0, deltas, weights, masks, rng)``.  Legacy 4-arg
+    aggregations (``cohort_fedavg``, strategy ``cohort_aggregate``
+    overrides) ignore the rng; DP-wrapped aggregations consume it for the
+    per-round noise draw."""
+    if agg is None:
+        agg = cohort_fedavg
+    try:
+        n = len(inspect.signature(agg).parameters)
+    except (TypeError, ValueError):
+        n = 4
+    if n >= 5:
+        return agg
+    return lambda t0, deltas, weights, masks, rng: agg(t0, deltas, weights,
+                                                       masks)
+
+
 # ==================================================================== engine
 class PlanEngine:
     """Shared jitted machinery: one ``local_step`` / ``cohort_step`` per
@@ -495,7 +562,8 @@ class PlanEngine:
     def cohort_step(self, plan: TrainablePlan, aggregate=None):
         """One jitted round for a whole plan-group:
 
-            step(trainable0, params, frozen_adapters, batches, masks, weights)
+            step(trainable0, params, frozen_adapters, batches, masks, weights,
+                 rng=None)
                 -> (new_trainable, mean_loss)
 
         ``batches`` leaves are ``(C, local_steps, b, ...)`` and mask leaves
@@ -505,9 +573,11 @@ class PlanEngine:
         no per-client dispatch, no host-side aggregation.
 
         ``aggregate(trainable0, deltas, weights, masks)`` overrides the
-        in-graph FedAvg (e.g. FedRA's holder-normalized mean).  The compiled
-        step is cached per plan: a strategy must pass the same aggregation
-        semantics for a given plan across rounds.
+        in-graph FedAvg (e.g. FedRA's holder-normalized mean); a 5-arg
+        aggregation additionally receives ``rng`` — the per-round key the
+        DP path draws its Gaussian noise from (``repro.fed.privacy``).  The
+        compiled step is cached per plan: a strategy must pass the same
+        aggregation semantics for a given plan across rounds.
 
         **Donation** — the round-start trainable is split into a donated and
         a referenced argument so every leaf that cannot alias another
@@ -532,7 +602,7 @@ class PlanEngine:
         if plan not in self._cohort:
             client_update = make_client_update(self.cfg, self.chain, plan,
                                                self.opt)
-            agg = aggregate if aggregate is not None else cohort_fedavg
+            agg = as_rng_aggregate(aggregate)
             whole = _is_whole_client(plan)
             full_stack = plan.adapters is not None and plan.adapters.is_full
             needs_frozen = (plan.adapters is None or not full_stack
@@ -545,17 +615,17 @@ class PlanEngine:
 
             @functools.partial(jax.jit, donate_argnums=(0,))
             def step(tr_don, tr_ref, params, frozen_adapters, batches, masks,
-                     weights):
+                     weights, rng):
                 trainable0 = {**tr_don, **tr_ref}
                 updates, losses = jax.vmap(
                     client_update,
                     in_axes=(None, None, None, 0, 0))(
                         trainable0, params, frozen_adapters, batches, masks)
-                new = agg(trainable0, updates, weights, masks)
+                new = agg(trainable0, updates, weights, masks, rng)
                 return new, jnp.mean(losses)
 
             def call(trainable0, params, frozen_adapters, batches, masks,
-                     weights):
+                     weights, rng=None):
                 if whole:   # round-start state survives: nothing to donate
                     tr_don, tr_ref = {}, trainable0
                 else:
@@ -565,8 +635,13 @@ class PlanEngine:
                               if k in trainable0}
                 if not needs_frozen:
                     frozen_adapters = {}
+                if rng is None:
+                    # dead arg for rng-less aggregations (DCE'd by XLA);
+                    # keeping it traced means a DP aggregation swaps in
+                    # with no signature change and no recompile per round
+                    rng = jax.random.PRNGKey(0)
                 return step(tr_don, tr_ref, params, frozen_adapters, batches,
-                            masks, weights)
+                            masks, weights, rng)
 
             self._cohort[plan] = call
         return self._cohort[plan]
@@ -656,6 +731,16 @@ class PlanEngine:
 class Strategy:
     name = "base"
     memory_method = "full_adapters"
+    # --- privacy & robustness knobs (attached post-construction: subclass
+    # --- __init__ signatures are bespoke, so `privacy.enable_dp` /
+    # --- `privacy.enable_secure_agg` set instance attributes instead of
+    # --- threading constructor kwargs through every strategy)
+    dp = None                 # privacy.DPConfig — clip + noise in-graph
+    secure = None             # privacy.SecureAggConfig — pairwise masking
+    aggregator = "fedavg"     # AGGREGATORS entry when cohort_aggregate is None
+    aggregator_opts = None    # kwargs for the aggregator factory
+    secure_compatible = True  # False: aggregation is not a linear weighted
+                              # mean of uploads (FedRA holder normalization)
 
     def __init__(self, cfg: ModelConfig, chain: ChainConfig, key):
         self.cfg, self.chain = cfg, chain
@@ -748,6 +833,37 @@ class Strategy:
         ``sequential_round``."""
         return None
 
+    def resolve_aggregate(self, plan: TrainablePlan):
+        """The aggregation the engine (and the event-driven runtime's commit)
+        actually runs for ``plan``, normalized to the 5-arg convention
+        ``agg(trainable0, deltas, weights, masks, rng)``.  Resolution order:
+        the strategy's bespoke ``cohort_aggregate``, else the registered
+        ``aggregator`` (robust variants from ``repro.fed.faults``), with the
+        DP clip+noise wrapper (``repro.fed.privacy``) applied outermost when
+        DP is enabled.  Stable per plan — the engine caches the compiled
+        step, so DP / aggregator selection must happen before the first
+        round (the enable helpers enforce this)."""
+        agg = self.cohort_aggregate(plan)
+        if agg is None and self.aggregator != "fedavg":
+            agg = make_aggregator(self.aggregator,
+                                  **dict(self.aggregator_opts or {}))
+        agg = as_rng_aggregate(agg)
+        if self.dp is not None:
+            from .privacy import make_private_aggregate
+            agg = make_private_aggregate(self.dp, agg)
+        return agg
+
+    def apply_update(self, plan: TrainablePlan, trainable0, mean_update):
+        """Server-side finalization of an aggregated *mean upload* — the
+        secure-aggregation path's commit step (the server only ever holds
+        the masked sum, so the usual fused ``aggregate`` never runs).
+        Delta-style grad programs commit ``trainable0 + mean``; strategies
+        whose clients upload something else (FedKSeed's seed coefficients)
+        override."""
+        return tree_map(lambda t0, m: (t0 + m.astype(jnp.float32)
+                                       ).astype(t0.dtype),
+                        trainable0, mean_update)
+
     def round(self, sim, clients, round_idx):
         """One federated round on the batched cohort path: group sampled
         clients by plan, run one jitted ``cohort_step`` per group, commit.
@@ -764,7 +880,9 @@ class Strategy:
         groups = {}
         for c in clients:
             groups.setdefault(self.plan(c, round_idx), []).append(c)
-        for plan, cohort in groups.items():
+        dp_rng = (jax.random.fold_in(self._dp_key, round_idx)
+                  if self.dp is not None else None)
+        for gi, (plan, cohort) in enumerate(groups.items()):
             # each group reads the *current* state: a donated trainable from
             # an earlier group's step must never be re-read, so later groups
             # see earlier commits (rounds have one group in practice)
@@ -773,13 +891,30 @@ class Strategy:
                                  for c in cohort])
             weights = jnp.asarray([c.n_samples for c in cohort], jnp.float32)
             tr0 = self.init_trainable(plan)
-            step = self.engine.cohort_step(plan, self.cohort_aggregate(plan))
-            new, _loss = step(tr0, self._params, self.adapters, batches, masks,
-                              weights)
-            # device scalar, never blocked on here — convergence-driven
-            # schedulers (chainfed plateau advance) read it lazily
-            self._last_round_loss = _loss
+            rng = (jax.random.fold_in(dp_rng, gi)
+                   if dp_rng is not None else None)
+            if self.secure is not None:
+                # masked per-client uploads: the aggregation cannot fuse —
+                # the server must see (and sum) each client's masked update
+                from .privacy import secure_round
+                updates, losses = self.engine.cohort_updates(plan)(
+                    tr0, self._params, self.adapters, batches, masks)
+                new = secure_round(self, plan, tr0, updates, weights,
+                                   [c.cid for c in cohort], rng=rng)
+                self._last_round_loss = jnp.mean(losses)
+            else:
+                step = self.engine.cohort_step(plan,
+                                               self.resolve_aggregate(plan))
+                new, _loss = step(tr0, self._params, self.adapters, batches,
+                                  masks, weights, rng)
+                # device scalar, never blocked on here — convergence-driven
+                # schedulers (chainfed plateau advance) read it lazily
+                self._last_round_loss = _loss
             self.commit_trainable(plan, new)
+        if self.dp is not None:
+            self.dp_accountant.step(
+                self.dp.noise_multiplier,
+                q=len(clients) / max(1, len(sim.clients)))
 
     def sequential_round(self, sim, clients, round_idx):
         """Legacy per-client dispatch loop: one jitted ``local_step`` call per
@@ -835,5 +970,23 @@ class Strategy:
     def memory_kwargs(self, round_idx):
         return {}
 
-    def comm_bytes_per_round(self) -> int:
+    def base_comm_bytes(self) -> int:
+        """Payload bytes a client uploads per round (adapter deltas, seed
+        coefficients, ...).  Strategies with bespoke payloads override
+        *this*, not ``comm_bytes_per_round``, so the privacy overhead
+        composes uniformly."""
         return comm_bytes_per_round(self.cfg, self.memory_method)
+
+    def privacy_comm_bytes(self) -> int:
+        """Per-client per-round overhead of the enabled privacy machinery:
+        secure-agg pairwise key agreement + recovery shares, DP metadata.
+        Zero when neither is enabled."""
+        if self.dp is None and self.secure is None:
+            return 0
+        from ..core.memory import privacy_comm_overhead
+        cohort = self.secure.cohort if self.secure is not None else 0
+        return privacy_comm_overhead(cohort, secure=self.secure is not None,
+                                     dp=self.dp is not None)
+
+    def comm_bytes_per_round(self) -> int:
+        return self.base_comm_bytes() + self.privacy_comm_bytes()

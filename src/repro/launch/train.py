@@ -49,6 +49,30 @@ def main(argv=None):
     ap.add_argument("--straggler", default="drop", choices=["drop", "carry"],
                     help="semisync: drop stragglers or commit them late "
                          "with a staleness-discounted weight")
+    ap.add_argument("--dp-clip", type=float, default=None,
+                    help="enable client-level DP: per-client L2 clip bound")
+    ap.add_argument("--dp-noise", type=float, default=1.0,
+                    help="DP noise multiplier σ (with --dp-clip)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="DP target δ for the ε report")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-masked secure aggregation (sync/semisync)")
+    ap.add_argument("--aggregator", default=None,
+                    choices=["fedavg", "trimmed_mean", "median", "norm_clip"],
+                    help="robust server aggregation (default: strategy's own)")
+    ap.add_argument("--trim-frac", type=float, default=0.2,
+                    help="per-side trim fraction for --aggregator "
+                         "trimmed_mean")
+    ap.add_argument("--dropout-prob", type=float, default=0.0,
+                    help="fault injection: per-dispatch client dropout "
+                         "probability (semisync/async)")
+    ap.add_argument("--byzantine-frac", type=float, default=0.0,
+                    help="fault injection: fraction of clients sending "
+                         "corrupted updates")
+    ap.add_argument("--byzantine-scale", type=float, default=-10.0,
+                    help="corruption factor (negative = sign flip)")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="fault injection: per-dispatch slowdown probability")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--clients-per-round", type=int, default=4)
@@ -90,19 +114,36 @@ def main(argv=None):
     elif args.mode == "semisync":
         sched = {"deadline_quantile": args.deadline_quantile,
                  "straggler": args.straggler}
+    dp = None
+    if args.dp_clip is not None:
+        dp = {"clip": args.dp_clip, "noise_multiplier": args.dp_noise,
+              "delta": args.dp_delta, "seed": args.seed}
+    faults = None
+    if args.dropout_prob or args.byzantine_frac or args.straggler_prob:
+        faults = {"dropout_prob": args.dropout_prob,
+                  "byzantine_frac": args.byzantine_frac,
+                  "byzantine_scale": args.byzantine_scale,
+                  "straggler_prob": args.straggler_prob, "seed": args.seed}
+    agg_opts = ({"trim": args.trim_frac}
+                if args.aggregator == "trimmed_mean" else None)
     t0 = time.time()
     result = run_experiment(
         args.method, cfg=cfg, chain=chain, fed=fed, task=args.task,
         dataset=args.dataset, batch_size=args.batch_size, rounds=args.rounds,
         eval_every=args.eval_every, seed=args.seed,
         memory_constrained=not args.unconstrained_memory, verbose=True,
-        mode=args.mode, scheduler_opts=sched or None)
+        mode=args.mode, scheduler_opts=sched or None,
+        dp=dp, secure_agg=args.secure_agg or None, aggregator=args.aggregator,
+        aggregator_opts=agg_opts, faults=faults)
     strat, hist = result.strategy, result.history
     dt = time.time() - t0
     final = hist[-1] if hist else None
     print(f"== done in {dt:.1f}s  final acc="
           f"{final.acc if final else float('nan'):.4f}  virtual wallclock="
           f"{final.wallclock if final else 0.0:.1f}s")
+    if dp and final is not None:
+        print(f"== privacy spend: ε={final.dp_epsilon:.2f} at "
+              f"δ={args.dp_delta:g}")
 
     if args.save and hasattr(strat, "params"):
         from ..ckpt.io import save_train_state

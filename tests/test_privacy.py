@@ -1,0 +1,210 @@
+"""Privacy subsystem (ISSUE 6): the RDP accountant against the closed-form
+Gaussian bound, in-graph DP clipping/noise semantics, bit-exact mask
+cancellation with and without dropouts, secure-agg ≡ plain FedAvg on the
+sync path, dropout recovery on the event heap, seed-reproducibility of DP
+runs, and the comm-model overhead of both mechanisms."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.memory import privacy_comm_overhead
+from repro.fed.privacy import (DEFAULT_RDP_ORDERS, DPConfig, RDPAccountant,
+                               SecureAggConfig, SecureSession, clip_cohort,
+                               enable_dp, enable_secure_agg,
+                               make_private_aggregate, rdp_gaussian)
+from repro.fed.registry import make_strategy, run_experiment
+from repro.fed.strategies import (as_rng_aggregate, cohort_fedavg,
+                                  cohort_norms)
+from repro.models.config import ChainConfig, FedConfig
+
+CFG = get_config("bert_tiny").replace(n_layers=4, d_model=64, d_ff=128)
+CHAIN = ChainConfig(window=2, local_steps=1, lr=3e-3)
+KEY = jax.random.PRNGKey(0)
+
+
+def _experiment(**kw):
+    fed = FedConfig(n_clients=6, clients_per_round=3, seed=3)
+    return run_experiment(kw.pop("method", "full_adapters"), cfg=CFG,
+                          chain=CHAIN, fed=fed, batch_size=4,
+                          memory_constrained=False, eval_every=1, **kw)
+
+
+def _cohort(c=4, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(c, 5, 3)) * scale, jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(c, 7)) * scale, jnp.float32)}
+
+
+# ------------------------------------------------------------ RDP accountant
+def test_accountant_matches_closed_form_gaussian_bound():
+    """q = 1 (full cohort every commit): RDP(α) = T·α/(2σ²) exactly, so ε
+    must equal the hand-computed grid minimum of T·α/(2σ²) +
+    log(1/δ)/(α−1)."""
+    sigma, steps, delta = 1.3, 7, 1e-5
+    acc = RDPAccountant()
+    acc.step(sigma, q=1.0, steps=steps)
+    eps, order = acc.epsilon(delta)
+    orders = np.array(DEFAULT_RDP_ORDERS, np.float64)
+    expect = steps * orders / (2 * sigma ** 2) \
+        + math.log(1 / delta) / (orders - 1)
+    assert eps == pytest.approx(float(expect.min()), rel=1e-12)
+    assert order == DEFAULT_RDP_ORDERS[int(expect.argmin())]
+
+
+def test_accountant_subsampling_and_composition():
+    """Poisson subsampling only helps (RDP_q ≤ RDP_1 per order), ε grows
+    with composition, and an untouched accountant reports ε = 0."""
+    for a in (2, 5, 32):
+        assert rdp_gaussian(a, 1.2, 0.25) <= rdp_gaussian(a, 1.2, 1.0)
+        assert rdp_gaussian(a, 1.2, 0.0) == 0.0
+    assert rdp_gaussian(3, 0.0, 0.5) == float("inf")
+    acc = RDPAccountant()
+    assert acc.epsilon(1e-5)[0] == 0.0
+    seen = []
+    for _ in range(4):
+        acc.step(1.0, q=0.5)
+        seen.append(acc.epsilon(1e-5)[0])
+    assert all(b > a > 0 for a, b in zip(seen, seen[1:]))
+
+
+# ----------------------------------------------------------- DP aggregation
+def test_clip_cohort_bounds_global_norm():
+    deltas = _cohort(c=5, scale=3.0)
+    clipped = clip_cohort(deltas, 1.0)
+    assert float(cohort_norms(clipped).max()) <= 1.0 + 1e-5
+    # below-bound updates pass through unscaled
+    small = _cohort(c=5, scale=1e-3)
+    for k in small:
+        np.testing.assert_allclose(clip_cohort(small, 1.0)[k], small[k],
+                                   rtol=1e-6)
+
+
+def test_private_aggregate_sigma0_is_clipped_uniform_fedavg():
+    """With σ = 0 the DP wrapper is exactly clip → *uniform*-weight FedAvg —
+    sample-count weights must be ignored (they would make sensitivity
+    data-dependent)."""
+    deltas = _cohort(c=4, scale=2.0)
+    t0 = tree0 = {k: jnp.zeros(v.shape[1:], v.dtype) for k, v in
+                  deltas.items()}
+    skewed = jnp.asarray([10.0, 1.0, 1.0, 1.0], jnp.float32)
+    dp = DPConfig(clip=0.7, noise_multiplier=0.0)
+    agg = make_private_aggregate(dp, as_rng_aggregate(None))
+    got = agg(t0, deltas, skewed, None, jax.random.PRNGKey(1))
+    want = cohort_fedavg(tree0, clip_cohort(deltas, 0.7),
+                         jnp.ones_like(skewed), None)
+    for k in got:
+        np.testing.assert_allclose(got[k], want[k], atol=1e-6)
+
+
+def test_dp_run_reproducible_and_epsilon_monotone():
+    dp = {"clip": 0.5, "noise_multiplier": 1.1, "seed": 9}
+    a = _experiment(rounds=3, dp=dp)
+    b = _experiment(rounds=3, dp=dp)
+    assert [(m.loss, m.dp_epsilon) for m in a.history] == \
+           [(m.loss, m.dp_epsilon) for m in b.history]
+    eps = [m.dp_epsilon for m in a.history]
+    assert eps[0] > 0 and eps == sorted(eps)
+    # noise actually perturbs the trajectory vs the clean run
+    clean = _experiment(rounds=3)
+    assert a.history[-1].loss != clean.history[-1].loss
+
+
+def test_enable_dp_after_compile_refuses():
+    r = _experiment(rounds=1)
+    with pytest.raises(RuntimeError, match="enable_dp after"):
+        enable_dp(r.strategy, DPConfig())
+
+
+# -------------------------------------------------------- secure aggregation
+def _session(cids=(11, 3, 7, 5), seed=2):
+    return SecureSession(SecureAggConfig(seed=seed),
+                         jax.random.PRNGKey(seed), cids)
+
+
+def _toy_trees(sess):
+    return {c: {"w": jnp.asarray(np.random.default_rng(c).normal(size=(6, 2)),
+                                 jnp.float32),
+                "b": jnp.asarray(np.random.default_rng(c + 99).normal(size=3),
+                                 jnp.float32)}
+            for c in sess.cids}
+
+
+def test_masks_cancel_bitexact_full_roster():
+    sess = _session()
+    trees = _toy_trees(sess)
+    total = sess.unmask_sum([sess.mask_update(c, trees[c])
+                             for c in sess.cids], sess.cids)
+    for k in ("w", "b"):
+        want = sum(sess.quantize(trees[c])[k] for c in sess.cids)
+        assert jnp.all(total[k] == want), k       # int32, bit for bit
+        # masked uploads are NOT the plaintext
+        assert not jnp.all(sess.mask_update(sess.cids[0],
+                                            trees[sess.cids[0]])[k]
+                           == sess.quantize(trees[sess.cids[0]])[k])
+
+
+def test_masks_cancel_bitexact_with_dropped_client():
+    """Dropout recovery: survivors' sum minus the reconstructed masks of the
+    dropped member equals the survivors' plaintext sum bit-exactly."""
+    sess = _session()
+    trees = _toy_trees(sess)
+    dropped = sess.cids[1]
+    survivors = [c for c in sess.cids if c != dropped]
+    total = sess.unmask_sum([sess.mask_update(c, trees[c])
+                             for c in survivors], survivors)
+    for k in ("w", "b"):
+        want = sum(sess.quantize(trees[c])[k] for c in survivors)
+        assert jnp.all(total[k] == want), k
+
+
+def test_secure_sync_round_matches_plain_fedavg():
+    plain = _experiment(rounds=1)
+    masked = _experiment(rounds=1, secure_agg=True)
+    for k in plain.strategy.adapters:
+        np.testing.assert_allclose(np.asarray(masked.strategy.adapters[k]),
+                                   np.asarray(plain.strategy.adapters[k]),
+                                   atol=1e-4)
+    assert masked.history[-1].comm_bytes > plain.history[-1].comm_bytes
+
+
+def test_secure_semisync_dropout_recovers_and_commits():
+    r = _experiment(rounds=3, mode="semisync", secure_agg=True,
+                    scheduler_opts={"straggler": "drop"},
+                    faults={"dropout_prob": 0.3, "seed": 5})
+    assert len(r.history) == 3
+    assert all(np.isfinite(m.loss) for m in r.history)
+
+
+def test_secure_composes_with_dp():
+    dp = {"clip": 0.5, "noise_multiplier": 1.0, "seed": 4}
+    r = _experiment(rounds=2, dp=dp, secure_agg=True)
+    assert all(np.isfinite(m.loss) for m in r.history)
+    assert r.history[-1].dp_epsilon > 0
+
+
+def test_enable_secure_agg_rejects_incompatible():
+    fedra = make_strategy("fedra", CFG, CHAIN, KEY)
+    with pytest.raises(ValueError, match="not a linear"):
+        enable_secure_agg(fedra)
+    robust = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    robust.aggregator = "trimmed_mean"
+    with pytest.raises(ValueError, match="plaintext"):
+        enable_secure_agg(robust)
+
+
+# ------------------------------------------------------------- comm model
+def test_privacy_comm_overhead_accounting():
+    assert privacy_comm_overhead(4) == 0
+    assert privacy_comm_overhead(4, secure=True) == 3 * 3 * 32
+    assert privacy_comm_overhead(4, dp=True) == 16
+    assert privacy_comm_overhead(1, secure=True) == 0   # no pairs
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    base = strat.comm_bytes_per_round()
+    enable_secure_agg(strat, SecureAggConfig(cohort=3))
+    enable_dp(strat, DPConfig())
+    assert strat.comm_bytes_per_round() == \
+        base + privacy_comm_overhead(3, secure=True, dp=True)
