@@ -1,0 +1,90 @@
+"""Crash-resume CI smoke (ISSUE 7): real process-boundary resume equality.
+
+Three subprocess launches of ``repro.launch.train`` on one fixed workload
+(semisync chainfed + DP + 20% dropout injection):
+
+* **A** — uninterrupted reference run; saves final params + metrics JSON.
+* **B** — same run with ``--checkpoint-every 2 --halt-after 2``: writes the
+  durable run-state checkpoint, then "crashes" right after it.
+* **C** — fresh process, ``--resume`` from B's checkpoint, finishes the
+  remaining rounds; saves final params + metrics JSON.
+
+Gates:
+
+* C's saved parameter file is **byte-identical** to A's — same trees, same
+  dtypes, same bits (msgpack serialization is deterministic);
+* C's metrics JSON is **text-identical** to A's — every RoundMetrics field
+  including the DP ε spend;
+* C's ``== jit-cache:`` report shows every compiled cohort function holding
+  exactly one cache entry — restoring a checkpoint must not recompile.
+
+    PYTHONPATH=src python -m benchmarks.crash_resume_smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+BASE = ["--arch", "bert_tiny", "--smoke", "--unconstrained-memory",
+        "--rounds", "4", "--clients", "6", "--clients-per-round", "3",
+        "--batch-size", "4", "--local-steps", "1", "--eval-every", "2",
+        "--method", "chainfed", "--mode", "semisync",
+        "--dropout-prob", "0.2", "--dp-clip", "0.5", "--dp-noise", "0.6"]
+
+
+def launch(extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + BASE + extra,
+        cwd=REPO, env=env, capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    if proc.returncode != 0:
+        raise SystemExit(f"launcher failed ({proc.returncode}): {extra}")
+    return proc.stdout
+
+
+def main(argv=None):
+    argparse.ArgumentParser(description=__doc__).parse_args(argv)
+    with tempfile.TemporaryDirectory(prefix="crash_resume_") as td:
+        d = pathlib.Path(td)
+        ck = d / "run.msgpack"
+        print("# phase A: uninterrupted reference")
+        launch(["--save", str(d / "a.ckpt"),
+                "--metrics-out", str(d / "a.json")])
+        print("# phase B: checkpoint, then crash after round 2")
+        launch(["--checkpoint-every", "2", "--checkpoint-path", str(ck),
+                "--halt-after", "2"])
+        assert ck.exists(), "phase B wrote no checkpoint"
+        print("# phase C: fresh process resumes from the checkpoint")
+        out_c = launch(["--resume", str(ck),
+                        "--save", str(d / "c.ckpt"),
+                        "--metrics-out", str(d / "c.json")])
+
+        a, c = (d / "a.ckpt").read_bytes(), (d / "c.ckpt").read_bytes()
+        assert a == c, (
+            f"resumed params differ from the uninterrupted run "
+            f"({len(a)} vs {len(c)} bytes)")
+        ma = (d / "a.json").read_text()
+        mc = (d / "c.json").read_text()
+        assert ma == mc, ("resumed metrics differ from the uninterrupted "
+                          f"run:\n--- A\n{ma}\n--- C\n{mc}")
+        m = re.search(r"== jit-cache: fns=(\d+) sizes=\[([^\]]*)\]", out_c)
+        assert m, "resume run printed no jit-cache report"
+        sizes = [int(s) for s in m.group(2).split(",") if s.strip()]
+        assert int(m.group(1)) >= 1 and all(s == 1 for s in sizes), (
+            f"resume recompiled: cache sizes {sizes}")
+        print(f"# smoke OK: resume bit-identical ({len(a)} param bytes, "
+              f"metrics match, {len(sizes)} cohort fns each compiled once)")
+
+
+if __name__ == "__main__":
+    main()

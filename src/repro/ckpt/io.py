@@ -1,5 +1,20 @@
 """msgpack pytree checkpointing (host-local; restore re-shards under the
-current mesh via device_put with the ruleset's NamedShardings)."""
+current mesh via device_put with the ruleset's NamedShardings).
+
+Two layers live here:
+
+* the pytree save/load pair (``save_pytree``/``load_pytree``) used for model
+  artifacts — leaves only, structure supplied by the caller at load time;
+* a generic *state* serializer (``save_state``/``load_state``) for runtime
+  checkpoints (ISSUE 7): arbitrarily nested dicts/lists/tuples mixing array
+  leaves with host scalars, big integers (numpy PCG64 bit-generator state
+  carries 128-bit ints msgpack cannot encode) and non-string dict keys.  The
+  encoding is self-describing, so no template is needed on load.
+
+All writes are atomic: bytes go to ``<name>.tmp`` in the target directory and
+are renamed over the destination, so a crash mid-write never corrupts the
+previous checkpoint.
+"""
 from __future__ import annotations
 
 import pathlib
@@ -8,6 +23,20 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+_INT64_MIN, _INT64_MAX = -(2 ** 63), 2 ** 63 - 1
+
+
+def _atomic_write_bytes(path, data: bytes) -> pathlib.Path:
+    """Write-tmp-then-rename.  ``with_name`` (not ``with_suffix``) so dotted
+    stems round-trip and two files differing only in suffix cannot collide
+    on the same tmp path."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_bytes(data)
+    tmp.replace(path)                        # atomic swap
+    return path
 
 
 def _pack_leaf(x):
@@ -29,8 +58,6 @@ def _unpack_leaf(d):
 
 
 def save_pytree(path, tree, step: int = 0, meta: dict | None = None):
-    path = pathlib.Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     payload = {
         "step": step,
@@ -38,10 +65,7 @@ def save_pytree(path, tree, step: int = 0, meta: dict | None = None):
         "treedef": str(treedef),
         "leaves": [_pack_leaf(jax.device_get(l)) for l in leaves],
     }
-    tmp = path.with_suffix(".tmp")
-    tmp.write_bytes(msgpack.packb(payload, use_bin_type=True))
-    tmp.replace(path)                        # atomic swap
-    return path
+    return _atomic_write_bytes(path, msgpack.packb(payload, use_bin_type=True))
 
 
 def _restore(payload, like):
@@ -87,3 +111,70 @@ def load_train_state(path, params_like, adapters_like):
     tree, step = load_pytree(path, {"params": params_like,
                                     "adapters": adapters_like})
     return tree["params"], tree["adapters"], step
+
+
+# ---------------------------------------------------------------- run state
+# Self-describing encoding for runtime checkpoints.  Markers:
+#   __nd__  array leaf (shape/dtype/bytes; bf16 via uint16 view)
+#   __tu__  tuple (msgpack would silently return a list)
+#   __bi__  integer outside the int64 range, as a decimal string
+#   __kv__  dict with non-string (or marker-colliding) keys, as [k, v] pairs
+_MARKERS = frozenset({"__nd__", "__tu__", "__bi__", "__kv__"})
+
+
+def _enc(x):
+    if isinstance(x, (np.ndarray, jnp.ndarray)):
+        return _pack_leaf(jax.device_get(x))
+    if isinstance(x, (bool, np.bool_)):
+        return bool(x)
+    if isinstance(x, (int, np.integer)):
+        v = int(x)
+        if v < _INT64_MIN or v > _INT64_MAX:
+            return {"__bi__": str(v)}
+        return v
+    if isinstance(x, (float, np.floating)):
+        return float(x)
+    if x is None or isinstance(x, (str, bytes)):
+        return x
+    if isinstance(x, tuple):
+        return {"__tu__": [_enc(v) for v in x]}
+    if isinstance(x, list):
+        return [_enc(v) for v in x]
+    if isinstance(x, dict):
+        if all(isinstance(k, str) for k in x) and \
+                not (_MARKERS & set(x.keys())):
+            return {k: _enc(v) for k, v in x.items()}
+        return {"__kv__": [[_enc(k), _enc(v)] for k, v in x.items()]}
+    raise TypeError(f"save_state cannot encode {type(x).__name__}: {x!r}")
+
+
+def _dec(x):
+    if isinstance(x, dict):
+        if x.get("__nd__"):
+            return _unpack_leaf(x)
+        if "__tu__" in x:
+            return tuple(_dec(v) for v in x["__tu__"])
+        if "__bi__" in x:
+            return int(x["__bi__"])
+        if "__kv__" in x:
+            return {_dec(k): _dec(v) for k, v in x["__kv__"]}
+        return {k: _dec(v) for k, v in x.items()}
+    if isinstance(x, list):
+        return [_dec(v) for v in x]
+    return x
+
+
+def save_state(path, state) -> pathlib.Path:
+    """Serialize an arbitrary nested runtime state atomically.  Accepts
+    dicts/lists/tuples of array leaves (dtype-preserving, bf16 included),
+    scalars, strings, ``None`` and arbitrarily large ints (PCG64 state)."""
+    return _atomic_write_bytes(
+        path, msgpack.packb(_enc(state), use_bin_type=True))
+
+
+def load_state(path):
+    """Inverse of :func:`save_state`; array leaves come back as jnp arrays
+    with their saved dtypes, tuples as tuples, big ints as ints."""
+    raw = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=False,
+                          strict_map_key=False)
+    return _dec(raw)

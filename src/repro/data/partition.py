@@ -108,6 +108,117 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float = 1.0,
     return out
 
 
+# ======================================================= availability traces
+@dataclasses.dataclass(frozen=True)
+class AvailabilityTrace:
+    """Replayable per-client availability (ISSUE 7): each client owns a
+    sorted tuple of ``(start, end)`` online windows over one period of
+    virtual time, replayed cyclically.  This replaces Bernoulli dropout
+    coin-flips with the diurnal / flaky connectivity structure real device
+    fleets exhibit — the same trace replays bit-identically across runs and
+    across checkpoint/resume (it is *config*, not mutable state).
+
+    Windows live in ``[0, period)``; a generator that draws a window
+    spanning the wrap splits it in two.  A client with no windows is never
+    available."""
+    windows: Tuple[Tuple[Tuple[float, float], ...], ...]  # per client
+    period: float
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.windows)
+
+    def available(self, cid: int, t: float) -> bool:
+        lt = t % self.period
+        return any(s <= lt < e for s, e in self.windows[cid])
+
+    def online_until(self, cid: int, t: float) -> float:
+        """Absolute time the window containing ``t`` closes (== ``t`` when
+        the client is offline at ``t``)."""
+        lt = t % self.period
+        for s, e in self.windows[cid]:
+            if s <= lt < e:
+                return t + (e - lt)
+        return t
+
+    def offline_cut(self, cid: int, t0: float, t1: float):
+        """First moment in ``[t0, t1)`` the client is offline, or ``None``
+        if its connectivity covers the whole interval.  Windows are treated
+        as independent sessions: a client whose window closes mid-round has
+        dropped that round even if a later window reopens before ``t1``."""
+        if not self.available(cid, t0):
+            return t0
+        end = self.online_until(cid, t0)
+        # merge back-to-back windows (including across the cyclic wrap)
+        while end < t1 and self.available(cid, end):
+            nxt = self.online_until(cid, end)
+            if nxt <= end:
+                break
+            end = nxt
+        return None if end >= t1 else end
+
+
+def _split_wrap(start: float, end: float, period: float):
+    """Clamp one online interval into ``[0, period)`` windows, splitting at
+    the cyclic wrap."""
+    if end - start >= period:
+        return [(0.0, period)]
+    dur = end - start
+    start %= period
+    end = start + dur
+    if end <= period:
+        return [(start, end)] if end > start else []
+    return [(start, period), (0.0, end - period)]
+
+
+def diurnal_traces(n_clients: int, period: float = 1000.0,
+                   uptime: float = 0.45, jitter: float = 0.25,
+                   seed: int = 0) -> AvailabilityTrace:
+    """One contiguous online window per client per period — phones that
+    charge overnight.  Phases are uniform over the period, duty cycles are
+    ``uptime`` jittered ±``jitter`` (relative)."""
+    rng = np.random.default_rng((seed, 0xD1))
+    wins = []
+    for _ in range(n_clients):
+        duty = float(np.clip(uptime * (1.0 + jitter * rng.uniform(-1, 1)),
+                             0.02, 1.0))
+        phase = float(rng.uniform(0.0, period))
+        w = _split_wrap(phase, phase + duty * period, period)
+        wins.append(tuple(sorted(w)))
+    return AvailabilityTrace(windows=tuple(wins), period=float(period))
+
+
+def flaky_traces(n_clients: int, period: float = 1000.0,
+                 mean_up: float = 120.0, mean_down: float = 60.0,
+                 seed: int = 0) -> AvailabilityTrace:
+    """Alternating exponential up/down sessions over one period (replayed
+    cyclically) — cellular links that flap."""
+    rng = np.random.default_rng((seed, 0xF7))
+    wins = []
+    for _ in range(n_clients):
+        t = float(rng.exponential(mean_down)) if rng.random() < 0.5 else 0.0
+        w = []
+        while t < period:
+            up = float(rng.exponential(mean_up))
+            w.extend(_split_wrap(t, min(t + up, period), period))
+            t += up + float(rng.exponential(mean_down))
+        wins.append(tuple(sorted((s, e) for s, e in w if e > s)))
+    return AvailabilityTrace(windows=tuple(wins), period=float(period))
+
+
+TRACE_KINDS = {"diurnal": diurnal_traces, "flaky": flaky_traces}
+
+
+def make_trace(kind: str, n_clients: int, **kw) -> AvailabilityTrace:
+    """Build a named synthetic trace (``diurnal`` / ``flaky``)."""
+    try:
+        fn = TRACE_KINDS[kind]
+    except KeyError:
+        raise KeyError(f"unknown trace kind {kind!r}; "
+                       f"have {sorted(TRACE_KINDS)}") from None
+    return fn(n_clients, **kw)
+
+
 class ClientSampler:
     """Iterates minibatches from a client's shard, reshuffling per epoch."""
 

@@ -67,6 +67,12 @@ class C2A(Strategy):
         self.hyper = new["hyper"]
         super().commit_trainable(plan, new)
 
+    def extra_state(self):
+        return {"hyper": self.hyper}
+
+    def load_extra_state(self, state):
+        self.hyper = state["hyper"]
+
     def _client_hist(self, sim, client):
         lab = (sim.labels[client.sampler.shard] if len(client.sampler.shard)
                else sim.labels[:1])

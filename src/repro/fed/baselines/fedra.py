@@ -43,6 +43,14 @@ class FedRA(Strategy):
     def plan_masks(self, sim, client, round_idx):
         return {"layer_mask": self.client_mask(client, round_idx)}
 
+    def extra_state(self):
+        # the per-round layer-mask stream must resume where it stopped
+        # (PCG64 state carries 128-bit ints — save_state encodes them)
+        return {"rng": self._rng.bit_generator.state}
+
+    def load_extra_state(self, state):
+        self._rng.bit_generator.state = state["rng"]
+
     def cohort_aggregate(self, plan):
         """The holder-normalized aggregation below, traced into the cohort
         step: stacked deltas (C, L, ...) and stacked layer masks (C, L)

@@ -150,6 +150,30 @@ class ChainFed(Strategy):
         self._stage_best = float("inf")
         self._stage_bad = 0
 
+    # ---- durable state ---------------------------------------------------
+    def extra_state(self) -> dict:
+        """The stage machine: FOAT's boundary (the schedule re-derives from
+        it), commit counters, and the plateau tracker — everything the next
+        ``plan()`` / ``_note_commit()`` reads."""
+        return {"l_start": int(self.l_start),
+                "foat_done": bool(self._foat_done),
+                "commits": int(self._commits),
+                "stage": int(self._stage),
+                "stage_commits": int(self._stage_commits),
+                "stage_best": float(self._stage_best),
+                "stage_bad": int(self._stage_bad)}
+
+    def load_extra_state(self, state: dict) -> None:
+        self.l_start = int(state["l_start"])
+        self.schedule = make_schedule(self.cfg, self.l_start,
+                                      self.chain.window)
+        self._foat_done = bool(state["foat_done"])
+        self._commits = int(state["commits"])
+        self._stage = int(state["stage"])
+        self._stage_commits = int(state["stage_commits"])
+        self._stage_best = float(state["stage_best"])
+        self._stage_bad = int(state["stage_bad"])
+
     def round(self, sim, clients, round_idx):
         self.maybe_setup_foat(sim)
         super().round(sim, clients, round_idx)

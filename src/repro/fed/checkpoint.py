@@ -1,0 +1,252 @@
+"""Durable run state for the event-driven federation runtime (ISSUE 7).
+
+A checkpoint is everything a *freshly constructed, identically configured*
+``FedScheduler`` needs to continue a run **bit-identically** to the
+uninterrupted one:
+
+* scheduler loop state — virtual clock, model version, dispatch counter,
+  fault/backoff tallies, the adaptive-deadline latency window, and where
+  the loop is (``_round`` for sync/semisync, ``_done`` for async);
+* the in-flight entries a crash would otherwise lose — the async event
+  heap, the partial FedBuff buffer and the semisync carry set, each
+  ``_Pending`` row pointing into a **deduplicated** table of stacked
+  dispatch buckets (entries sharing a bucket share one decoded tree on
+  restore, which preserves the ``is``-identity fast path in
+  ``_stack_updates``) and of ``TrainablePlan``s (restored plans are
+  hash-equal to freshly built ones, so no jit cache entry is ever added
+  by a resume);
+* ``Strategy.state_dict`` — trainable leaves, stage machine, DP accountant
+  and adaptive clip;
+* every host RNG the run consumes — the sim's sampling generator and each
+  client's minibatch sampler (PCG64 state round-trips through
+  ``ckpt.io.save_state``'s big-int encoding).
+
+What is deliberately **not** here: static config (arch/chain/fed,
+DP/secure/fault settings, availability traces) — the caller rebuilds those
+identically and ``load_scheduler_state`` validates the load-bearing ones
+via the ``meta`` block; jit caches (recompiled once per process — restoring
+never adds *extra* entries); per-client round-time caches (recomputed
+deterministically); and secure-aggregation sessions — checkpoints fall on
+commit boundaries where no masking session is open, and ``save`` refuses
+an in-flight session outright.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from ..core.adapters import ActiveAdapters, AdapterSegment
+from ..ckpt.io import load_state, save_state
+from .engine import RoundMetrics
+from .runtime import _Pending
+from .strategies import TrainablePlan
+
+
+# ------------------------------------------------------------------- plans
+def plan_state(plan: TrainablePlan) -> dict:
+    """Field-wise encoding of a (hashable) plan.  ``grad_cfg`` keeps its
+    nested-tuple form (``save_state`` preserves tuples), so the restored
+    plan hashes — and jit-cache-keys — identically to a fresh one."""
+    ad = plan.adapters
+    return {
+        "adapters": None if ad is None else {
+            "n_layers": int(ad.n_layers),
+            "segments": [[s.name, int(s.start), int(s.stop), s.role]
+                         for s in ad.segments]},
+        "train_head": plan.train_head,
+        "train_embedding": plan.train_embedding,
+        "layer_masked": plan.layer_masked,
+        "rank_masked": plan.rank_masked,
+        "loss": plan.loss,
+        "lam": plan.lam,
+        "remat": plan.remat,
+        "grad": plan.grad,
+        "grad_cfg": plan.grad_cfg,
+        "transform": plan.transform,
+    }
+
+
+def plan_from_state(d: dict) -> TrainablePlan:
+    ad = d["adapters"]
+    adapters = None if ad is None else ActiveAdapters(
+        ad["n_layers"],
+        tuple(AdapterSegment(s[0], s[1], s[2], s[3])
+              for s in ad["segments"]))
+    return TrainablePlan(
+        adapters=adapters, train_head=d["train_head"],
+        train_embedding=d["train_embedding"],
+        layer_masked=d["layer_masked"], rank_masked=d["rank_masked"],
+        loss=d["loss"], lam=d["lam"], remat=d["remat"], grad=d["grad"],
+        grad_cfg=d["grad_cfg"], transform=d["transform"])
+
+
+# ----------------------------------------------------------- pending rows
+def _pending_state(e: _Pending, plan_ix, bucket_ix) -> dict:
+    if e.session is not None:
+        raise ValueError(
+            "in-flight secure-aggregation masking sessions are not "
+            "checkpointable; checkpoints fall on commit boundaries where "
+            "no session is open")
+    return {"finish": float(e.finish),
+            "cid": None if e.client is None else int(e.client.cid),
+            "plan": plan_ix, "bucket": bucket_ix, "bi": int(e.bi),
+            "masks": e.masks, "weight": float(e.weight),
+            "version": int(e.version), "seq": int(e.seq), "loss": e.loss,
+            "start": float(e.start), "failed": bool(e.failed),
+            "retry": int(e.retry)}
+
+
+def _pending_from_state(d: dict, plans, buckets, clients) -> _Pending:
+    return _Pending(
+        finish=d["finish"],
+        client=None if d["cid"] is None else clients[d["cid"]],
+        plan=None if d["plan"] is None else plans[d["plan"]],
+        bucket=None if d["bucket"] is None else buckets[d["bucket"]],
+        bi=d["bi"], masks=d["masks"], weight=d["weight"],
+        version=d["version"], seq=d["seq"], loss=d["loss"],
+        start=d["start"], failed=d["failed"], retry=d["retry"])
+
+
+# -------------------------------------------------------------------- sim
+def _sim_state(sim) -> dict:
+    """The testbed's mutable pieces: the server-side sampling generator and
+    each client's minibatch sampler (generator + epoch permutation +
+    cursor).  Shards, budgets and profiles are derived deterministically at
+    construction and never mutate."""
+    return {"rng": sim.rng.bit_generator.state,
+            "samplers": [
+                {"rng": c.sampler.rng.bit_generator.state,
+                 "order": np.asarray(c.sampler._order),
+                 "pos": int(c.sampler._pos)}
+                for c in sim.clients]}
+
+
+def _load_sim_state(sim, s: dict) -> None:
+    sim.rng.bit_generator.state = s["rng"]
+    if len(s["samplers"]) != len(sim.clients):
+        raise ValueError(
+            f"checkpoint has {len(s['samplers'])} client samplers but the "
+            f"sim has {len(sim.clients)} clients — config mismatch")
+    for c, cs in zip(sim.clients, s["samplers"]):
+        c.sampler.rng.bit_generator.state = cs["rng"]
+        c.sampler._order = np.asarray(cs["order"])
+        c.sampler._pos = int(cs["pos"])
+
+
+# -------------------------------------------------------------- scheduler
+def scheduler_state(sched) -> dict:
+    plans, plan_ix = [], {}
+    buckets, bucket_ix = [], {}
+
+    def pref(p):
+        if p is None:
+            return None
+        if p not in plan_ix:
+            plan_ix[p] = len(plans)
+            plans.append(p)
+        return plan_ix[p]
+
+    def bref(b):
+        if b is None:
+            return None
+        k = id(b)
+        if k not in bucket_ix:
+            bucket_ix[k] = len(buckets)
+            buckets.append(b)
+        return bucket_ix[k]
+
+    def rows(es):
+        return [_pending_state(e, pref(e.plan), bref(e.bucket)) for e in es]
+
+    # reference the tables *before* emitting them: rows() populates both
+    heap = rows(sched._heap)
+    buffered = rows(sched._buffered)
+    carried = rows(sched._carried)
+    return {
+        "meta": {"mode": sched.mode,
+                 "strategy": sched.strategy.name,
+                 "n_clients": int(sched.sim.fed.n_clients),
+                 "clients_per_round": int(sched.sim.fed.clients_per_round),
+                 "seed": int(sched.sim.fed.seed),
+                 "bucket_pad": int(sched.bucket_pad),
+                 "concurrency": int(sched.concurrency),
+                 "buffer_size": int(sched.buffer_size)},
+        "sched": {"clock": float(sched.clock),
+                  "version": int(sched.version),
+                  "seq": int(sched._seq),
+                  "committed_updates": int(sched.committed_updates),
+                  "fault_dropouts": int(sched.fault_dropouts),
+                  "trace_dropouts": int(sched.trace_dropouts),
+                  "redispatches": int(sched.redispatches),
+                  "backoff_retries": int(sched.backoff_retries),
+                  "round": int(sched._round),
+                  "done": int(sched._done),
+                  "started": bool(sched._started),
+                  "async_seeded": bool(sched._async_seeded),
+                  "lat_window": [float(x) for x in sched._lat_window]},
+        "plans": [plan_state(p) for p in plans],
+        "buckets": buckets,
+        "heap": heap, "buffered": buffered, "carried": carried,
+        "history": [dataclasses.asdict(m) for m in sched._history],
+        "strategy": sched.strategy.state_dict(),
+        "sim": _sim_state(sched.sim),
+    }
+
+
+def _check(meta, key, got):
+    if meta[key] != got:
+        raise ValueError(
+            f"checkpoint/scheduler mismatch on {key!r}: checkpoint has "
+            f"{meta[key]!r}, this run is configured with {got!r}")
+
+
+def load_scheduler_state(sched, s: dict) -> None:
+    meta = s["meta"]
+    for key, got in (("mode", sched.mode),
+                     ("strategy", sched.strategy.name),
+                     ("n_clients", int(sched.sim.fed.n_clients)),
+                     ("clients_per_round",
+                      int(sched.sim.fed.clients_per_round)),
+                     ("seed", int(sched.sim.fed.seed))):
+        _check(meta, key, got)
+    plans = [plan_from_state(d) for d in s["plans"]]
+    buckets = s["buckets"]
+    clients = {c.cid: c for c in sched.sim.clients}
+    sc = s["sched"]
+    sched.clock = float(sc["clock"])
+    sched.version = int(sc["version"])
+    sched._seq = int(sc["seq"])
+    sched.committed_updates = int(sc["committed_updates"])
+    sched.fault_dropouts = int(sc["fault_dropouts"])
+    sched.trace_dropouts = int(sc["trace_dropouts"])
+    sched.redispatches = int(sc["redispatches"])
+    sched.backoff_retries = int(sc["backoff_retries"])
+    sched._round = int(sc["round"])
+    sched._done = int(sc["done"])
+    sched._started = bool(sc["started"])
+    sched._async_seeded = bool(sc["async_seeded"])
+    sched._lat_window = deque(sc["lat_window"],
+                              maxlen=sched._lat_window.maxlen)
+    # the serialized heap is a valid heapq list verbatim — restoring its
+    # order reproduces the exact pop sequence
+    sched._heap = [_pending_from_state(d, plans, buckets, clients)
+                   for d in s["heap"]]
+    sched._buffered = [_pending_from_state(d, plans, buckets, clients)
+                       for d in s["buffered"]]
+    sched._carried = [_pending_from_state(d, plans, buckets, clients)
+                      for d in s["carried"]]
+    sched._history = [RoundMetrics(**d) for d in s["history"]]
+    sched.strategy.load_state_dict(s["strategy"])
+    _load_sim_state(sched.sim, s["sim"])
+
+
+# ------------------------------------------------------------------- files
+def save_run(sched, path):
+    """Atomic (write-tmp-then-rename) full-run checkpoint."""
+    return save_state(path, scheduler_state(sched))
+
+
+def restore_run(sched, path) -> None:
+    load_scheduler_state(sched, load_state(path))

@@ -15,22 +15,36 @@
   no-recompile guarantee of the event loop holds.
 * **straggler** — intermittent slowdown: with ``straggler_prob`` a round
   takes ``straggler_factor ×`` its oracle latency.
+* **model replacement** (ISSUE 7) — ``attack="replacement"``: instead of
+  scaling its genuine update, a byzantine client uploads
+  ``boost · (target − trainable₀)``, the classic targeted backdoor that
+  steers the *aggregate* toward an attacker-chosen model in one round.
+  Applied as one jitted shape-stable per-bucket blend, like scaling.
+* **availability traces** (ISSUE 7) — when the model carries an
+  `AvailabilityTrace` (``data.partition``), churn stops being a Bernoulli
+  coin-flip: dispatch consults each client's online window at the virtual
+  clock, a window closing mid-round fails the round at the cut time, and
+  the scheduler retries with capped exponential backoff on the event heap.
 
 All draws are deterministic per ``(seed, cid, dispatch seq)`` — replaying a
 run replays its faults.
 
-The robust aggregators (trimmed mean, coordinate median, norm-clip) register
-in the strategy-level ``AGGREGATORS`` registry and drop into the same fused
-aggregation seam as weighted FedAvg (``Strategy.aggregator = "trimmed_mean"``
-or ``run_experiment(aggregator=...)``).
+The robust aggregators (trimmed mean, coordinate median, norm-clip, and the
+distance-based Krum / multi-Krum selectors) register in the strategy-level
+``AGGREGATORS`` registry and drop into the same fused aggregation seam as
+weighted FedAvg (``Strategy.aggregator = "trimmed_mean"`` or
+``run_experiment(aggregator=...)``).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..data.partition import AvailabilityTrace
 from ..utils.tree import tree_map
 from .strategies import (cohort_fedavg, cohort_norms, register_aggregator,
                          scale_cohort)
@@ -46,6 +60,8 @@ class ClientBehavior:
     straggler_prob: float = 0.0
     straggler_factor: float = 4.0
     timeout_factor: float = 1.0   # failure detected at this × round time
+    attack: str = "scaling"       # "scaling" | "replacement"
+    replace_boost: float = 4.0    # replacement attack: Δ = boost·(target−θ₀)
     seed: int = 0
 
 
@@ -61,8 +77,14 @@ class FaultModel:
     ``(seed, cid, seq)`` so every dispatch is independently — and
     reproducibly — faulty."""
 
-    def __init__(self, behavior: ClientBehavior, n_clients: int):
+    def __init__(self, behavior: ClientBehavior, n_clients: int,
+                 trace: Optional[AvailabilityTrace] = None):
+        if behavior.attack not in ("scaling", "replacement"):
+            raise ValueError(f"unknown attack {behavior.attack!r}; "
+                             "expected 'scaling' or 'replacement'")
         self.behavior = behavior
+        self.trace = trace
+        self._targets = {}           # replacement targets, cached per shape
         n_byz = int(round(behavior.byzantine_frac * n_clients))
         if n_byz > 0:
             rng = np.random.default_rng((behavior.seed, 0xB52))
@@ -81,6 +103,20 @@ class FaultModel:
         slow = b.straggler_factor if rng.random() < b.straggler_prob else 1.0
         return FaultDraw(dropped=dropped, slowdown=float(slow))
 
+    # ------------------------------------------------------- availability
+    def available(self, cid: int, t: float) -> bool:
+        """Is this client reachable at virtual time ``t``?  Always true
+        without a trace (legacy Bernoulli churn handles failures)."""
+        return self.trace is None or self.trace.available(cid, t)
+
+    def offline_cut(self, cid: int, t0: float, t1: float):
+        """First moment in ``[t0, t1)`` the client's connectivity drops, or
+        ``None`` when it stays online for the whole round."""
+        if self.trace is None:
+            return None
+        return self.trace.offline_cut(cid, t0, t1)
+
+    # ---------------------------------------------------------- corruption
     def update_scales(self, cids) -> np.ndarray:
         """(C,) multiplier vector for a dispatch bucket — byzantine members
         get ``byzantine_scale``, honest ones 1.  Fed to one jitted
@@ -88,6 +124,41 @@ class FaultModel:
         s = self.behavior.byzantine_scale
         return np.asarray([s if self.is_byzantine(c) else 1.0 for c in cids],
                           np.float32)
+
+    def byzantine_marks(self, cids) -> np.ndarray:
+        """(C,) 0/1 vector marking byzantine rows of a dispatch bucket."""
+        return np.asarray([1.0 if self.is_byzantine(c) else 0.0
+                           for c in cids], np.float32)
+
+    def replacement_target(self, like):
+        """The attacker's goal model for the replacement attack: a fixed
+        random tree drawn once per trainable structure from the behavior
+        seed — deterministic across dispatches, runs, and resume."""
+        flat, treedef = jax.tree_util.tree_flatten(like)
+        sig = (treedef, tuple((l.shape, str(l.dtype)) for l in flat))
+        if sig not in self._targets:
+            key = jax.random.PRNGKey(np.uint32(self.behavior.seed)
+                                     ^ np.uint32(0x7A9E))
+            keys = jax.random.split(key, max(1, len(flat)))
+            leaves = [
+                (0.5 * jax.random.normal(k, l.shape, jnp.float32)
+                 ).astype(l.dtype)
+                for k, l in zip(keys, flat)]
+            self._targets[sig] = jax.tree_util.tree_unflatten(treedef, leaves)
+        return self._targets[sig]
+
+
+def replace_rows(deltas, marks, trainable0, target, boost):
+    """Blend a (C, ...) update stack with the model-replacement payload on
+    the marked rows: honest rows pass through, byzantine rows become
+    ``boost · (target − trainable0)``.  Shape-stable → one jit, no
+    recompiles inside the event loop."""
+    def blend(d, t0, tg):
+        mal = (boost * (tg.astype(jnp.float32) - t0.astype(jnp.float32)))
+        m = marks.reshape((-1,) + (1,) * (d.ndim - 1))
+        out = d.astype(jnp.float32) * (1.0 - m) + m * mal[None]
+        return out.astype(d.dtype)
+    return tree_map(blend, deltas, trainable0, target)
 
 
 # ======================================================= robust aggregators
@@ -123,6 +194,55 @@ def coordinate_median():
                            ).astype(t0.dtype),
             trainable0, deltas)
     return agg
+
+
+def _krum_select(f: int, m: int):
+    """Krum / multi-Krum (Blanchard et al., NeurIPS'17) selection over a
+    (C, ...) update stack.
+
+    Each row's score is the sum of its ``k = C − f − 2`` smallest squared
+    distances to other rows; the ``m`` lowest-scoring rows are averaged
+    (``m = 1`` → Krum, ``m = k`` → the usual multi-Krum choice).  ``f`` is
+    the byzantine budget; ``f ≤ 0`` auto-sizes it to ``(C − 3) // 2``, the
+    largest value the C ≥ 2f + 3 guarantee admits.  Distance-based selection
+    ignores sample weights, like the other robust rules."""
+    def agg(trainable0, deltas, weights, masks):
+        cohort = int(weights.shape[0])
+        if cohort <= 2:
+            return cohort_fedavg(trainable0, deltas,
+                                 jnp.ones_like(weights), masks)
+        ff = f if f > 0 else max(0, (cohort - 3) // 2)
+        k = max(1, min(cohort - ff - 2, cohort - 1))
+        leaves = jax.tree_util.tree_leaves(deltas)
+        flat = jnp.concatenate(
+            [l.reshape(cohort, -1).astype(jnp.float32) for l in leaves],
+            axis=1)
+        sq = jnp.sum(flat * flat, axis=1)
+        d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+        d2 = jnp.maximum(d2, 0.0) + jnp.float32(1e30) * jnp.eye(cohort)
+        scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+        mm = max(1, min(m if m > 0 else k, cohort))
+        sel = jnp.argsort(scores)[:mm]
+        pick = jnp.zeros((cohort,), jnp.float32).at[sel].set(1.0 / mm)
+        return tree_map(
+            lambda t0, d: (t0 + jnp.tensordot(
+                pick, d.astype(jnp.float32), axes=1)).astype(t0.dtype),
+            trainable0, deltas)
+    return agg
+
+
+@register_aggregator("krum")
+def krum(f: int = 0):
+    """Krum: keep the single update closest (in summed squared distance) to
+    its ``C − f − 2`` nearest peers."""
+    return _krum_select(f, m=1)
+
+
+@register_aggregator("multi_krum")
+def multi_krum(f: int = 0, m: int = 0):
+    """Multi-Krum: average the ``m`` lowest-scoring updates (``m = 0`` →
+    ``C − f − 2``, the paper's default)."""
+    return _krum_select(f, m)
 
 
 @register_aggregator("norm_clip")

@@ -50,16 +50,31 @@ from .strategies import cohort_norms, scale_cohort
 class DPConfig:
     """Client-level DP-FedAvg knobs.
 
-    clip              per-client L2 bound on the uploaded update
+    clip              per-client L2 bound on the uploaded update (the
+                      *initial* bound when ``adaptive_clip`` is on)
     noise_multiplier  σ — noise std in units of the mean's sensitivity
                       (clip / cohort size)
     delta             target δ for the ε report
     seed              root of the fold_in'd per-round noise keys
+    adaptive_clip     track the clip norm from observed update norms
+                      (Andrew et al. 2021): after each commit the bound
+                      moves geometrically toward the ``target_quantile`` of
+                      the cohort's update-norm distribution,
+                      ``C ← C · exp(−clip_lr · (b̄ − γ))`` with b̄ the
+                      fraction of clients whose norm is ≤ C.  σ stays
+                      fixed, so the RDP accounting is unchanged; the clip
+                      rides into the jitted aggregate as a traced ``(C,)``
+                      mask entry → no recompiles as it drifts.
+    target_quantile   γ above
+    clip_lr           η above
     """
     clip: float = 1.0
     noise_multiplier: float = 1.0
     delta: float = 1e-5
     seed: int = 0
+    adaptive_clip: bool = False
+    target_quantile: float = 0.5
+    clip_lr: float = 0.2
 
 
 def clip_cohort(deltas, clip: float):
@@ -82,19 +97,51 @@ def gaussian_noise_tree(rng, tree, std):
 def make_private_aggregate(dp: DPConfig, base_agg):
     """Wrap a 5-arg aggregation with the DP mechanism: clip → uniform-weight
     aggregate → add ``N(0, (σ·clip/C)²)`` to every committed coordinate.
-    Traceable — lives inside the jitted cohort step / commit."""
+    Traceable — lives inside the jitted cohort step / commit.  When the
+    caller injects a ``"dp_clip"`` entry into ``masks`` (a ``(C,)`` vector —
+    (C,)-shaped so it survives the engine's per-client vmap), that traced
+    value is the bound; otherwise the static ``dp.clip`` is baked in."""
     def agg(trainable0, deltas, weights, masks, rng):
-        clipped = clip_cohort(deltas, dp.clip)
+        if isinstance(masks, dict) and "dp_clip" in masks:
+            clip = masks["dp_clip"][0].astype(jnp.float32)
+        else:
+            clip = jnp.float32(dp.clip)
+        clipped = clip_cohort(deltas, clip)
         # uniform weights: with sample-count weights the per-client
         # sensitivity of the mean would be w_i·clip/Σw — data-dependent
         uniform = jnp.ones_like(weights)
         new = base_agg(trainable0, clipped, uniform, masks, rng)
         cohort = weights.shape[0]
-        std = dp.noise_multiplier * dp.clip / cohort
+        std = dp.noise_multiplier * clip / cohort
         noise = gaussian_noise_tree(jax.random.fold_in(rng, 0x0D9), new, std)
         return tree_map(lambda x, n: (x.astype(jnp.float32) + n
                                       ).astype(x.dtype), new, noise)
     return agg
+
+
+def current_clip(strategy) -> float:
+    """The live clip bound: the tracked value under adaptive clipping,
+    ``dp.clip`` otherwise."""
+    return float(getattr(strategy, "_dp_clip", strategy.dp.clip))
+
+
+def observe_update_norms(strategy, norms) -> float:
+    """Adaptive-clip tracking step (Andrew et al. 2021, geometric form):
+    fed the cohort's observed per-client update norms after a commit, move
+    the bound toward the target quantile.  Host-side — the updated value
+    enters the next commit as a traced mask entry, never a new constant.
+    Returns the new clip."""
+    dp = strategy.dp
+    if dp is None or not dp.adaptive_clip:
+        return current_clip(strategy)
+    norms = np.asarray(jax.device_get(norms), np.float64).reshape(-1)
+    if norms.size == 0:
+        return strategy._dp_clip
+    frac_below = float(np.mean(norms <= strategy._dp_clip))
+    strategy._dp_clip = float(
+        strategy._dp_clip
+        * math.exp(-dp.clip_lr * (frac_below - dp.target_quantile)))
+    return strategy._dp_clip
 
 
 DEFAULT_RDP_ORDERS = tuple(range(2, 64)) + (80, 96, 128, 192, 256, 512)
@@ -155,6 +202,22 @@ class RDPAccountant:
         i = int(np.argmin(eps))
         return float(eps[i]), self.orders[i]
 
+    def to_state(self) -> dict:
+        """Serializable snapshot: the orders grid, the accumulated RDP
+        curve, and the step counter — everything ε depends on."""
+        return {"orders": list(self.orders),
+                "rdp": [float(x) for x in self._rdp],
+                "steps": int(self.steps)}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "RDPAccountant":
+        """Inverse of :meth:`to_state`; ε after restore equals ε of the
+        uninterrupted accountant bit for bit."""
+        acc = cls(tuple(int(a) for a in state["orders"]))
+        acc._rdp = np.asarray(state["rdp"], np.float64)
+        acc.steps = int(state["steps"])
+        return acc
+
 
 def enable_dp(strategy, dp: Optional[DPConfig] = None):
     """Attach client-level DP to a constructed strategy (post-construction:
@@ -168,6 +231,7 @@ def enable_dp(strategy, dp: Optional[DPConfig] = None):
             "would silently stay non-private — enable DP before training")
     strategy.dp = dp
     strategy._dp_key = jax.random.PRNGKey(dp.seed)
+    strategy._dp_clip = float(dp.clip)
     strategy.dp_accountant = RDPAccountant()
     return strategy
 
@@ -274,7 +338,7 @@ def _session_field_sum(strategy, session: "SecureSession", contributions,
     masked = []
     for cid, u, w in contributions:
         if dp is not None:
-            u, w = _clip_single(u, dp.clip), 1.0
+            u, w = _clip_single(u, current_clip(strategy)), 1.0
         scaled = tree_map(lambda x: x.astype(jnp.float32) * (w / wsum), u)
         masked.append(session.mask_update(cid, scaled))
     return session.unmask_sum(masked, [c for c, _, _ in contributions])
@@ -294,8 +358,20 @@ def secure_commit(strategy, plan, trainable0, groups, rng=None):
     n_contrib = sum(len(c) for _, c in groups)
     if dp is not None:
         wsum = float(max(1, n_contrib))
+        clip = current_clip(strategy)
+        if dp.adaptive_clip and n_contrib:
+            # client-side knowledge: each client reports its (plaintext)
+            # update norm; the tracked bound moves after this commit so the
+            # value clipping *this* commit stays the pre-observation one
+            norms = [float(jnp.sqrt(sum(
+                jnp.sum(jnp.square(x.astype(jnp.float32)))
+                for x in jax.tree_util.tree_leaves(u))))
+                for _, cs in groups for _, u, _ in cs]
+        else:
+            norms = None
     else:
         wsum = float(sum(w for _, cs in groups for _, _, w in cs)) or 1.0
+        clip, norms = None, None
     total, ref = None, groups[0][0]
     for session, contribs in groups:
         if not contribs:
@@ -308,10 +384,12 @@ def secure_commit(strategy, plan, trainable0, groups, rng=None):
     if dp is not None:
         if rng is None:
             rng = jax.random.PRNGKey(0)
-        std = dp.noise_multiplier * dp.clip / max(1, n_contrib)
+        std = dp.noise_multiplier * clip / max(1, n_contrib)
         noise = gaussian_noise_tree(jax.random.fold_in(rng, 0x0D9), mean,
                                     std)
         mean = tree_map(lambda x, n: x + n, mean, noise)
+        if norms is not None:
+            observe_update_norms(strategy, np.asarray(norms))
     return strategy.apply_update(plan, trainable0, mean)
 
 

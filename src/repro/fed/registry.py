@@ -79,6 +79,7 @@ class ExperimentResult:
     strategy: object
     sim: object
     history: list           # List[RoundMetrics]
+    scheduler: object = None  # the FedScheduler (None on the legacy path)
 
     @property
     def best_acc(self) -> float:
@@ -101,7 +102,10 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
                    dp=None, secure_agg=None,
                    aggregator: Optional[str] = None,
                    aggregator_opts: Optional[dict] = None,
-                   faults=None) -> ExperimentResult:
+                   faults=None, trace=None,
+                   checkpoint_every: Optional[int] = None,
+                   checkpoint_path=None, resume=None,
+                   halt_after: Optional[int] = None) -> ExperimentResult:
     """High-level entry point: build (or accept) the federated testbed, make
     the named strategy, optionally swap in a pretrained base, run rounds.
 
@@ -127,6 +131,16 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
       weighted FedAvg for strategies without a bespoke one.
     * ``faults`` — a ``ClientBehavior`` (or its kwargs): dropout/byzantine/
       straggler injection; needs ``mode`` semisync or async.
+    * ``trace`` — an ``AvailabilityTrace`` or a ``{"kind": "diurnal"|
+      "flaky", ...}`` dict (``repro.data.partition.make_trace`` kwargs):
+      replayable client availability replacing Bernoulli dropout.
+
+    Crash tolerance (``repro.fed.checkpoint``): ``checkpoint_every`` +
+    ``checkpoint_path`` persist the full run state every N rounds/commits;
+    ``resume`` restores such a checkpoint into the freshly built run before
+    driving it (pass the *same* ``rounds``); ``halt_after`` stops the loop
+    after that unit — the crash-simulation hook the resume-equality tests
+    use.  Any of these forces the event-driven scheduler even in sync mode.
     """
     import jax
     import numpy as np
@@ -189,13 +203,27 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
         fb = (ClientBehavior(**faults) if isinstance(faults, dict)
               else faults)
         scheduler_opts = {**(scheduler_opts or {}), "faults": fb}
+    if trace is not None:
+        if isinstance(trace, dict):
+            from ..data.partition import make_trace
+            tkw = dict(trace)
+            trace = make_trace(tkw.pop("kind"), fed.n_clients, **tkw)
+        scheduler_opts = {**(scheduler_opts or {}), "trace": trace}
 
-    if mode == "sync" and not scheduler_opts:
+    durable = (checkpoint_every is not None or resume is not None
+               or halt_after is not None)
+    if mode == "sync" and not scheduler_opts and not durable:
         history = run_rounds(sim, strat, rounds, eval_every=eval_every,
                              verbose=verbose)
+        sched = None
     else:
         from .runtime import FedScheduler
-        history = FedScheduler(sim, strat, mode=mode,
-                               **(scheduler_opts or {})).run(
-            rounds, eval_every=eval_every, verbose=verbose)
-    return ExperimentResult(strat, sim, history)
+        sched = FedScheduler(sim, strat, mode=mode,
+                             **(scheduler_opts or {}))
+        if resume is not None:
+            sched.restore(resume)
+        history = sched.run(rounds, eval_every=eval_every, verbose=verbose,
+                            checkpoint_every=checkpoint_every,
+                            checkpoint_path=checkpoint_path,
+                            halt_after=halt_after)
+    return ExperimentResult(strat, sim, history, sched)

@@ -1,4 +1,5 @@
-"""Event-driven heterogeneous federation runtime (ISSUE 5 tentpole).
+"""Event-driven heterogeneous federation runtime (ISSUE 5 tentpole;
+crash tolerance, trace-driven churn and adversarial hardening — ISSUE 7).
 
 The lockstep ``run_rounds`` loop treated every eligible client as
 interchangeable; real edge cohorts are not — the paper's whole premise is
@@ -41,6 +42,25 @@ their completion events fire; committing a buffer is a cheap
 staleness-weighted tensordot onto the *current* state — updates computed at
 version v and applied at version v' > v are exactly what the staleness
 discount prices.
+
+**Crash tolerance** (ISSUE 7): the scheduler's entire run state — virtual
+clock, pending heap (the stacked update buckets included), buffered /
+carried entries, strategy trainable + stage machine + DP accountant, and
+every host RNG the run consumes — round-trips through
+``state_dict``/``load_state_dict`` (``repro.fed.checkpoint``).  ``run``
+takes ``checkpoint_every``/``checkpoint_path`` for periodic atomic saves at
+commit boundaries; a fresh process that rebuilds the same config, calls
+``restore`` and re-runs finishes **bit-identically** to the uninterrupted
+run — same trainable leaves, same ε, same RoundMetrics — with zero extra
+jit compilations (plans rehydrate hash-equal).
+
+**Trace-driven churn**: an ``AvailabilityTrace`` (``repro.data.partition``)
+replaces i.i.d. Bernoulli dropout with replayable per-client availability
+windows.  Sampling skips offline clients; a client whose window closes
+mid-round becomes a timeout event at the moment it went offline; and when
+*no* client is available the server parks a capped-exponential-backoff
+retry event (``backoff_base``·2^k, capped at ``backoff_cap``) on the same
+heap and re-dispatches when it fires.
 """
 from __future__ import annotations
 
@@ -57,8 +77,8 @@ from ..core.memory import round_flops
 from ..utils.tree import tree_map
 from . import privacy
 from .engine import FedSim, RoundMetrics
-from .faults import ClientBehavior, FaultModel
-from .strategies import scale_cohort, stack_masks
+from .faults import ClientBehavior, FaultModel, replace_rows
+from .strategies import cohort_norms, scale_cohort, stack_masks
 
 MODES = ("sync", "semisync", "async")
 
@@ -97,7 +117,11 @@ class _Pending:
     ``bi`` of its bucket's stacked ``(C, ...)`` update tree — kept stacked
     so a commit of a whole contiguous bucket (the common case) is a single
     prefix slice per leaf instead of C gathers + a restack.  It commits
-    when its completion event fires."""
+    when its completion event fires.
+
+    ``retry >= 0`` marks a *backoff retry event* instead of a client: no
+    update, no device — when it fires the scheduler attempts a dispatch and,
+    failing again, parks the next retry at twice the delay."""
     finish: float
     client: object
     plan: object
@@ -113,6 +137,7 @@ class _Pending:
                             # timeout event, the update never arrives
     session: object = None  # secure-agg masking session of this entry's
                             # dispatch bucket (None when masking is off)
+    retry: int = -1         # >= 0: backoff retry event (client is None)
 
     def __lt__(self, other):
         return (self.finish, self.seq) < (other.finish, other.seq)
@@ -162,9 +187,19 @@ class FedScheduler:
         versions (async; default: keep all).
     faults : ``ClientBehavior`` (or a prebuilt ``FaultModel``) — inject
         dropouts (timeout event + async re-dispatch on the same heap),
-        byzantine update corruption, and intermittent stragglers.  Requires
-        an event-driven mode: the lockstep sync path has no timeout
-        machinery to detect a failure with.
+        byzantine update corruption (scaling or model replacement), and
+        intermittent stragglers.  Requires an event-driven mode: the
+        lockstep sync path has no timeout machinery to detect a failure
+        with.
+    trace : ``AvailabilityTrace`` — replayable per-client availability
+        windows replacing Bernoulli dropout (may be combined with
+        ``faults``; a bare trace builds a benign ``FaultModel`` around
+        itself).  Offline clients are never sampled; a window closing
+        mid-round drops the update at the closing time.
+    backoff_base / backoff_cap / max_backoff_retries : capped exponential
+        backoff for dispatch attempts that find no available client —
+        delay = min(base · 2^k, cap), giving up after ``max_backoff_retries``
+        consecutive failures.
     """
 
     def __init__(self, sim: FedSim, strategy, mode: str = "sync", *,
@@ -174,11 +209,20 @@ class FedScheduler:
                  straggler: str = "drop",
                  bucket_pad: Optional[int] = None,
                  staleness_cap: Optional[int] = None,
-                 faults=None):
+                 faults=None, trace=None,
+                 backoff_base: float = 1.0, backoff_cap: float = 60.0,
+                 max_backoff_retries: int = 60):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; one of {MODES}")
         if straggler not in ("drop", "carry"):
             raise ValueError(f"straggler policy {straggler!r}: drop|carry")
+        if isinstance(faults, ClientBehavior):
+            faults = FaultModel(faults, sim.fed.n_clients, trace=trace)
+        elif faults is None and trace is not None:
+            faults = FaultModel(ClientBehavior(), sim.fed.n_clients,
+                                trace=trace)
+        elif faults is not None and trace is not None:
+            faults.trace = trace
         if faults is not None and mode == "sync":
             raise ValueError(
                 "fault injection needs the event-driven runtime (semisync/"
@@ -193,6 +237,11 @@ class FedScheduler:
                 raise ValueError(
                     "secure aggregation with straggler='carry' would commit "
                     "one session across several rounds; use straggler='drop'")
+            if strategy.aggregator != "fedavg":
+                raise ValueError(
+                    "secure aggregation only supports the linear fedavg "
+                    f"mean; robust aggregator {strategy.aggregator!r} needs "
+                    "plaintext per-client updates")
         self.sim, self.strategy, self.mode = sim, strategy, mode
         self.concurrency = concurrency or sim.fed.clients_per_round
         self.buffer_size = buffer_size or self.concurrency
@@ -205,34 +254,65 @@ class FedScheduler:
         self.straggler = straggler
         self.bucket_pad = bucket_pad or self.concurrency
         self.staleness_cap = staleness_cap
-        if isinstance(faults, ClientBehavior):
-            faults = FaultModel(faults, sim.fed.n_clients)
         self.faults: Optional[FaultModel] = faults
+        self.backoff_base = float(backoff_base)
+        self.backoff_cap = float(backoff_cap)
+        self.max_backoff_retries = int(max_backoff_retries)
         self.clock = 0.0            # virtual seconds
         self.version = 0            # server model version (commits so far)
         self._times = {}            # (cid, plan) -> cached round time
         self._seq = 0               # dispatch counter (heap tie-break)
         self._agg_jit = {}          # plan -> jitted commit aggregation
         self._corrupt_jit = None    # jitted byzantine per-bucket scaling
+        self._replace_jit = None    # jitted model-replacement row blend
         self.committed_updates = 0  # client updates aggregated so far
         self.fault_dropouts = 0     # dispatches lost to injected dropouts
+        self.trace_dropouts = 0     # dispatches lost to availability windows
         self.redispatches = 0       # replacement dispatches (async recovery)
+        self.backoff_retries = 0    # no-client-available backoff events
         # observed round latencies (on-time actuals; stragglers enter
         # censored at the deadline) — the adaptive semisync deadline
         self._lat_window = deque(maxlen=512)
+        # durable loop state (checkpoint/resume): where the run is, plus the
+        # in-flight entries a crash would otherwise lose
+        self._round = 0                 # rounds completed (sync/semisync)
+        self._done = 0                  # commits completed (async)
+        self._history: List[RoundMetrics] = []
+        self._heap: List[_Pending] = []       # async event heap
+        self._buffered: List[_Pending] = []   # async partial buffer
+        self._carried: List[_Pending] = []    # semisync carried stragglers
+        self._started = False           # strategy.begin already ran
+        self._async_seeded = False      # initial async dispatch done
+        self._ckpt = None
+        self._halt_after = None
 
     # ------------------------------------------------------------------ run
-    def run(self, rounds: int, eval_every: int = 5,
-            verbose: bool = False) -> List[RoundMetrics]:
+    def run(self, rounds: int, eval_every: int = 5, verbose: bool = False,
+            *, checkpoint_every: Optional[int] = None,
+            checkpoint_path=None,
+            halt_after: Optional[int] = None) -> List[RoundMetrics]:
         """Drive ``rounds`` server commits and return the metric history.
         In sync/semisync a commit is a round; in async it is a buffer flush
-        — histories are comparable via ``RoundMetrics.wallclock``."""
+        — histories are comparable via ``RoundMetrics.wallclock``.
+
+        ``checkpoint_every``/``checkpoint_path`` save the full run state
+        (``save``) every N completed rounds/commits; ``halt_after`` stops
+        the loop after that unit — the crash-simulation hook the resume
+        equality tests (and the CI smoke) kill the run with.  A resumed
+        scheduler (``restore``) continues exactly where the checkpoint was
+        taken; call ``run`` again with the *same* total ``rounds``."""
+        self._ckpt = ((int(checkpoint_every), checkpoint_path)
+                      if checkpoint_every and checkpoint_path is not None
+                      else None)
+        self._halt_after = halt_after
         if self.mode == "sync":
             # sync preserves the legacy ordering exactly: one-off setup
             # (chainfed FOAT) runs *inside* the first Strategy.round, after
             # that round's eligibility sampling — bit-identical histories
             return self._run_sync(rounds, eval_every, verbose)
-        self.strategy.begin(self.sim)
+        if not self._started:
+            self._started = True
+            self.strategy.begin(self.sim)
         if self.mode == "semisync":
             return self._run_semisync(rounds, eval_every, verbose)
         return self._run_async(rounds, eval_every, verbose)
@@ -261,21 +341,37 @@ class FedScheduler:
                   f"t={self.clock:.1f}s stale={stale}{dp}")
         return m
 
+    def _has_trace(self) -> bool:
+        return self.faults is not None and self.faults.trace is not None
+
+    def _checkpoint_unit(self, unit: int) -> bool:
+        """Persist the run after completing ``unit`` (a round / a commit)
+        when it falls on the checkpoint cadence; returns True when the run
+        should halt here (``halt_after`` crash simulation)."""
+        if self._ckpt is not None and unit % self._ckpt[0] == 0:
+            self.save(self._ckpt[1])
+        return self._halt_after is not None and unit >= self._halt_after
+
     def _sample(self, n: int, round_idx: int, busy=frozenset()):
         """Sample ``n`` clients from the eligible pool, never re-dispatching
         a client that is still in flight (``busy``: cids parked on the
-        event heap — a device cannot compute two overlapping local rounds).
-        When ``n`` equals the configured cohort size and nothing is busy
-        this is exactly ``sim.sample_clients`` — the same rng draws in the
-        same order as the sync path, which is what makes
-        async-with-uniform-latencies coincide with sync."""
+        event heap — a device cannot compute two overlapping local rounds)
+        and — under an availability trace — never one that is offline at
+        the current clock.  When ``n`` equals the configured cohort size
+        and nothing constrains the pool this is exactly
+        ``sim.sample_clients`` — the same rng draws in the same order as
+        the sync path, which is what makes async-with-uniform-latencies
+        coincide with sync."""
         sim, strat = self.sim, self.strategy
-        if not busy and n == sim.fed.clients_per_round:
+        if not busy and n == sim.fed.clients_per_round \
+                and not self._has_trace():
             return sim.sample_clients(strat.memory_method,
                                       **strat.memory_kwargs(round_idx))
         pool = [c for c in sim.eligible(strat.memory_method,
                                         **strat.memory_kwargs(round_idx))
-                if c.cid not in busy]
+                if c.cid not in busy
+                and (self.faults is None
+                     or self.faults.available(c.cid, self.clock))]
         if not pool or n <= 0:
             return []
         k = min(n, len(pool))
@@ -312,16 +408,20 @@ class FedScheduler:
             updates, losses = step(tr0, strat.params, strat.adapters,
                                    batches, masks)
             if self.faults is not None and self.faults.byzantine:
-                # corruption is one shape-stable jitted multiply over the
-                # padded bucket — the event loop's no-recompile guarantee
-                # holds with byzantine clients in play
-                scales = np.ones(n + pad, np.float32)
-                scales[:n] = self.faults.update_scales(
-                    [c.cid for c in bucket])
-                if self._corrupt_jit is None:
-                    self._corrupt_jit = jax.jit(scale_cohort)
-                updates = self._corrupt_jit(updates,
-                                            jnp.asarray(scales))
+                # corruption is one shape-stable jitted op over the padded
+                # bucket — the event loop's no-recompile guarantee holds
+                # with byzantine clients in play
+                if self.faults.behavior.attack == "replacement":
+                    updates = self._apply_replacement(updates, tr0, bucket,
+                                                      n, pad)
+                else:
+                    scales = np.ones(n + pad, np.float32)
+                    scales[:n] = self.faults.update_scales(
+                        [c.cid for c in bucket])
+                    if self._corrupt_jit is None:
+                        self._corrupt_jit = jax.jit(scale_cohort)
+                    updates = self._corrupt_jit(updates,
+                                                jnp.asarray(scales))
             session = (privacy.new_session(strat,
                                            [c.cid for c in bucket])
                        if strat.secure is not None else None)
@@ -336,6 +436,15 @@ class FedScheduler:
                         failed = True
                         t *= self.faults.behavior.timeout_factor
                         self.fault_dropouts += 1
+                    else:
+                        # availability window closing mid-round: the client
+                        # goes dark at `cut` — the server's timeout event
+                        cut = self.faults.offline_cut(c.cid, self.clock,
+                                                      self.clock + t)
+                        if cut is not None:
+                            failed = True
+                            t = max(cut - self.clock, 0.0)
+                            self.trace_dropouts += 1
                 pending.append(_Pending(
                     finish=self.clock + t,
                     client=c, plan=plan, bucket=updates, bi=i,
@@ -343,6 +452,27 @@ class FedScheduler:
                     version=self.version, seq=self._seq, loss=losses[i],
                     start=self.clock, failed=failed, session=session))
         return pending
+
+    def _apply_replacement(self, updates, tr0, bucket, n, pad):
+        """Model-replacement poisoning (targeted backdoor-style attack):
+        each byzantine row is overwritten with ``boost · (target − x₀)`` so
+        a plain weighted mean lands the aggregate on the attacker's target
+        model.  One shape-stable jitted blend over the padded bucket."""
+        fm = self.faults
+        row = tree_map(lambda u: u[0], updates)
+        if (jax.tree_util.tree_structure(row)
+                != jax.tree_util.tree_structure(tr0)):
+            raise ValueError(
+                "model-replacement attack needs trainable-shaped updates; "
+                "this strategy ships a different update structure (e.g. "
+                "FedKSeed's seed-space coefficients) — use attack='scaling'")
+        marks = np.zeros(n + pad, np.float32)
+        marks[:n] = fm.byzantine_marks([c.cid for c in bucket])
+        target = fm.replacement_target(tr0)
+        if self._replace_jit is None:
+            self._replace_jit = jax.jit(replace_rows)
+        return self._replace_jit(updates, jnp.asarray(marks), tr0, target,
+                                 jnp.float32(fm.behavior.replace_boost))
 
     # --------------------------------------------------------------- commit
     def _commit(self, entries: List[_Pending]):
@@ -367,9 +497,10 @@ class FedScheduler:
         # committed mean local loss lazily — one value for the *whole*
         # server commit, not whichever plan group happened to run last
         strat._last_round_loss = jnp.mean(
-            jnp.stack([e.loss for e in entries]))
+            jnp.stack([jnp.asarray(e.loss) for e in entries]))
         dp_rng = (jax.random.fold_in(strat._dp_key, self.version)
                   if strat.dp is not None else None)
+        adaptive = strat.dp is not None and strat.dp.adaptive_clip
         strat.begin_commit()
         for gi, (plan, es) in enumerate(groups.items()):
             # completion events interleave arbitrarily; restoring dispatch
@@ -398,6 +529,12 @@ class FedScheduler:
             else:
                 ups = _stack_updates(es)
                 masks = stack_masks([e.masks for e in es])
+                if adaptive:
+                    # the clip rides in as a traced (C,) mask row — its
+                    # drift never recompiles the jitted aggregation
+                    masks = {**masks, "dp_clip": jnp.full(
+                        (len(es),), privacy.current_clip(strat),
+                        jnp.float32)}
                 w = jnp.asarray(
                     [e.weight
                      * strat.staleness_weight(self.version - e.version)
@@ -406,6 +543,8 @@ class FedScheduler:
                     self._agg_jit[plan] = jax.jit(
                         strat.resolve_aggregate(plan))
                 new = self._agg_jit[plan](tr0, ups, w, masks, rng)
+                if adaptive:
+                    privacy.observe_update_norms(strat, cohort_norms(ups))
             strat.commit_trainable(plan, new)
         strat.end_commit()
         self.version += 1
@@ -423,9 +562,8 @@ class FedScheduler:
         cadence — plus the virtual clock: each round costs the slowest
         sampled device's compute + uplink time."""
         sim, strat = self.sim, self.strategy
-        history = []
         eval_b = sim.eval_batch()
-        for r in range(rounds):
+        for r in range(self._round, rounds):
             clients = sim.sample_clients(strat.memory_method,
                                          **strat.memory_kwargs(r))
             if clients:
@@ -438,9 +576,12 @@ class FedScheduler:
                 self.version += 1
                 self.committed_updates += len(clients)
             if (r + 1) % eval_every == 0 or r == rounds - 1:
-                history.append(self._metric(r, eval_b, len(clients), 0,
-                                            verbose))
-        return history
+                self._history.append(self._metric(r, eval_b, len(clients),
+                                                  0, verbose))
+            self._round = r + 1
+            if self._checkpoint_unit(r + 1):
+                break
+        return self._history
 
     # -------------------------------------------------------- semisync mode
     def _run_semisync(self, rounds, eval_every, verbose):
@@ -468,17 +609,29 @@ class FedScheduler:
         server's timeout, the entry is excluded from the wave (and from
         the carry set), and — when secure aggregation is on — its pairwise
         masks are reconstructed from the surviving roster (the dropout-
-        recovery path)."""
+        recovery path).
+
+        Under an availability trace an empty sample (every eligible device
+        offline) does not waste a round: the server backs off — clock
+        advances by min(base·2^k, cap) — and retries until a window opens
+        or ``max_backoff_retries`` attempts are spent."""
         sim = self.sim
-        history = []
         eval_b = sim.eval_batch()
-        carried: List[_Pending] = []
-        for r in range(rounds):
+        for r in range(self._round, rounds):
             # a carried straggler is still computing — never resample it
             # into the new cohort mid-flight
-            clients = self._sample(sim.fed.clients_per_round, r,
-                                   busy=frozenset(p.client.cid
-                                                  for p in carried))
+            busy = frozenset(p.client.cid for p in self._carried)
+            clients = self._sample(sim.fed.clients_per_round, r, busy=busy)
+            if not clients and self._has_trace():
+                delay = self.backoff_base
+                for _ in range(self.max_backoff_retries):
+                    self.clock += delay
+                    self.backoff_retries += 1
+                    delay = min(delay * 2.0, self.backoff_cap)
+                    clients = self._sample(sim.fed.clients_per_round, r,
+                                           busy=busy)
+                    if clients:
+                        break
             wave = self._dispatch(clients, r) if clients else []
             if not wave:
                 deadline = self.clock
@@ -502,10 +655,11 @@ class FedScheduler:
             live = [p for p in wave if not p.failed]
             on_time = [p for p in live if p.finish <= deadline]
             stragglers = [p for p in live if p.finish > deadline]
-            arrivals = [p for p in carried if p.finish <= deadline]
-            carried = [p for p in carried if p.finish > deadline]
+            arrivals = [p for p in self._carried if p.finish <= deadline]
+            self._carried = [p for p in self._carried
+                             if p.finish > deadline]
             if self.straggler == "carry":
-                carried += stragglers
+                self._carried += stragglers
             for p in on_time:
                 self._lat_window.append(p.finish - p.start)
             for p in stragglers + failed:
@@ -514,55 +668,127 @@ class FedScheduler:
             self.clock = deadline
             kept, stale = self._commit(on_time + arrivals)
             if (r + 1) % eval_every == 0 or r == rounds - 1:
-                history.append(self._metric(r, eval_b, kept, stale, verbose))
-        return history
+                self._history.append(self._metric(r, eval_b, kept, stale,
+                                                  verbose))
+            self._round = r + 1
+            if self._checkpoint_unit(r + 1):
+                break
+        return self._history
 
     # ----------------------------------------------------------- async mode
+    def _push_retry(self, retry: int):
+        """Park a backoff retry event on the heap: when it fires the
+        scheduler re-attempts a dispatch; another failure parks the next
+        retry at twice the delay (capped), giving up after
+        ``max_backoff_retries`` consecutive misses."""
+        if retry >= self.max_backoff_retries:
+            return
+        delay = min(self.backoff_base * (2.0 ** retry), self.backoff_cap)
+        self._seq += 1
+        self.backoff_retries += 1
+        heapq.heappush(self._heap, _Pending(
+            finish=self.clock + delay, client=None, plan=None, bucket=None,
+            bi=-1, masks={}, weight=0.0, version=self.version,
+            seq=self._seq, retry=retry))
+
+    def _async_refill(self, retry: int):
+        """Top the in-flight pool back up to ``concurrency`` live workers;
+        a shortfall under an availability trace parks a backoff retry
+        (attempt number ``retry``) instead of silently shrinking the pool."""
+        busy = frozenset(q.client.cid for q in self._heap
+                         if q.client is not None)
+        live = sum(1 for q in self._heap if q.retry < 0)
+        want = self.concurrency - live
+        got = (self._dispatch(self._sample(want, self._done, busy),
+                              self._done) if want > 0 else [])
+        for q in got:
+            heapq.heappush(self._heap, q)
+            if retry > 0:
+                self.redispatches += 1
+        if want > 0 and len(got) < want and self._has_trace():
+            self._push_retry(retry)
+
+    def _seed_async(self):
+        # the initial dispatch is just a refill from an empty pool — a
+        # partial fill under trace churn parks a retry for the rest
+        if self._async_seeded:
+            return
+        self._async_seeded = True
+        self._async_refill(0)
+
     def _run_async(self, commits, eval_every, verbose):
         """FedBuff-style buffered async: ``concurrency`` clients in flight,
         completion events popped off the heap, a commit (and replacement
         dispatch wave) every ``buffer_size`` arrivals.
 
-        A fault-injected dropout surfaces as a *timeout event* on the same
-        heap: when it fires, the update is discarded (it never arrived) and
-        the server immediately dispatches a replacement client — the
-        re-dispatch rides the identical bucketed path (padded to
-        ``bucket_pad``), so recovery costs no recompilation."""
-        history = []
+        A fault-injected dropout (or an availability window closing
+        mid-round) surfaces as a *timeout event* on the same heap: when it
+        fires, the update is discarded (it never arrived) and the server
+        immediately dispatches a replacement client — the re-dispatch rides
+        the identical bucketed path (padded to ``bucket_pad``), so recovery
+        costs no recompilation.  When no replacement is available (trace
+        churn) a capped-exponential-backoff retry event takes its place."""
         eval_b = self.sim.eval_batch()
-        heap: List[_Pending] = []
-        for p in self._dispatch(self._sample(self.concurrency, 0), 0):
-            heapq.heappush(heap, p)
-        buffered: List[_Pending] = []
-        done = 0
-        while done < commits and (heap or buffered):
-            if heap:
-                p = heapq.heappop(heap)
+        self._seed_async()
+        while self._done < commits and (self._heap or self._buffered):
+            if self._heap:
+                p = heapq.heappop(self._heap)
                 self.clock = p.finish
+                if p.retry >= 0:
+                    # backoff wake-up: try the dispatch again; failure
+                    # parks the next retry at twice the delay
+                    self._async_refill(p.retry + 1)
+                    continue
                 if p.failed:
                     # timeout event: the client died mid-round — re-dispatch
                     # a replacement on the same heap and keep draining
-                    busy = frozenset(q.client.cid for q in heap)
-                    for q in self._dispatch(self._sample(1, done, busy),
-                                            done):
-                        heapq.heappush(heap, q)
+                    busy = frozenset(q.client.cid for q in self._heap
+                                     if q.client is not None)
+                    got = self._dispatch(self._sample(1, self._done, busy),
+                                         self._done)
+                    for q in got:
+                        heapq.heappush(self._heap, q)
                         self.redispatches += 1
+                    if not got and self._has_trace():
+                        self._push_retry(0)
                     continue
-                buffered.append(p)
-            if len(buffered) >= self.buffer_size or not heap:
-                if not buffered:
+                self._buffered.append(p)
+            if len(self._buffered) >= self.buffer_size or not self._heap:
+                if not self._buffered:
                     break
-                kept, stale = self._commit(buffered)
-                buffered = []
+                kept, stale = self._commit(self._buffered)
+                self._buffered = []
                 if kept:        # a staleness_cap can void a whole buffer —
-                    done += 1   # the model didn't move, don't count a commit
-                    if done % eval_every == 0 or done == commits:
-                        history.append(self._metric(done - 1, eval_b, kept,
-                                                    stale, verbose))
-                if done < commits:
-                    busy = frozenset(p.client.cid for p in heap)
-                    refill = self.concurrency - len(heap)
-                    for q in self._dispatch(
-                            self._sample(refill, done, busy), done):
-                        heapq.heappush(heap, q)
-        return history
+                    self._done += 1   # model didn't move: not a commit
+                    if (self._done % eval_every == 0
+                            or self._done == commits):
+                        self._history.append(self._metric(
+                            self._done - 1, eval_b, kept, stale, verbose))
+                if self._done < commits:
+                    self._async_refill(0)
+                if kept and self._checkpoint_unit(self._done):
+                    break
+        return self._history
+
+    # ------------------------------------------------- durable run state
+    def state_dict(self) -> dict:
+        """Everything a fresh, identically-configured scheduler needs to
+        continue this run bit-identically — see ``repro.fed.checkpoint``."""
+        from .checkpoint import scheduler_state
+        return scheduler_state(self)
+
+    def load_state_dict(self, state: dict) -> None:
+        from .checkpoint import load_scheduler_state
+        load_scheduler_state(self, state)
+
+    def save(self, path) -> None:
+        """Atomically persist the full run state (write-tmp-then-rename)."""
+        from .checkpoint import save_run
+        save_run(self, path)
+
+    def restore(self, path) -> None:
+        """Load a checkpoint into this (freshly constructed, identically
+        configured) scheduler; the next ``run`` continues where the
+        checkpoint was taken."""
+        from .checkpoint import restore_run
+        restore_run(self, path)

@@ -751,6 +751,8 @@ class Strategy:
         self.opt = make_optimizer(chain.optimizer, chain.lr)
         self.engine = PlanEngine(cfg, chain, self.opt)
         self._last_round_loss = None    # device scalar from the latest step
+        self._adaptive_agg = {}         # jitted resolve_aggregate per plan
+                                        # (adaptive-clip sync path)
 
     # base params are swappable (pretrained checkpoints); the head re-derives
     @property
@@ -797,6 +799,69 @@ class Strategy:
         materialize it here."""
         self._params, self.adapters, self.head = self.engine.commit(
             plan, self._params, self.adapters, self.head, new)
+
+    # ------------------------------------------------- durable state (ckpt)
+    def extra_state(self) -> dict:
+        """Strategy-specific mutable state beyond params/adapters/head —
+        subclasses with per-round host state (chainfed's stage machine,
+        FedRA's layer-mask rng, C2A's hypernetwork) override this pair.
+        Keep it cheap and serializable (``ckpt.io.save_state`` handles
+        arrays, nested dicts/tuples and big ints)."""
+        return {}
+
+    def load_extra_state(self, state: dict) -> None:
+        pass
+
+    def state_dict(self) -> dict:
+        """Everything a checkpoint needs to continue this strategy
+        bit-identically: the full trainable surface (params / adapters /
+        head), privacy machinery positions (RDP accountant, adaptive clip,
+        secure-session counter), the last round loss (plateau schedulers
+        read it), and subclass ``extra_state``."""
+        s = {"params": self._params, "adapters": self.adapters,
+             "extra": self.extra_state()}
+        if self.head is not None:
+            s["head"] = self.head
+        if self._last_round_loss is not None:
+            s["last_loss"] = jnp.asarray(self._last_round_loss)
+        if self.dp is not None:
+            s["dp"] = {"accountant": self.dp_accountant.to_state(),
+                       "clip": float(getattr(self, "_dp_clip",
+                                             self.dp.clip))}
+        if self.secure is not None:
+            s["secure_sessions"] = int(self._secure_sessions)
+        return s
+
+    def load_state_dict(self, s: dict) -> None:
+        """Inverse of :meth:`state_dict`.  The strategy must already be
+        *configured* like the checkpointed one (same arch/chain, DP/secure
+        enabled the same way) — configuration is rebuilt from flags, only
+        mutable state restores.  Sets ``_params`` directly: the ``params``
+        property setter re-derives a fresh head, which would clobber the
+        checkpointed one."""
+        self._params = s["params"]
+        self.adapters = s["adapters"]
+        if self.head is not None:
+            if "head" not in s:
+                raise ValueError("checkpoint has no head but this strategy "
+                                 "trains one — config mismatch")
+            self.head = s["head"]
+        if "last_loss" in s:
+            self._last_round_loss = s["last_loss"]
+        if self.dp is not None:
+            if "dp" not in s:
+                raise ValueError("strategy has DP enabled but the "
+                                 "checkpoint was taken without it")
+            from .privacy import RDPAccountant
+            self.dp_accountant = RDPAccountant.from_state(
+                s["dp"]["accountant"])
+            self._dp_clip = float(s["dp"]["clip"])
+        elif "dp" in s:
+            raise ValueError("checkpoint carries DP state but DP is not "
+                             "enabled on this strategy")
+        if self.secure is not None:
+            self._secure_sessions = int(s.get("secure_sessions", 0))
+        self.load_extra_state(s.get("extra", {}))
 
     # ----------------------------------------------------- scheduler hooks
     def begin(self, sim):
@@ -894,6 +959,11 @@ class Strategy:
             rng = (jax.random.fold_in(dp_rng, gi)
                    if dp_rng is not None else None)
             if self.secure is not None:
+                if self.aggregator != "fedavg":
+                    raise ValueError(
+                        "secure aggregation only supports the linear fedavg "
+                        f"mean; robust aggregator {self.aggregator!r} needs "
+                        "plaintext per-client updates")
                 # masked per-client uploads: the aggregation cannot fuse —
                 # the server must see (and sum) each client's masked update
                 from .privacy import secure_round
@@ -901,6 +971,25 @@ class Strategy:
                     tr0, self._params, self.adapters, batches, masks)
                 new = secure_round(self, plan, tr0, updates, weights,
                                    [c.cid for c in cohort], rng=rng)
+                self._last_round_loss = jnp.mean(losses)
+            elif self.dp is not None and self.dp.adaptive_clip:
+                # adaptive clipping needs the observed update norms, which
+                # the fused step never exposes — run the unaggregated wave
+                # plus one cached jitted aggregate; the live bound rides in
+                # as a traced (C,) mask entry, so it drifts with no
+                # recompile
+                from .privacy import current_clip, observe_update_norms
+                updates, losses = self.engine.cohort_updates(plan)(
+                    tr0, self._params, self.adapters, batches, masks)
+                if plan not in self._adaptive_agg:
+                    self._adaptive_agg[plan] = jax.jit(
+                        self.resolve_aggregate(plan))
+                clip_vec = jnp.full((len(cohort),), current_clip(self),
+                                    jnp.float32)
+                new = self._adaptive_agg[plan](
+                    tr0, updates, weights, {**masks, "dp_clip": clip_vec},
+                    rng)
+                observe_update_norms(self, cohort_norms(updates))
                 self._last_round_loss = jnp.mean(losses)
             else:
                 step = self.engine.cohort_step(plan,

@@ -58,11 +58,23 @@ def main(argv=None):
     ap.add_argument("--secure-agg", action="store_true",
                     help="pairwise-masked secure aggregation (sync/semisync)")
     ap.add_argument("--aggregator", default=None,
-                    choices=["fedavg", "trimmed_mean", "median", "norm_clip"],
+                    choices=["fedavg", "trimmed_mean", "median", "norm_clip",
+                             "krum", "multi_krum"],
                     help="robust server aggregation (default: strategy's own)")
     ap.add_argument("--trim-frac", type=float, default=0.2,
                     help="per-side trim fraction for --aggregator "
                          "trimmed_mean")
+    ap.add_argument("--krum-f", type=int, default=0,
+                    help="krum/multi_krum: byzantine bound f (0 = auto)")
+    ap.add_argument("--krum-m", type=int, default=0,
+                    help="multi_krum: selection size m (0 = auto)")
+    ap.add_argument("--adaptive-clip", action="store_true",
+                    help="DP: adapt the clip bound toward the "
+                         "--clip-quantile of observed update norms")
+    ap.add_argument("--clip-quantile", type=float, default=0.5,
+                    help="adaptive clipping target quantile")
+    ap.add_argument("--clip-lr", type=float, default=0.2,
+                    help="adaptive clipping geometric step size")
     ap.add_argument("--dropout-prob", type=float, default=0.0,
                     help="fault injection: per-dispatch client dropout "
                          "probability (semisync/async)")
@@ -71,8 +83,36 @@ def main(argv=None):
                          "corrupted updates")
     ap.add_argument("--byzantine-scale", type=float, default=-10.0,
                     help="corruption factor (negative = sign flip)")
+    ap.add_argument("--attack", default="scaling",
+                    choices=["scaling", "replacement"],
+                    help="byzantine payload: update scaling or targeted "
+                         "model replacement")
+    ap.add_argument("--replace-boost", type=float, default=4.0,
+                    help="replacement attack boost factor")
     ap.add_argument("--straggler-prob", type=float, default=0.0,
                     help="fault injection: per-dispatch slowdown probability")
+    ap.add_argument("--trace", default=None, choices=["diurnal", "flaky"],
+                    help="trace-driven client availability (semisync/async); "
+                         "replaces Bernoulli dropout with replayable "
+                         "availability windows")
+    ap.add_argument("--trace-period", type=float, default=1000.0,
+                    help="availability trace period (virtual seconds)")
+    ap.add_argument("--trace-uptime", type=float, default=0.45,
+                    help="diurnal trace: mean duty cycle")
+    ap.add_argument("--backoff-base", type=float, default=1.0,
+                    help="dispatch retry backoff base delay (with --trace)")
+    ap.add_argument("--backoff-cap", type=float, default=60.0,
+                    help="dispatch retry backoff delay cap")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    help="save the full run state every N rounds/commits")
+    ap.add_argument("--checkpoint-path", default=None,
+                    help="run-state checkpoint file (with --checkpoint-every)")
+    ap.add_argument("--resume", default=None,
+                    help="restore a run-state checkpoint and continue "
+                         "(pass the same --rounds as the original run)")
+    ap.add_argument("--halt-after", type=int, default=None,
+                    help="stop after this round/commit (crash simulation "
+                         "for the resume-equality smoke)")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--clients-per-round", type=int, default=4)
@@ -114,18 +154,36 @@ def main(argv=None):
     elif args.mode == "semisync":
         sched = {"deadline_quantile": args.deadline_quantile,
                  "straggler": args.straggler}
+    if args.trace is not None:
+        sched.update({"backoff_base": args.backoff_base,
+                      "backoff_cap": args.backoff_cap})
     dp = None
     if args.dp_clip is not None:
         dp = {"clip": args.dp_clip, "noise_multiplier": args.dp_noise,
-              "delta": args.dp_delta, "seed": args.seed}
+              "delta": args.dp_delta, "seed": args.seed,
+              "adaptive_clip": args.adaptive_clip,
+              "target_quantile": args.clip_quantile,
+              "clip_lr": args.clip_lr}
     faults = None
     if args.dropout_prob or args.byzantine_frac or args.straggler_prob:
         faults = {"dropout_prob": args.dropout_prob,
                   "byzantine_frac": args.byzantine_frac,
                   "byzantine_scale": args.byzantine_scale,
+                  "attack": args.attack, "replace_boost": args.replace_boost,
                   "straggler_prob": args.straggler_prob, "seed": args.seed}
-    agg_opts = ({"trim": args.trim_frac}
-                if args.aggregator == "trimmed_mean" else None)
+    trace = None
+    if args.trace is not None:
+        trace = {"kind": args.trace, "period": args.trace_period,
+                 "seed": args.seed}
+        if args.trace == "diurnal":
+            trace["uptime"] = args.trace_uptime
+    agg_opts = None
+    if args.aggregator == "trimmed_mean":
+        agg_opts = {"trim": args.trim_frac}
+    elif args.aggregator == "krum":
+        agg_opts = {"f": args.krum_f}
+    elif args.aggregator == "multi_krum":
+        agg_opts = {"f": args.krum_f, "m": args.krum_m}
     t0 = time.time()
     result = run_experiment(
         args.method, cfg=cfg, chain=chain, fed=fed, task=args.task,
@@ -134,7 +192,10 @@ def main(argv=None):
         memory_constrained=not args.unconstrained_memory, verbose=True,
         mode=args.mode, scheduler_opts=sched or None,
         dp=dp, secure_agg=args.secure_agg or None, aggregator=args.aggregator,
-        aggregator_opts=agg_opts, faults=faults)
+        aggregator_opts=agg_opts, faults=faults, trace=trace,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_path=args.checkpoint_path, resume=args.resume,
+        halt_after=args.halt_after)
     strat, hist = result.strategy, result.history
     dt = time.time() - t0
     final = hist[-1] if hist else None
@@ -144,6 +205,21 @@ def main(argv=None):
     if dp and final is not None:
         print(f"== privacy spend: ε={final.dp_epsilon:.2f} at "
               f"δ={args.dp_delta:g}")
+    if result.scheduler is not None:
+        s = result.scheduler
+        if s.faults is not None:
+            print(f"== churn: fault_dropouts={s.fault_dropouts} "
+                  f"trace_dropouts={s.trace_dropouts} "
+                  f"redispatches={s.redispatches} "
+                  f"backoff_retries={s.backoff_retries}")
+        if args.checkpoint_every or args.resume:
+            # the crash-resume smoke parses this line: every compiled cohort
+            # fn must hold exactly one cache entry (no resume recompiles)
+            sizes = [f._cache_size()
+                     for cache in (strat.engine._cohort,
+                                   strat.engine._cohort_updates)
+                     for f in cache.values() if hasattr(f, "_cache_size")]
+            print(f"== jit-cache: fns={len(sizes)} sizes={sizes}")
 
     if args.save and hasattr(strat, "params"):
         from ..ckpt.io import save_train_state

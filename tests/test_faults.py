@@ -112,7 +112,203 @@ def test_norm_clip_bounds_contributions():
 
 def test_make_aggregator_unknown_raises():
     with pytest.raises(KeyError, match="unknown aggregator"):
-        make_aggregator("krum")
+        make_aggregator("geometric_median")
+
+
+# --------------------------------------------------------------------- krum
+def test_krum_hand_computed_selection():
+    """Blanchard et al. on scalars x = [-1, -0.4, 0, 0.5, 100] with f = 1:
+    k = C − f − 2 = 2 nearest peers per row gives scores
+    1.36 / 0.52 / 0.41 / 1.06 / huge — Krum keeps x = 0.0, and multi-Krum
+    with m = 2 averages the two best {0.0, −0.4} → −0.2."""
+    t0 = {"a": jnp.zeros((1,), jnp.float32)}
+    d = {"a": jnp.asarray([-1.0, -0.4, 0.0, 0.5, 100.0],
+                          jnp.float32)[:, None]}
+    w = jnp.ones((5,), jnp.float32)
+    got = make_aggregator("krum", f=1)(t0, d, w, {})
+    assert np.allclose(np.asarray(got["a"]), [0.0], atol=1e-6)
+    got2 = make_aggregator("multi_krum", f=1, m=2)(t0, d, w, {})
+    assert np.allclose(np.asarray(got2["a"]), [-0.2], atol=1e-6)
+
+
+def test_krum_ignores_sample_weights_and_defaults():
+    """Selection is distance-based: a huge sample count must not buy the
+    outlier in.  f=0 auto-sizes to (C−3)//2; tiny cohorts fall back to a
+    uniform mean (no pairwise geometry to select on)."""
+    t0 = {"a": jnp.zeros((1,), jnp.float32)}
+    d = {"a": jnp.asarray([-1.0, -0.4, 0.0, 0.5, 100.0],
+                          jnp.float32)[:, None]}
+    w = jnp.asarray([1.0, 1.0, 1.0, 1.0, 1e6], jnp.float32)
+    got = make_aggregator("krum")(t0, d, w, {})
+    assert abs(float(got["a"][0])) <= 1.0      # outlier never selected
+    tiny = make_aggregator("krum")(
+        t0, {"a": jnp.asarray([[1.0], [3.0]], jnp.float32)},
+        jnp.asarray([1.0, 9.0], jnp.float32), {})
+    assert np.allclose(np.asarray(tiny["a"]), [2.0], atol=1e-6)
+
+
+def test_multi_krum_neutralizes_outlier_stack():
+    deltas, honest = _cohort_with_outlier()
+    t0 = {"w": jnp.zeros((6, 2), jnp.float32)}
+    got = make_aggregator("multi_krum", f=1)(t0, deltas,
+                                             jnp.ones(5, jnp.float32), None)
+    lo, hi = jnp.min(honest["w"], axis=0), jnp.max(honest["w"], axis=0)
+    assert bool(jnp.all((got["w"] >= lo - 1e-6) & (got["w"] <= hi + 1e-6)))
+
+
+# ------------------------------------------------- model replacement attack
+def test_replace_rows_blends_marked_rows_only():
+    from repro.fed.faults import replace_rows
+    deltas = {"w": jnp.ones((3, 2), jnp.float32)}
+    t0 = {"w": jnp.zeros((2,), jnp.float32)}
+    target = {"w": jnp.asarray([2.0, -2.0], jnp.float32)}
+    out = jax.jit(replace_rows)(deltas, jnp.asarray([0.0, 1.0, 0.0]),
+                                t0, target, jnp.float32(3.0))
+    assert np.allclose(out["w"][0], [1.0, 1.0])
+    assert np.allclose(out["w"][1], [6.0, -6.0])   # 3·(target − 0)
+    assert np.allclose(out["w"][2], [1.0, 1.0])
+
+
+def test_replacement_target_fixed_and_dtype_shaped():
+    b = ClientBehavior(byzantine_frac=0.5, attack="replacement", seed=9)
+    m = FaultModel(b, 4)
+    like = {"a": jnp.zeros((2, 3), jnp.bfloat16), "b": jnp.zeros((4,))}
+    t1, t2 = m.replacement_target(like), m.replacement_target(like)
+    assert t1 is t2                               # cached per structure
+    assert t1["a"].dtype == jnp.bfloat16 and t1["a"].shape == (2, 3)
+    fresh = FaultModel(b, 4).replacement_target(like)
+    assert np.array_equal(np.asarray(t1["b"]), np.asarray(fresh["b"]))
+
+
+def test_unknown_attack_rejected():
+    with pytest.raises(ValueError, match="unknown attack"):
+        FaultModel(ClientBehavior(attack="label_flip"), 4)
+
+
+def test_replacement_attack_degrades_fedavg_but_not_multi_krum():
+    """The ISSUE 7 acceptance gate: one byzantine client in a 5-cohort
+    steering the aggregate toward a random target wrecks plain FedAvg,
+    while multi-Krum's distance selection excludes the poisoned row and
+    stays at the clean run's loss."""
+    faults = {"byzantine_frac": 0.2, "attack": "replacement",
+              "replace_boost": 3.0, "seed": 1}
+    kw = dict(rounds=3, mode="semisync",
+              scheduler_opts={"deadline_quantile": 1.0})
+    fed = FedConfig(n_clients=6, clients_per_round=5, seed=3)
+    run = lambda **k: run_experiment(
+        "full_adapters", cfg=CFG, chain=CHAIN, fed=fed, batch_size=4,
+        memory_constrained=False, eval_every=3, **kw, **k)
+    clean = run()
+    attacked = run(faults=faults)
+    defended = run(faults=faults, aggregator="multi_krum",
+                   aggregator_opts={"f": 1})
+    assert attacked.history[-1].loss > clean.history[-1].loss + 1.0
+    assert defended.history[-1].loss <= clean.history[-1].loss + 0.25
+
+
+def test_replacement_attack_rejects_seed_space_updates():
+    """FedKSeed uploads seed-space coefficients, not trainable-shaped
+    deltas — there is no trainable to replace, and the blend must refuse
+    loudly instead of corrupting silently."""
+    sim = build_sim()
+    strat = make_strategy("fedkseed", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="async",
+                         faults=ClientBehavior(byzantine_frac=0.4,
+                                               attack="replacement", seed=2))
+    with pytest.raises(ValueError, match="trainable-shaped"):
+        sched.run(1, eval_every=1)
+
+
+# -------------------------------------------- secure agg × robust aggregator
+def test_secure_agg_rejects_robust_aggregator_both_orders():
+    """PR 6 composition gap: a robust aggregator needs plaintext per-client
+    updates, which masked uploads never reveal — both configuration orders
+    must refuse."""
+    from repro.fed.privacy import SecureAggConfig, enable_secure_agg
+    # order 1: aggregator first, then enable_secure_agg
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    strat.aggregator = "krum"
+    with pytest.raises(ValueError, match="krum"):
+        enable_secure_agg(strat, SecureAggConfig(cohort=3))
+    # order 2: secure first, then aggregator — caught at scheduler build
+    sim = build_sim()
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    enable_secure_agg(strat, SecureAggConfig(cohort=3))
+    strat.aggregator = "multi_krum"
+    with pytest.raises(ValueError, match="plaintext"):
+        FedScheduler(sim, strat, mode="semisync")
+    # ... and at the sync round path
+    with pytest.raises(ValueError, match="plaintext"):
+        strat.round(sim, sim.clients[:3], 0)
+
+
+# ------------------------------------------------------ availability traces
+def test_trace_generators_schema_and_determinism():
+    from repro.data.partition import (diurnal_traces, flaky_traces,
+                                      make_trace)
+    for tr in (diurnal_traces(8, period=100.0, seed=5),
+               flaky_traces(8, period=100.0, seed=5)):
+        assert len(tr.windows) == 8 and tr.period == 100.0
+        for wins in tr.windows:
+            for (s, e) in wins:
+                assert 0.0 <= s < e <= tr.period
+            # windows are sorted and non-overlapping
+            flat = [x for w in wins for x in w]
+            assert flat == sorted(flat)
+    a = make_trace("diurnal", 4, period=50.0, seed=9)
+    b = make_trace("diurnal", 4, period=50.0, seed=9)
+    assert a == b
+    assert make_trace("diurnal", 4, seed=1) != make_trace("diurnal", 4,
+                                                          seed=2)
+    with pytest.raises(KeyError, match="unknown trace kind"):
+        make_trace("weekend", 4)
+
+
+def test_trace_availability_and_offline_cut_semantics():
+    from repro.data.partition import AvailabilityTrace
+    tr = AvailabilityTrace(windows=(((0.0, 0.4), (0.8, 1.0)),), period=1.0)
+    assert tr.available(0, 0.0) and tr.available(0, 0.39)
+    assert not tr.available(0, 0.4) and not tr.available(0, 0.5)
+    assert tr.available(0, 0.9) and tr.available(0, 1.85)  # cyclic
+    # cut inside the first window; back-to-back wrap (0.8→1.0→0.0→0.4)
+    # merges across the period boundary
+    assert tr.offline_cut(0, 0.0, 1.0) == pytest.approx(0.4)
+    assert tr.offline_cut(0, 0.85, 1.2) is None
+    assert tr.offline_cut(0, 0.85, 1.5) == pytest.approx(1.4)
+    # offline at dispatch → cut immediately
+    assert tr.offline_cut(0, 0.5, 0.7) == pytest.approx(0.5)
+
+
+def test_trace_churn_completes_via_backoff():
+    """Staggered short windows with gaps where *nobody* is online: the run
+    still reaches its commit target because dispatch failures park capped
+    exponential-backoff retries on the event heap, and mid-round window
+    closures become timeout events that re-dispatch."""
+    from repro.data.partition import AvailabilityTrace
+    win = (((0.0, 0.30),), ((0.0, 0.35),), ((0.55, 0.95),),
+           ((0.60, 1.00),), ((1.25, 1.60),), ((1.30, 1.65),))
+    tr = AvailabilityTrace(windows=win, period=2.0)
+    sim = build_sim()
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="async", trace=tr, buffer_size=2,
+                         concurrency=2, backoff_base=0.05, backoff_cap=0.4)
+    hist = sched.run(5, eval_every=5)
+    assert sched._done == 5 and sched.committed_updates == 10
+    assert sched.backoff_retries >= 1      # rode through an all-offline gap
+    assert sched.trace_dropouts >= 1       # a window closed mid-round
+    assert all(np.isfinite(m.loss) for m in hist)
+    for f in strat.engine._cohort_updates.values():
+        if hasattr(f, "_cache_size"):      # churn recovery never recompiles
+            assert f._cache_size() == 1
+
+
+def test_sync_mode_rejects_trace():
+    from repro.data.partition import make_trace
+    sim = build_sim()
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    with pytest.raises(ValueError, match="lockstep sync"):
+        FedScheduler(sim, strat, mode="sync",
+                     trace=make_trace("diurnal", 6))
 
 
 # --------------------------------------------------- event-heap fault paths
