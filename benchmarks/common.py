@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import (DATASETS, classification_batch,
                                   make_classification)
-from repro.fed.engine import FedSim, run_rounds
+from repro.fed.engine import FedSim
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 from repro.train.pretrain import pretrained_base
@@ -65,7 +66,7 @@ def run_method(method: str, cfg, chain: ChainConfig, sim, params,
     strat = make_strategy(method, cfg, chain, key, **(strategy_opts or {}))
     strat.params = params
     t0 = time.time()
-    hist = run_rounds(sim, strat, rounds, eval_every=max(1, rounds // 3))
+    hist = run_sync_rounds(sim, strat, rounds, eval_every=max(1, rounds // 3))
     wall = time.time() - t0
     best = max((h.acc for h in hist), default=0.0)
     return Result(method, best, rounds, wall,

@@ -9,7 +9,7 @@ import jax
 from .common import base_params, make_sim
 from repro.configs import get_config
 from repro.core.memory import peak_memory
-from repro.fed.engine import run_rounds
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
@@ -25,7 +25,7 @@ def run(rounds=16, fast=False):
         strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))
         strat.params = params
         t0 = time.time()
-        hist = run_rounds(sim, strat, rounds, eval_every=3)
+        hist = run_sync_rounds(sim, strat, rounds, eval_every=3)
         acc = max(h.acc for h in hist)
         mem = peak_memory(cfg, "chainfed", 8, spec.seq_len, window=Q,
                           l_start=strat.l_start)["total"]

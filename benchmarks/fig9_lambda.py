@@ -8,7 +8,7 @@ import jax
 
 from .common import base_params, make_sim
 from repro.configs import get_config
-from repro.fed.engine import run_rounds
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
@@ -24,7 +24,7 @@ def run(rounds=16, fast=False):
         strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))
         strat.params = params
         t0 = time.time()
-        hist = run_rounds(sim, strat, rounds, eval_every=3)
+        hist = run_sync_rounds(sim, strat, rounds, eval_every=3)
         acc = max(h.acc for h in hist)
         table[lam] = acc
         rows.append(f"fig9/lam={lam},{(time.time()-t0)/rounds*1e6:.0f},"

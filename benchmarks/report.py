@@ -157,6 +157,34 @@ def scheduler_modes_table(path=ROUND_JSON):
     return "\n".join(lines)
 
 
+def population_table(path=ROUND_JSON):
+    """§Population-scaling table from the ``population`` section of
+    BENCH_round_throughput.json (written by ``benchmarks.bench_round
+    --population``): events/s and resident client-state bytes of the lazy
+    pool, flat vs hierarchical, as the population grows 10³ → 10⁶; None
+    when absent."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    doc = json.loads(path.read_text())
+    pop = doc.get("population")
+    if not pop:
+        return None
+    lines = ["| population | flat events/s | hier events/s (silos) | "
+             "hier/flat | max resident clients | max resident bytes |",
+             "|---|---|---|---|---|---|"]
+    for n in sorted(pop, key=int):
+        r = pop[n]
+        lines.append(
+            f"| {int(n):,} | {r['flat']['events_per_s']:.1f} "
+            f"| {r['hier']['events_per_s']:.1f} "
+            f"({r['hier']['n_silos']}) "
+            f"| {r['hier_vs_flat']:.2f}× "
+            f"| {r['flat']['max_resident']} "
+            f"| {r['flat']['max_resident_bytes']:,} |")
+    return "\n".join(lines)
+
+
 def serve_throughput_table(path=SERVE_JSON):
     """§Serve-throughput table from BENCH_serve_throughput.json (written by
     ``benchmarks.bench_serve``); None when the artifact is absent."""
@@ -225,6 +253,10 @@ def main():
     if mt is not None:
         print("\n## §Scheduler modes (event-driven runtime, virtual clock)\n")
         print(mt)
+    pop = population_table()
+    if pop is not None:
+        print("\n## §Population scaling (lazy pool, flat vs hierarchical)\n")
+        print(pop)
     st = serve_throughput_table()
     if st is not None:
         print("\n## §Serve throughput (single host)\n")

@@ -11,7 +11,7 @@ import jax
 
 from .common import Result, base_params, csv_row, make_sim
 from repro.configs import get_config
-from repro.fed.engine import run_rounds
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
@@ -40,7 +40,7 @@ def run(rounds=18, fast=False):
                                       use_foat=(T < 1.0))
                 strat.params = params
                 t0 = time.time()
-                hist = run_rounds(sim, strat, rounds, eval_every=2)
+                hist = run_sync_rounds(sim, strat, rounds, eval_every=2)
                 wall = time.time() - t0
                 accs[iid] = (max(h.acc for h in hist), hist, wall,
                              strat.comm_bytes_per_round(),

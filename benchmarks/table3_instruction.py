@@ -16,7 +16,8 @@ from .common import csv_row
 from repro.configs import get_config
 from repro.core.memory import peak_memory
 from repro.data.synthetic import lm_batch, make_instruction
-from repro.fed.engine import FedSim, run_rounds
+from repro.fed.engine import FedSim
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 from repro.train.pretrain import pretrained_base
@@ -48,7 +49,7 @@ def run(rounds=24, fast=False):
     fa = make_strategy("full_adapters", cfg, chain0, jax.random.PRNGKey(0))
     fa.params = params
     t0 = time.time()
-    hist = run_rounds(sim, fa, rounds, eval_every=3)
+    hist = run_sync_rounds(sim, fa, rounds, eval_every=3)
     fa_acc = max(h.acc for h in hist)
     fa_mem = peak_memory(cfg, "full_adapters", 16, 32)["total"]
     table["full_adapters"] = {"acc": fa_acc, "mem_red": 1.0}
@@ -60,7 +61,7 @@ def run(rounds=24, fast=False):
         strat = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(0))
         strat.params = params
         t0 = time.time()
-        hist = run_rounds(sim, strat, rounds, eval_every=3)
+        hist = run_sync_rounds(sim, strat, rounds, eval_every=3)
         acc = max(h.acc for h in hist)
         mem = peak_memory(cfg, "chainfed", 16, 32, window=Q,
                           l_start=strat.l_start)["total"]

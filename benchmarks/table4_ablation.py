@@ -9,7 +9,7 @@ import jax
 
 from .common import base_params, make_sim
 from repro.configs import get_config
-from repro.fed.engine import run_rounds
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig
 
@@ -36,7 +36,7 @@ def run(rounds=16, fast=False):
                                       jax.random.PRNGKey(0))
                 strat.params = params
                 t0 = time.time()
-                hist = run_rounds(sim, strat, rounds, eval_every=3)
+                hist = run_sync_rounds(sim, strat, rounds, eval_every=3)
                 acc = max(h.acc for h in hist)
                 key = f"{ds}/{'iid' if iid else 'noniid'}"
                 table[(name, key)] = acc

@@ -18,7 +18,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.memory import peak_memory
 from repro.data.synthetic import lm_batch, make_instruction
-from repro.fed.engine import FedSim, run_rounds
+from repro.fed.engine import FedSim
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 
@@ -59,7 +60,7 @@ def main():
         t0 = time.time()
         strat = make_strategy(name, cfg, chain, jax.random.PRNGKey(0))
         strat.params = base
-        hist = run_rounds(sim, strat, rounds, eval_every=max(2, rounds // 5),
+        hist = run_sync_rounds(sim, strat, rounds, eval_every=max(2, rounds // 5),
                           verbose=True)
         mem = peak_memory(cfg, "chainfed" if name == "chainfed" else "full_adapters",
                           batch=16, seq=32, window=chain.window)

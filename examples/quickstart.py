@@ -10,7 +10,8 @@ import jax
 
 from repro.configs import get_config
 from repro.data.synthetic import DATASETS, classification_batch, make_classification
-from repro.fed.engine import FedSim, run_rounds
+from repro.fed.engine import FedSim
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 
@@ -38,7 +39,7 @@ def main():
     print(f"DLCT schedule: offsets {strat.schedule.offsets}, "
           f"window Q = {chain.window}")
 
-    hist = run_rounds(sim, strat, rounds=20, eval_every=4, verbose=True)
+    hist = run_sync_rounds(sim, strat, rounds=20, eval_every=4, verbose=True)
     print(f"\nfinal accuracy: {hist[-1].acc:.3f} "
           f"(comm {hist[-1].comm_bytes / 1024:.0f} KiB/round/client)")
 

@@ -207,6 +207,27 @@ def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
     return ad_layer * L   # full adapters / fedadapter / c2a / fwdllm
 
 
+def hierarchy_comm_bytes(payload: int, cohort: int, n_silos: int = 1) -> dict:
+    """Per-commit traffic split across aggregation tiers (ISSUE 8).
+
+    ``payload`` is one client's uplink bytes (``comm_bytes_per_round``).  In
+    the flat topology every update crosses the WAN to the server; with
+    ``n_silos`` edge aggregators each update only crosses the cheap edge
+    link, and the WAN carries one pre-aggregated partial sum per silo that
+    contributed to the commit — the backhaul shrinks from ``cohort`` to
+    ``min(cohort, n_silos)`` payloads.  Returns ``{edge, silo, total}``
+    bytes; ``edge`` is 0 in the flat topology (clients upload straight to
+    the server, accounted under ``silo``/WAN).  The hierarchical case
+    matches the scheduler's live ``tier_bytes`` accounting; the flat case
+    is the WAN baseline it is compared against."""
+    cohort = max(0, cohort)
+    if n_silos <= 1:
+        return {"edge": 0, "silo": payload * cohort, "total": payload * cohort}
+    wan = payload * min(cohort, n_silos)
+    return {"edge": payload * cohort, "silo": wan,
+            "total": payload * cohort + wan}
+
+
 def privacy_comm_overhead(cohort: int, secure: bool = False,
                           dp: bool = False, key_bytes: int = 32) -> int:
     """Per-client per-round uplink overhead of the privacy machinery.

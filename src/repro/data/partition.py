@@ -1,10 +1,13 @@
 """Federated data partitioning: IID and Dirichlet non-IID (paper §5.1,
-α = 1), per-client batch iteration, and device-profile sampling (the
-heterogeneous edge population the event-driven runtime schedules over)."""
+α = 1), per-client batch iteration, device-profile sampling (the
+heterogeneous edge population the event-driven runtime schedules over), and
+the lazy ``ClientPool`` that makes planet-scale populations representable —
+clients are synthesized deterministically from ``(seed, cid)`` at dispatch
+time and released after commit, so resident state is O(active cohort)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -222,7 +225,7 @@ def make_trace(kind: str, n_clients: int, **kw) -> AvailabilityTrace:
 class ClientSampler:
     """Iterates minibatches from a client's shard, reshuffling per epoch."""
 
-    def __init__(self, shard: np.ndarray, batch_size: int, seed: int = 0):
+    def __init__(self, shard: np.ndarray, batch_size: int, seed=0):
         self.shard = shard
         self.bs = min(batch_size, max(1, len(shard)))
         self.rng = np.random.default_rng(seed)
@@ -236,3 +239,141 @@ class ClientSampler:
         sel = self._order[self._pos:self._pos + self.bs]
         self._pos += self.bs
         return self.shard[sel]
+
+
+# ============================================================ lazy client pool
+class ClientPool:
+    """Lazy client population (ISSUE 8): nothing is materialized up front.
+
+    A client is *synthesized* — data shard, minibatch rng stream,
+    ``DeviceProfile`` — deterministically from ``(seed, cid)`` the moment it
+    is dispatched (``acquire``) and torn down after its update commits
+    (``release``), so the resident set is O(active cohort) however large
+    ``n_clients`` is; a 10⁶-client population costs a dict of a few dozen
+    entries, not 10⁶ ``Client`` objects.
+
+    Determinism contract: the synthesis factory receives ``(cid, visit)``
+    where ``visit`` counts this cid's materializations so far (the **pool
+    cursor** — checkpointed, so kill/resume replays the identical stream).
+    Static per-client facts (shard membership, budget, profile) must depend
+    only on ``(seed, cid)``; only the minibatch rng advances with ``visit``.
+    Because each cid owns its cursor, the synthesized client is bit-identical
+    regardless of when — and interleaved with whom — it is dispatched.
+
+    ``acquire`` refcounts residency (a cid can be held by an in-flight
+    entry *and* a probe), ``peek`` rebuilds a resident-equivalent handle
+    without advancing the cursor (checkpoint restore of in-flight entries —
+    their dispatch already advanced it pre-crash), and
+    ``resident_bytes``/``max_resident`` expose the O(active cohort) bound
+    ``bench_round --population`` gates on."""
+
+    def __init__(self, n_clients: int, synth: Callable[[int, int], object],
+                 nbytes: Optional[Callable[[object], int]] = None):
+        self.n_clients = int(n_clients)
+        self._synth = synth
+        self._nbytes = nbytes or (lambda c: 0)
+        self._visits = {}          # cid -> materializations so far (cursor)
+        self._resident = {}        # cid -> [client, refcount]
+        self.max_resident = 0      # peak resident client count
+        self.max_resident_bytes = 0
+        self._resident_bytes = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def _admit(self, cid: int, client) -> None:
+        self._resident[cid] = [client, 1]
+        self._resident_bytes += self._nbytes(client)
+        self.max_resident = max(self.max_resident, len(self._resident))
+        self.max_resident_bytes = max(self.max_resident_bytes,
+                                      self._resident_bytes)
+
+    def acquire(self, cid: int):
+        """Materialize ``cid`` at its current cursor (advancing it), or bump
+        the refcount when already resident."""
+        ent = self._resident.get(cid)
+        if ent is not None:
+            ent[1] += 1
+            return ent[0]
+        visit = self._visits.get(cid, 0)
+        self._visits[cid] = visit + 1
+        client = self._synth(cid, visit)
+        self._admit(cid, client)
+        return client
+
+    def peek(self, cid: int):
+        """Resident-equivalent handle *without* advancing the cursor: the
+        client as its latest dispatch synthesized it (static facts are
+        visit-independent; the sampler stream restarts at that visit).  Used
+        to rehydrate checkpoint-restored in-flight entries, whose original
+        dispatch already advanced the cursor before the crash."""
+        ent = self._resident.get(cid)
+        if ent is not None:
+            ent[1] += 1
+            return ent[0]
+        client = self._synth(cid, max(0, self._visits.get(cid, 1) - 1))
+        self._admit(cid, client)
+        return client
+
+    def release(self, cid: int) -> None:
+        ent = self._resident.get(cid)
+        if ent is None:
+            return
+        ent[1] -= 1
+        if ent[1] <= 0:
+            self._resident_bytes -= self._nbytes(ent[0])
+            del self._resident[cid]
+
+    # ------------------------------------------------------------- sampling
+    def sample(self, k: int, rng: np.random.Generator, busy=frozenset(),
+               eligible: Optional[Callable[[int], bool]] = None,
+               max_tries: Optional[int] = None) -> list:
+        """Rejection-sample ``k`` distinct eligible, non-busy cids and
+        acquire them.  Candidate cids come from ``rng`` (the caller's
+        sampling stream — deterministic given its state) and eligibility is
+        tested with the cheap per-cid predicate, never by enumerating the
+        population: the only O(population) quantity is the integer range the
+        candidates are drawn from."""
+        n = self.n_clients
+        k = max(0, min(k, n - len(busy)))
+        got, chosen = [], set()
+        tries, cap = 0, max_tries if max_tries is not None else max(64, 32 * k)
+        while len(got) < k and tries < cap:
+            cid = int(rng.integers(n))
+            tries += 1
+            if cid in busy or cid in chosen:
+                continue
+            if eligible is not None and not eligible(cid):
+                continue
+            chosen.add(cid)
+            got.append(self.acquire(cid))
+        return got
+
+    # ------------------------------------------------------------ telemetry
+    @property
+    def resident(self) -> int:
+        return len(self._resident)
+
+    def resident_bytes(self) -> int:
+        return self._resident_bytes
+
+    # -------------------------------------------------- durable cursor state
+    def state_dict(self) -> dict:
+        """The pool cursor: per-cid visit counts (only touched cids — still
+        O(participants ever dispatched), never O(population)).  Residency is
+        *not* state — restored in-flight entries re-acquire via ``peek``."""
+        cids = np.fromiter(self._visits.keys(), np.int64,
+                           count=len(self._visits))
+        visits = np.fromiter(self._visits.values(), np.int64,
+                             count=len(self._visits))
+        order = np.argsort(cids, kind="stable")
+        return {"cids": cids[order], "visits": visits[order],
+                "max_resident": int(self.max_resident),
+                "max_resident_bytes": int(self.max_resident_bytes)}
+
+    def load_state_dict(self, s: dict) -> None:
+        self._visits = {int(c): int(v)
+                        for c, v in zip(np.asarray(s["cids"]),
+                                        np.asarray(s["visits"]))}
+        self.max_resident = int(s.get("max_resident", 0))
+        self.max_resident_bytes = int(s.get("max_resident_bytes", 0))
+        self._resident.clear()
+        self._resident_bytes = 0

@@ -21,6 +21,7 @@ from ..strategies import Strategy, TrainablePlan
 class FedKSeed(Strategy):
     name = "fedkseed"
     memory_method = "fedkseed"
+    grad_programs = ("kseed",)
     K = 8
     EPS = 1e-3
 

@@ -31,6 +31,7 @@ from ..strategies import Strategy, TrainablePlan
 class FwdLLM(Strategy):
     name = "fwdllm"
     memory_method = "fwdllm"
+    grad_programs = ("spsa", "jvp")
     N_PERTURB = 4
     EPS = 1e-3
 

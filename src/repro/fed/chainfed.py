@@ -72,7 +72,7 @@ class ChainFed(Strategy):
         self._foat_done = True
         if not self.use_foat:
             return
-        clients = sim.clients[:min(8, len(sim.clients))]
+        clients = sim.probe_clients(8)
         # one stacked (C, b, ...) evaluation instead of C host-side batches —
         # cohort_batches assembles the stack in numpy (one transfer per leaf)
         # and pads short clients to the cohort batch size (padding repeats a
@@ -80,6 +80,7 @@ class ChainFed(Strategy):
         stacked = sim.cohort_batches(clients, 1)   # (C, 1, b, ...) leaves
         batches = {k: v[:, 0] for k, v in stacked.items()}
         weights = [c.n_samples for c in clients]
+        sim.release_clients(clients)
         self.setup_foat(batches, weights)
 
     def setup_foat(self, client_batches, weights=None):

@@ -112,9 +112,15 @@ def _pending_from_state(d: dict, plans, buckets, clients) -> _Pending:
 # -------------------------------------------------------------------- sim
 def _sim_state(sim) -> dict:
     """The testbed's mutable pieces: the server-side sampling generator and
-    each client's minibatch sampler (generator + epoch permutation +
-    cursor).  Shards, budgets and profiles are derived deterministically at
-    construction and never mutate."""
+    — eager path — each client's minibatch sampler (generator + epoch
+    permutation + cursor).  Shards, budgets and profiles are derived
+    deterministically at construction and never mutate.  The lazy path has
+    no client list: its durable state is the pool *cursor* (per-cid visit
+    counts) — samplers are visit-seeded, so replaying a visit reproduces
+    its draws without storing any sampler state."""
+    if sim.lazy:
+        return {"rng": sim.rng.bit_generator.state,
+                "pool": sim.pool.state_dict()}
     return {"rng": sim.rng.bit_generator.state,
             "samplers": [
                 {"rng": c.sampler.rng.bit_generator.state,
@@ -125,6 +131,17 @@ def _sim_state(sim) -> dict:
 
 def _load_sim_state(sim, s: dict) -> None:
     sim.rng.bit_generator.state = s["rng"]
+    if sim.lazy:
+        if "pool" not in s:
+            raise ValueError(
+                "checkpoint was taken from an eager (materialized) sim but "
+                "this run is configured lazy — config mismatch")
+        sim.pool.load_state_dict(s["pool"])
+        return
+    if "samplers" not in s:
+        raise ValueError(
+            "checkpoint was taken from a lazy ClientPool sim but this run "
+            "is configured eager — config mismatch")
     if len(s["samplers"]) != len(sim.clients):
         raise ValueError(
             f"checkpoint has {len(s['samplers'])} client samplers but the "
@@ -172,13 +189,22 @@ def scheduler_state(sched) -> dict:
                  "seed": int(sched.sim.fed.seed),
                  "bucket_pad": int(sched.bucket_pad),
                  "concurrency": int(sched.concurrency),
-                 "buffer_size": int(sched.buffer_size)},
+                 "buffer_size": int(sched.buffer_size),
+                 "lazy": bool(sched.sim.lazy),
+                 "pad_policy": sched.pad_policy,
+                 "n_silos": (int(sched.topology.n_silos)
+                             if sched.topology is not None else 1)},
+        "spec": (sched.spec.to_dict() if sched.spec is not None else None),
         "sched": {"clock": float(sched.clock),
                   "version": int(sched.version),
                   "seq": int(sched._seq),
                   "committed_updates": int(sched.committed_updates),
                   "fault_dropouts": int(sched.fault_dropouts),
                   "trace_dropouts": int(sched.trace_dropouts),
+                  "silo_dropouts": int(sched.silo_dropouts),
+                  "events": int(sched.events),
+                  "tier_bytes": {k: int(v)
+                                 for k, v in sched.tier_bytes.items()},
                   "redispatches": int(sched.redispatches),
                   "backoff_retries": int(sched.backoff_retries),
                   "round": int(sched._round),
@@ -186,6 +212,8 @@ def scheduler_state(sched) -> dict:
                   "started": bool(sched._started),
                   "async_seeded": bool(sched._async_seeded),
                   "lat_window": [float(x) for x in sched._lat_window]},
+        "silo": (sched._silo.state_dict()
+                 if sched._silo is not None else None),
         "plans": [plan_state(p) for p in plans],
         "buckets": buckets,
         "heap": heap, "buffered": buffered, "carried": carried,
@@ -202,6 +230,22 @@ def _check(meta, key, got):
             f"{meta[key]!r}, this run is configured with {got!r}")
 
 
+def _check_spec(sched, s: dict) -> None:
+    """Whole-configuration validation (ISSUE 8): a checkpoint written under
+    the spec API refuses to resume into a scheduler whose spec differs on
+    *any* field — not just the load-bearing handful in ``meta``."""
+    saved = s.get("spec")
+    if saved is None or sched.spec is None:
+        return
+    from .spec import ExperimentSpec
+    mismatch = sched.spec.diff(ExperimentSpec.from_dict(saved))
+    if mismatch:
+        lines = "; ".join(f"{k}: checkpoint={a!r}, run={b!r}"
+                          for k, (a, b) in sorted(mismatch.items()))
+        raise ValueError(
+            f"checkpoint spec mismatch — refusing to resume ({lines})")
+
+
 def load_scheduler_state(sched, s: dict) -> None:
     meta = s["meta"]
     for key, got in (("mode", sched.mode),
@@ -211,16 +255,48 @@ def load_scheduler_state(sched, s: dict) -> None:
                       int(sched.sim.fed.clients_per_round)),
                      ("seed", int(sched.sim.fed.seed))):
         _check(meta, key, got)
+    # PR-8 meta keys — guarded so pre-hierarchy checkpoints still load
+    if "lazy" in meta:
+        _check(meta, "lazy", bool(sched.sim.lazy))
+    if "pad_policy" in meta:
+        _check(meta, "pad_policy", sched.pad_policy)
+    if "n_silos" in meta:
+        _check(meta, "n_silos", int(sched.topology.n_silos)
+               if sched.topology is not None else 1)
+    _check_spec(sched, s)
     plans = [plan_from_state(d) for d in s["plans"]]
     buckets = s["buckets"]
-    clients = {c.cid: c for c in sched.sim.clients}
     sc = s["sched"]
+    if sched.sim.lazy:
+        # the pool cursor must restore *before* in-flight entries rehydrate:
+        # peek() re-synthesizes each pending client at the visit its
+        # pre-crash dispatch already advanced to
+        _load_sim_state(sched.sim, s["sim"])
+        pool = sched.sim.pool
+
+        class _LazyClients:
+            def __getitem__(self, cid):
+                return pool.peek(cid)
+        clients = _LazyClients()
+    else:
+        clients = {c.cid: c for c in sched.sim.clients}
     sched.clock = float(sc["clock"])
     sched.version = int(sc["version"])
     sched._seq = int(sc["seq"])
     sched.committed_updates = int(sc["committed_updates"])
     sched.fault_dropouts = int(sc["fault_dropouts"])
     sched.trace_dropouts = int(sc["trace_dropouts"])
+    sched.silo_dropouts = int(sc.get("silo_dropouts", 0))
+    sched.events = int(sc.get("events", 0))
+    sched.tier_bytes = {k: int(v)
+                        for k, v in sc.get("tier_bytes",
+                                           {"edge": 0, "silo": 0}).items()}
+    if s.get("silo") is not None:
+        if sched._silo is None:
+            raise ValueError(
+                "checkpoint carries cross-silo tier state but this run is "
+                "configured flat — config mismatch")
+        sched._silo.load_state_dict(s["silo"])
     sched.redispatches = int(sc["redispatches"])
     sched.backoff_retries = int(sc["backoff_retries"])
     sched._round = int(sc["round"])
@@ -239,7 +315,8 @@ def load_scheduler_state(sched, s: dict) -> None:
                       for d in s["carried"]]
     sched._history = [RoundMetrics(**d) for d in s["history"]]
     sched.strategy.load_state_dict(s["strategy"])
-    _load_sim_state(sched.sim, s["sim"])
+    if not sched.sim.lazy:   # lazy restored first (pool cursor before peek)
+        _load_sim_state(sched.sim, s["sim"])
 
 
 # ------------------------------------------------------------------- files

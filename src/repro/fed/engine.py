@@ -14,9 +14,9 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from ..core.memory import peak_memory
-from ..data.partition import (ClientSampler, DeviceProfile,
+from ..data.partition import (ClientPool, ClientSampler, DeviceProfile,
                               dirichlet_partition, iid_partition,
-                              sample_profiles)
+                              profile_tier, sample_profiles)
 from ..models.config import FedConfig, ModelConfig
 
 
@@ -37,24 +37,52 @@ class Client:
 
 
 class FedSim:
-    """Builds the client population and drives rounds for a Strategy."""
+    """Builds the client population and drives rounds for a Strategy.
+
+    ``lazy=True`` (ISSUE 8) switches the population to a ``ClientPool``:
+    no per-client state exists until a client is dispatched — its memory
+    budget, ``DeviceProfile`` and data shard are synthesized
+    deterministically from ``(seed, cid)`` on ``pool.acquire`` and torn
+    down on release, so resident state is O(active cohort) and
+    ``fed.n_clients`` can be 10⁶.  The eager path is unchanged (same rng
+    draws, bit-identical histories); lazy shards subsample the corpus
+    per-cid (``shard_size`` examples each) instead of partitioning it,
+    because a partition is itself an O(population) object."""
 
     def __init__(self, cfg: ModelConfig, fed: FedConfig, tokens, labels,
                  batch_fn: Callable, batch_size: int = 8,
-                 budget_range=(0.10, 1.30), memory_constrained: bool = True):
+                 budget_range=(0.10, 1.30), memory_constrained: bool = True,
+                 lazy: bool = False, shard_size: Optional[int] = None):
         self.cfg, self.fed = cfg, fed
         self.tokens, self.labels, self.batch_fn = tokens, labels, batch_fn
         self.rng = np.random.default_rng(fed.seed)
+        self.memory_constrained = memory_constrained
+        self.batch_size = batch_size
+        self.seq_len = tokens.shape[1]
+        self.lazy = bool(lazy)
+        # memory budgets span [lo, hi] × the full-adapter footprint — mirrors
+        # the paper's 4–12 GB devices vs ~27 GB LLaMA2-7B requirement
+        self._ref = peak_memory(cfg, "full_adapters", batch_size,
+                                tokens.shape[1])["total"]
+        self._budget_range = budget_range
+        if self.lazy:
+            self.shard_size = int(shard_size or min(len(tokens),
+                                                    max(2 * batch_size, 8)))
+            self.clients = None
+            self.pool = ClientPool(
+                fed.n_clients, self._synth_client,
+                nbytes=lambda c: int(c.sampler.shard.nbytes
+                                     + c.sampler._order.nbytes))
+            return
+        self.pool = None
+        self.shard_size = None
         n = len(tokens)
         if fed.iid:
             shards = iid_partition(n, fed.n_clients, fed.seed)
         else:
             shards = dirichlet_partition(labels, fed.n_clients,
                                          fed.dirichlet_alpha, fed.seed)
-        # memory budgets span [lo, hi] × the full-adapter footprint — mirrors
-        # the paper's 4–12 GB devices vs ~27 GB LLaMA2-7B requirement
-        ref = peak_memory(cfg, "full_adapters", batch_size,
-                          tokens.shape[1])["total"]
+        ref = self._ref
         lo, hi = budget_range
         budgets = (self.rng.uniform(lo, hi, fed.n_clients) * ref).astype(np.int64)
         # device profiles are deterministic in (budget, seed) and drawn from
@@ -65,12 +93,76 @@ class FedSim:
             Client(i, ClientSampler(shards[i], batch_size, fed.seed + i),
                    len(shards[i]), int(budgets[i]), profiles[i])
             for i in range(fed.n_clients)]
-        self.memory_constrained = memory_constrained
-        self.batch_size = batch_size
-        self.seq_len = tokens.shape[1]
+
+    @property
+    def n_clients(self) -> int:
+        """Population size without touching (or requiring) a client list."""
+        return self.fed.n_clients
+
+    # ------------------------------------------------------- lazy synthesis
+    def lazy_budget(self, cid: int) -> int:
+        """A cid's memory budget from ``(seed, cid)`` alone — the cheap
+        eligibility predicate rejection sampling tests before paying for a
+        full materialization.  Must draw exactly like ``_synth_client``."""
+        lo, hi = self._budget_range
+        crng = np.random.default_rng((self.fed.seed, cid, 0xC11E27))
+        return int(crng.uniform(lo, hi) * self._ref)
+
+    def _synth_client(self, cid: int, visit: int) -> Client:
+        """Deterministic client synthesis: budget, profile and shard depend
+        only on ``(seed, cid)``; the minibatch sampler is seeded with
+        ``(seed, cid, visit)`` so the k-th dispatch of a cid draws the same
+        batches regardless of dispatch order across the population."""
+        lo, hi = self._budget_range
+        crng = np.random.default_rng((self.fed.seed, cid, 0xC11E27))
+        budget = int(crng.uniform(lo, hi) * self._ref)
+        name, flops, bw = profile_tier(budget / max(1, self._ref))
+        jf, jb = 1.0 + 0.2 * crng.uniform(-1, 1, 2)
+        profile = DeviceProfile(tier=name, flops=flops * float(jf),
+                                bandwidth=bw * float(jb), memory=budget)
+        size = min(self.shard_size, len(self.tokens))
+        shard = np.sort(crng.choice(len(self.tokens), size, replace=False))
+        sampler = ClientSampler(shard, self.batch_size,
+                                seed=(self.fed.seed, cid, visit, 0x5A11))
+        return Client(cid, sampler, len(shard), budget, profile)
+
+    def pool_sample(self, k: int, mem_method: str, mem_kw: dict,
+                    busy=frozenset(), avail=None) -> List[Client]:
+        """Lazy-path sampling: rejection-sample eligible cids from the pool
+        (memory wall + caller availability predicate) and materialize only
+        the accepted ones."""
+        need = (peak_memory(self.cfg, mem_method, self.batch_size,
+                            self.seq_len, **mem_kw)["total"]
+                if self.memory_constrained else 0)
+
+        def ok(cid):
+            if need and self.lazy_budget(cid) < need:
+                return False
+            return avail is None or avail(cid)
+
+        return self.pool.sample(k, self.rng, busy=busy, eligible=ok)
+
+    def release_clients(self, clients) -> None:
+        """Return dispatched clients to the pool (no-op on the eager path)."""
+        if self.lazy and clients:
+            for c in clients:
+                self.pool.release(c.cid)
+
+    def probe_clients(self, k: int) -> List[Client]:
+        """The first ``k`` cids, for one-off population probes (chainfed's
+        FOAT boundary scan).  Lazy probes must be handed back via
+        ``release_clients`` when done."""
+        k = min(k, self.n_clients)
+        if not self.lazy:
+            return self.clients[:k]
+        return [self.pool.acquire(cid) for cid in range(k)]
 
     # ---------------------------------------------------------- participation
     def eligible(self, mem_method: str, **mem_kw) -> List[Client]:
+        if self.lazy:
+            raise RuntimeError(
+                "eligible() enumerates the population — the lazy ClientPool "
+                "path samples by rejection instead (pool_sample)")
         if not self.memory_constrained:
             return self.clients
         need = peak_memory(self.cfg, mem_method, self.batch_size,
@@ -78,6 +170,9 @@ class FedSim:
         return [c for c in self.clients if c.mem_budget >= need]
 
     def sample_clients(self, mem_method: str, **mem_kw) -> List[Client]:
+        if self.lazy:
+            return self.pool_sample(self.fed.clients_per_round, mem_method,
+                                    mem_kw)
         pool = self.eligible(mem_method, **mem_kw)
         if not pool:
             return []
@@ -160,15 +255,24 @@ class RoundMetrics:
                                 # model version (semisync carry / async)
     dp_epsilon: float = 0.0     # cumulative privacy spend (ε at the DP
                                 # config's δ) — 0 when DP is off
+    silo_comm_bytes: int = 0    # cumulative cross-silo→server tier bytes
+                                # (hierarchical topology only; 0 when flat)
 
 
 def run_rounds(sim: FedSim, strategy, rounds: int, eval_every: int = 5,
                verbose: bool = False) -> List[RoundMetrics]:
-    """Legacy lockstep driver — now a thin wrapper over the event-driven
-    ``FedScheduler`` in ``sync`` mode, which reproduces the historical
-    sample → local updates → aggregate → (eval) loop bit-identically while
-    also tracking each round's virtual wall-clock (the slowest sampled
-    device's compute + uplink time)."""
+    """Deprecated alias for ``FedScheduler(mode="sync").run`` — the single
+    driver code path since ISSUE 8.  It reproduces the historical sample →
+    local updates → aggregate → (eval) loop bit-identically while also
+    tracking each round's virtual wall-clock; call the scheduler (or
+    ``run_experiment``) directly in new code."""
+    import warnings
+
     from .runtime import FedScheduler
+    warnings.warn(
+        "run_rounds is deprecated: construct FedScheduler(sim, strategy, "
+        "mode='sync') (or call run_experiment) directly — run_rounds is a "
+        "thin alias and will be removed next release",
+        DeprecationWarning, stacklevel=2)
     return FedScheduler(sim, strategy, mode="sync").run(
         rounds, eval_every=eval_every, verbose=verbose)

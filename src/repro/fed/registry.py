@@ -62,15 +62,96 @@ def available_strategies() -> List[str]:
     return sorted(_REGISTRY)
 
 
-def make_strategy(name: str, cfg, chain, key, **opts):
-    """Construct a registered strategy.  ``opts`` override the registered
-    defaults and are passed to the class constructor."""
+# the strategy constructor's positional contract — everything else is a
+# spec knob the introspection surfaces and make_strategy validates
+_CTOR_ARGS = ("self", "cfg", "chain", "key")
+
+
+def _strategy_options(cls) -> dict:
+    """``{knob: default}`` accepted by ``cls``'s constructor beyond the
+    positional (cfg, chain, key) contract.  Empty dict when the constructor
+    takes **kwargs (options cannot be enumerated)."""
+    import inspect
+    sig = inspect.signature(cls.__init__)
+    opts = {}
+    for p in sig.parameters.values():
+        if p.name in _CTOR_ARGS or p.kind in (p.VAR_POSITIONAL,
+                                              p.VAR_KEYWORD):
+            continue
+        opts[p.name] = (None if p.default is inspect.Parameter.empty
+                        else p.default)
+    return opts
+
+
+def _accepts_var_kwargs(cls) -> bool:
+    import inspect
+    return any(p.kind is p.VAR_KEYWORD
+               for p in inspect.signature(cls.__init__).parameters.values())
+
+
+def describe_strategy(name: str) -> dict:
+    """Introspect one registered strategy: its spec knobs (constructor
+    options + registered-variant defaults), the gradient programs it can
+    run, and its memory/aggregation posture."""
     _ensure_builtins()
     if name not in _REGISTRY:
-        raise KeyError(f"unknown strategy {name!r}; available: "
-                       f"{', '.join(sorted(_REGISTRY))}")
+        raise KeyError(_unknown_strategy_msg(name))
     cls, defaults = _REGISTRY[name]
-    return cls(cfg, chain, key, **{**defaults, **opts})
+    doc = (cls.__doc__ or "").strip().splitlines()
+    return {
+        "name": name,
+        "class": cls.__name__,
+        "summary": doc[0] if doc else "",
+        "memory_method": cls.memory_method,
+        "grad_programs": tuple(getattr(cls, "grad_programs", ("ad",))),
+        "aggregator": cls.aggregator,
+        "secure_compatible": bool(cls.secure_compatible),
+        "options": _strategy_options(cls),
+        "defaults": dict(defaults),
+    }
+
+
+def list_strategies() -> List[dict]:
+    """``describe_strategy`` for every registered name — the registry's
+    introspection surface (``launch.train --list-strategies`` renders it)."""
+    return [describe_strategy(n) for n in available_strategies()]
+
+
+def _unknown_strategy_msg(name: str) -> str:
+    import difflib
+    msg = (f"unknown strategy {name!r}; available: "
+           f"{', '.join(sorted(_REGISTRY))}")
+    close = difflib.get_close_matches(name, list(_REGISTRY), n=2)
+    if close:
+        msg += f" — did you mean {' or '.join(map(repr, close))}?"
+    return msg
+
+
+def make_strategy(name: str, cfg, chain, key, **opts):
+    """Construct a registered strategy.  ``opts`` override the registered
+    defaults and are passed to the class constructor; unknown option names
+    are rejected with a did-you-mean suggestion instead of silently
+    swallowed (or exploding inside the constructor)."""
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(_unknown_strategy_msg(name))
+    cls, defaults = _REGISTRY[name]
+    merged = {**defaults, **opts}
+    if merged and not _accepts_var_kwargs(cls):
+        import difflib
+        valid = _strategy_options(cls)
+        unknown = sorted(set(merged) - set(valid))
+        if unknown:
+            hints = []
+            for u in unknown:
+                close = difflib.get_close_matches(u, list(valid), n=1)
+                hints.append(f"{u!r}" + (f" (did you mean {close[0]!r}?)"
+                                         if close else ""))
+            raise TypeError(
+                f"strategy {name!r} got unknown option(s): "
+                f"{', '.join(hints)}; accepted: "
+                f"{', '.join(sorted(valid)) or '(none)'}")
+    return cls(cfg, chain, key, **merged)
 
 
 # ============================================================== experiments
@@ -90,7 +171,8 @@ class ExperimentResult:
         return self.history[-1].acc if self.history else 0.0
 
 
-def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
+def run_experiment(strategy: Optional[str] = None, *, spec=None,
+                   cfg=None, arch: str = "bert_tiny",
                    chain=None, fed=None, task: str = "classification",
                    dataset: str = "agnews", batch_size: int = 8,
                    rounds: int = 20, eval_every: int = 5, seed: int = 0,
@@ -103,11 +185,23 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
                    aggregator: Optional[str] = None,
                    aggregator_opts: Optional[dict] = None,
                    faults=None, trace=None,
+                   lazy: bool = False, shard_size: Optional[int] = None,
                    checkpoint_every: Optional[int] = None,
                    checkpoint_path=None, resume=None,
                    halt_after: Optional[int] = None) -> ExperimentResult:
     """High-level entry point: build (or accept) the federated testbed, make
     the named strategy, optionally swap in a pretrained base, run rounds.
+
+    **Preferred calling convention (ISSUE 8):** pass a declarative
+    ``spec=ExperimentSpec(...)`` (``repro.fed.spec``) instead of the loose
+    config kwargs — the spec serializes, embeds in checkpoints (``resume``
+    then validates the *whole* configuration) and reproduces the exact
+    results of the equivalent kwargs/flag invocation.  With ``spec=`` the
+    only other accepted arguments are the live-object overrides
+    (``cfg``/``chain``/``fed``/``params``/``sim``) and the invocation-level
+    knobs (``verbose``, ``checkpoint_every``/``checkpoint_path``/
+    ``resume``/``halt_after``); loose config kwargs still work without a
+    spec but are deprecated and warn.
 
     ``sim``/``params`` short-circuit testbed construction so benchmarks can
     share one pretrained base across methods; ``pretrain_steps`` > 0 LM-
@@ -142,6 +236,8 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
     after that unit — the crash-simulation hook the resume-equality tests
     use.  Any of these forces the event-driven scheduler even in sync mode.
     """
+    import warnings
+
     import jax
     import numpy as np
 
@@ -149,7 +245,60 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
     from ..data.synthetic import (DATASETS, classification_batch, lm_batch,
                                   make_classification, make_instruction)
     from ..models.config import ChainConfig, FedConfig
-    from .engine import FedSim, run_rounds
+    from .engine import FedSim
+    from . import spec as spec_mod
+
+    topology = (scheduler_opts or {}).get("topology")
+    if spec is not None:
+        if strategy is not None:
+            raise TypeError(
+                "pass either spec= or the legacy strategy/config kwargs, "
+                "not both")
+        r = spec.run
+        strategy, task, dataset = r.strategy, r.task, r.dataset
+        batch_size, rounds, eval_every = r.batch_size, r.rounds, r.eval_every
+        seed, memory_constrained = r.seed, r.memory_constrained
+        pretrain_steps = r.pretrain_steps
+        strategy_opts = spec_mod.thaw_opts(r.strategy_opts) or None
+        lazy, shard_size = r.lazy, r.shard_size
+        s_cfg, s_chain, s_fed = spec_mod.build_configs(spec)
+        cfg = cfg if cfg is not None else s_cfg
+        chain = chain if chain is not None else s_chain
+        fed = fed if fed is not None else s_fed
+        mode = spec.schedule.mode
+        scheduler_opts = spec_mod.build_scheduler_opts(spec)
+        dp = spec_mod.build_dp(spec)
+        secure_agg = spec.privacy.secure_agg or None
+        aggregator = spec.faults.aggregator
+        aggregator_opts = (spec_mod.thaw_opts(spec.faults.aggregator_opts)
+                           or None)
+        faults = spec_mod.build_faults(spec)
+        trace = spec_mod.build_trace(spec)
+        topology = spec_mod.build_topology(spec)
+    else:
+        if strategy is None:
+            raise TypeError("run_experiment needs a strategy name or spec=")
+        warnings.warn(
+            "kwargs-style run_experiment is deprecated: build a declarative "
+            "repro.fed.spec.ExperimentSpec and call "
+            "run_experiment(spec=...) — loose config kwargs will be removed "
+            "next release", DeprecationWarning, stacklevel=2)
+        # best-effort spec for checkpoint embedding (None when the kwargs
+        # carry live objects a spec cannot represent)
+        spec = (None if (cfg is not None or sim is not None
+                         or params is not None)
+                else spec_mod.spec_from_kwargs(
+                    strategy, arch=arch, task=task, dataset=dataset,
+                    batch_size=batch_size, rounds=rounds,
+                    eval_every=eval_every, seed=seed,
+                    memory_constrained=memory_constrained,
+                    pretrain_steps=pretrain_steps,
+                    strategy_opts=strategy_opts, mode=mode,
+                    scheduler_opts=scheduler_opts, dp=dp,
+                    secure_agg=secure_agg, aggregator=aggregator,
+                    aggregator_opts=aggregator_opts, faults=faults,
+                    trace=trace, chain=chain, fed=fed, lazy=lazy,
+                    shard_size=shard_size))
 
     cfg = cfg if cfg is not None else get_config(arch)
     chain = chain if chain is not None else ChainConfig()
@@ -157,12 +306,12 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
 
     if sim is None:
         if task == "classification":
-            spec = DATASETS[dataset]
-            spec = dataclasses.replace(spec, vocab=cfg.vocab_size)
-            tokens, labels = make_classification(spec)
+            dspec = dataclasses.replace(DATASETS[dataset],
+                                        vocab=cfg.vocab_size)
+            tokens, labels = make_classification(dspec)
             # host arrays: jit converts on call; cohort_batches stacks
             # host-side with one device transfer per leaf
-            batch_fn = lambda idx: classification_batch(spec, tokens,
+            batch_fn = lambda idx: classification_batch(dspec, tokens,
                                                         labels, idx)
         elif task == "instruction":
             tokens, labels2d = make_instruction(vocab=cfg.vocab_size)
@@ -172,7 +321,8 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
             raise ValueError(f"unknown task {task!r}")
         sim = FedSim(cfg, fed, tokens, labels, batch_fn,
                      batch_size=batch_size,
-                     memory_constrained=memory_constrained)
+                     memory_constrained=memory_constrained,
+                     lazy=lazy, shard_size=shard_size)
 
     strat = make_strategy(strategy, cfg, chain, jax.random.PRNGKey(seed),
                           **(strategy_opts or {}))
@@ -210,20 +360,19 @@ def run_experiment(strategy: str, *, cfg=None, arch: str = "bert_tiny",
             trace = make_trace(tkw.pop("kind"), fed.n_clients, **tkw)
         scheduler_opts = {**(scheduler_opts or {}), "trace": trace}
 
-    durable = (checkpoint_every is not None or resume is not None
-               or halt_after is not None)
-    if mode == "sync" and not scheduler_opts and not durable:
-        history = run_rounds(sim, strat, rounds, eval_every=eval_every,
-                             verbose=verbose)
-        sched = None
-    else:
-        from .runtime import FedScheduler
-        sched = FedScheduler(sim, strat, mode=mode,
-                             **(scheduler_opts or {}))
-        if resume is not None:
-            sched.restore(resume)
-        history = sched.run(rounds, eval_every=eval_every, verbose=verbose,
-                            checkpoint_every=checkpoint_every,
-                            checkpoint_path=checkpoint_path,
-                            halt_after=halt_after)
+    # one driver code path (ISSUE 8): every run — including plain sync —
+    # goes through the event-driven scheduler, whose sync mode reproduces
+    # the legacy run_rounds protocol bit-identically
+    from .runtime import FedScheduler
+    so = dict(scheduler_opts or {})
+    if topology is not None:
+        so["topology"] = topology
+    sched = FedScheduler(sim, strat, mode=mode, **so)
+    sched.spec = spec
+    if resume is not None:
+        sched.restore(resume)
+    history = sched.run(rounds, eval_every=eval_every, verbose=verbose,
+                        checkpoint_every=checkpoint_every,
+                        checkpoint_path=checkpoint_path,
+                        halt_after=halt_after)
     return ExperimentResult(strat, sim, history, sched)

@@ -61,6 +61,34 @@ mid-round becomes a timeout event at the moment it went offline; and when
 *no* client is available the server parks a capped-exponential-backoff
 retry event (``backoff_base``·2^k, capped at ``backoff_cap``) on the same
 heap and re-dispatches when it fires.
+
+**Planet-scale population runtime** (ISSUE 8): three additions make the
+scheduler credible at millions of clients.
+
+* *Lazy client state* — with ``FedSim(lazy=True)`` the population is a
+  ``ClientPool``: a client's shard, rng stream and ``DeviceProfile`` are
+  synthesized deterministically from ``(seed, cid)`` when it is dispatched
+  and released after its update commits, so resident client state is
+  O(active cohort) — a 10⁶-client run holds a few dozen clients.  Sampling
+  is rejection-based (budget synthesized per candidate cid), never an
+  O(population) enumeration.
+* *Hierarchical aggregation* — a ``Topology`` routes each client to one of
+  ``n_silos`` cross-silo aggregators (edge → silo → server): every server
+  commit first reduces each silo's member updates into one silo-level
+  update (weighted partial mean; a robust ``AGGREGATORS`` entry per silo
+  via ``Topology.aggregator``; the DP clip applied at the silo tier and
+  the noise at the server, composing per-tier), then commits the
+  silo-level updates with silo weights.  ``n_silos=1`` routes through the
+  flat path unchanged — bit-identical by construction; N-silo weighted
+  means match the flat commit to float-associativity (≤1e-5, tested).
+  Per-silo availability traces (``Topology.trace``) model a whole silo
+  going dark.
+* *Per-completion FedBuff* — ``pad_policy="pow2"`` pads dispatch buckets to
+  the next power of two (capped at ``bucket_pad``) instead of always
+  ``bucket_pad``, so ``buffer_size=1`` commits dispatch true size-1
+  replacement buckets; the geometric pad is the dispatch-batching
+  heuristic that keeps the compile set bounded ({(plan, 2^k)}) while
+  coalescing compatible completions into shared bucket shapes.
 """
 from __future__ import annotations
 
@@ -78,9 +106,385 @@ from ..utils.tree import tree_map
 from . import privacy
 from .engine import FedSim, RoundMetrics
 from .faults import ClientBehavior, FaultModel, replace_rows
-from .strategies import cohort_norms, scale_cohort, stack_masks
+from .strategies import (cohort_fedavg, cohort_norms, make_aggregator,
+                         scale_cohort, stack_masks)
 
 MODES = ("sync", "semisync", "async")
+PAD_POLICIES = ("fixed", "pow2")
+
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+# ==================================================== hierarchical topology
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Edge → cross-silo tier → server aggregation topology (ISSUE 8).
+
+    ``n_silos=1`` is the flat cohort — the scheduler routes it through the
+    unmodified single-tier commit, so the flat path is literally the 1-silo
+    special case.  With ``n_silos>1`` every commit pre-aggregates each
+    silo's member updates into one silo-level update (``SiloAggregator``)
+    and the server commits those.
+
+    assign            ``"block"`` (contiguous cid ranges — geographic silos)
+                      or ``"mod"`` (round-robin cid striping).
+    aggregator        silo-tier ``AGGREGATORS`` entry (``"fedavg"`` keeps
+                      the weighted partial mean; robust entries like
+                      ``"trimmed_mean"`` filter byzantine members *inside*
+                      their silo, before the server ever sees them).
+    aggregator_opts   frozen ``(key, value)`` pairs for the factory.
+    trace             per-*silo* ``AvailabilityTrace`` (``n_silos`` rows):
+                      a silo going dark takes its members offline — its
+                      clients are not sampled and a window closing
+                      mid-round times their dispatches out.
+    """
+    n_silos: int = 1
+    assign: str = "block"
+    aggregator: str = "fedavg"
+    aggregator_opts: tuple = ()
+    trace: object = None
+
+    def __post_init__(self):
+        if self.n_silos < 1:
+            raise ValueError(f"n_silos must be >= 1, got {self.n_silos}")
+        if self.assign not in ("block", "mod"):
+            raise ValueError(f"assign policy {self.assign!r}: block|mod")
+        if self.trace is not None and self.trace.n_clients < self.n_silos:
+            raise ValueError(
+                f"silo trace has {self.trace.n_clients} rows for "
+                f"{self.n_silos} silos")
+
+    def silo_of(self, cid: int, n_clients: int) -> int:
+        if self.n_silos <= 1:
+            return 0
+        if self.assign == "mod":
+            return int(cid) % self.n_silos
+        return min(self.n_silos - 1,
+                   int(cid) * self.n_silos // max(1, n_clients))
+
+
+class SiloAggregator:
+    """The cross-silo tier: reduces one commit's member updates, silo by
+    silo, into ``(silo_delta, silo_weight)`` pairs and combines them at the
+    server.
+
+    Numerics contract: the silo delta is the *weighted partial mean* of its
+    members (staleness-discounted sample weights) and the server takes the
+    silo-weight-ed mean of silo deltas — algebraically identical to the
+    flat sample-weighted mean, differing only in float summation order
+    (≤1e-5; the 1-silo case never reaches this class).  Under DP the clip
+    is applied to members at the silo tier and the Gaussian noise (scaled
+    by the *total* member count, exactly as in the flat
+    ``make_private_aggregate``) at the server — the per-tier composition.
+
+    Compile discipline: when both tiers run fedavg (the common case) the
+    whole commit — member gather, silo reduce vmapped over the silo axis,
+    server combine — is ONE jitted call, the same per-commit dispatch
+    cost as the flat path.  Every silo is padded to the commit's pow2 max
+    member count with zero-weight rows (exact: a zero weight contributes
+    ``0·u``), the member axis to pow2 with never-gathered zero rows, and
+    the silo axis is the FULL topology (absent silos duplicate a present
+    row with zero server weight) — the fused fn is keyed ``(plan, dp)``
+    and re-traces only per pow2 ``(members, max-per-silo)`` pair, a
+    handful of entries no matter how the cohort churns.  Robust
+    aggregators are
+    weight-blind, so they see exact sizes at their tier via the staged
+    two-call path.  The event loop runs recompile-free after the first
+    few commits."""
+
+    def __init__(self, topology: Topology, strategy, n_clients: int):
+        self.topology = topology
+        self.strategy = strategy
+        self.n_clients = int(n_clients)
+        self._reduce_jit = {}     # (plan, padded_m, dp?) -> silo reduce
+        self._server_jit = {}     # (plan, n_present, dp?) -> server combine
+        self._fused_jit = {}      # (plan, dp?) -> whole two-tier commit
+        # durable per-silo tallies (checkpointed): commits a silo
+        # contributed to, member updates it forwarded
+        self.silo_commits = np.zeros(topology.n_silos, np.int64)
+        self.silo_updates = np.zeros(topology.n_silos, np.int64)
+
+    def silo_of(self, cid: int) -> int:
+        return self.topology.silo_of(cid, self.n_clients)
+
+    def _cache_sizes(self) -> list:
+        """Jit-cache entry counts (compile-stability assertions in tests)."""
+        return [f._cache_size() for f in
+                list(self._reduce_jit.values())
+                + list(self._server_jit.values())
+                + list(self._fused_jit.values())
+                if hasattr(f, "_cache_size")]
+
+    # ------------------------------------------------------------ silo tier
+    def _reduce_fn(self, plan, m: int, dp: bool):
+        """Batched silo reduce: ``(S, m, ...)`` member stacks for S
+        same-padded-size silos → ``(S, ...)`` silo deltas in ONE vmapped
+        jitted call — the silo tier costs O(1) device dispatches per
+        commit, not O(n_silos)."""
+        key = (plan, m, dp)
+        if key not in self._reduce_jit:
+            if not dp:
+                def one(ups, w):
+                    wn = w / jnp.sum(w)
+                    return tree_map(
+                        lambda u: jnp.tensordot(wn, u.astype(jnp.float32),
+                                                axes=1), ups)
+                fn = jax.jit(jax.vmap(one))
+            else:
+                def one(ups, w, clip):
+                    # DP composes per-tier: members are clipped *here* (the
+                    # edge→silo upload is the sensitive quantity) and the
+                    # mean is uniform over live members — sample weights
+                    # would make per-member sensitivity data-dependent,
+                    # exactly as in the flat make_private_aggregate
+                    ups = privacy.clip_cohort(ups, clip)
+                    live = (w > 0).astype(jnp.float32)
+                    wn = live / jnp.sum(live)
+                    return tree_map(lambda u: jnp.tensordot(wn, u, axes=1),
+                                    ups)
+                fn = jax.jit(jax.vmap(one, in_axes=(0, 0, None)))
+            self._reduce_jit[key] = fn
+        return self._reduce_jit[key]
+
+    def _robust_fn(self, plan, m: int, dp: bool):
+        key = (plan, m, dp, "robust")
+        if key not in self._reduce_jit:
+            agg = make_aggregator(self.topology.aggregator,
+                                  **dict(self.topology.aggregator_opts))
+
+            def reduce(ups, w, clip=None):
+                if clip is not None:
+                    ups = privacy.clip_cohort(ups, clip)
+                zeros = tree_map(
+                    lambda u: jnp.zeros(u.shape[1:], jnp.float32), ups)
+                return agg(zeros, ups, w, {})
+            self._reduce_jit[key] = jax.jit(reduce)
+        return self._reduce_jit[key]
+
+    # ---------------------------------------------------------- server tier
+    def _server_fn(self, plan, n_present: int, dp):
+        key = (plan, n_present, dp is not None)
+        if key not in self._server_jit:
+            strat = self.strategy
+            server_agg = cohort_fedavg
+            if strat.aggregator != "fedavg":
+                # the strategy's robust server aggregation treats silo
+                # deltas as pseudo-clients
+                server_agg = make_aggregator(
+                    strat.aggregator, **dict(strat.aggregator_opts or {}))
+            if dp is None:
+                def combine(tr0, deltas, W):
+                    return server_agg(tr0, deltas, W, {})
+            else:
+                sigma = float(dp.noise_multiplier)
+
+                def combine(tr0, deltas, W, rng, clip, members):
+                    new = server_agg(tr0, deltas, W, {})
+                    # same mechanism as the flat DP commit: N(0,(σ·clip/C)²)
+                    # per coordinate with C = total member count
+                    std = sigma * clip / members
+                    noise = privacy.gaussian_noise_tree(
+                        jax.random.fold_in(rng, 0x0D9), new, std)
+                    return tree_map(
+                        lambda x, n: (x.astype(jnp.float32) + n
+                                      ).astype(x.dtype), new, noise)
+            self._server_jit[key] = jax.jit(combine)
+        return self._server_jit[key]
+
+    # ----------------------------------------------------------- fused path
+    def _fused_fn(self, plan, dp):
+        """The whole two-tier commit — member gather, vmapped silo reduce,
+        server combine (+ DP noise) — as ONE jitted call, matching the flat
+        path's one-dispatch-per-commit cost.  Only valid when both tiers
+        run fedavg (robust aggregators are weight-blind and need exact
+        sizes → the staged path).  Keyed ``(plan, dp)``; jit re-traces per
+        pow2-padded member-count/max-per-silo shape pair (the silo axis is
+        churn-independent), so the trace set stays a handful."""
+        key = (plan, dp is not None)
+        if key not in self._fused_jit:
+            if dp is None:
+                def fused(tr0, ups, gather, mask, weights, W):
+                    sub = tree_map(lambda u: u[gather], ups)
+                    w_mat = weights[gather] * mask
+
+                    def one(u, w):
+                        wn = w / jnp.sum(w)
+                        return tree_map(
+                            lambda x: jnp.tensordot(
+                                wn, x.astype(jnp.float32), axes=1), u)
+                    deltas = jax.vmap(one)(sub, w_mat)
+                    return cohort_fedavg(tr0, deltas, W, {})
+            else:
+                sigma = float(dp.noise_multiplier)
+
+                def fused(tr0, ups, gather, mask, weights, W, rng, clip,
+                          members):
+                    sub = tree_map(lambda u: u[gather], ups)
+                    w_mat = weights[gather] * mask
+
+                    def one(u, w, clip):
+                        # DP composes per-tier: members clipped at the silo
+                        # (the edge→silo upload is the sensitive quantity),
+                        # uniform live-member mean — as in the flat
+                        # make_private_aggregate
+                        u = privacy.clip_cohort(u, clip)
+                        live = (w > 0).astype(jnp.float32)
+                        wn = live / jnp.sum(live)
+                        return tree_map(
+                            lambda x: jnp.tensordot(wn, x, axes=1), u)
+                    deltas = jax.vmap(one, in_axes=(0, 0, None))(
+                        sub, w_mat, clip)
+                    new = cohort_fedavg(tr0, deltas, W, {})
+                    std = sigma * clip / members
+                    noise = privacy.gaussian_noise_tree(
+                        jax.random.fold_in(rng, 0x0D9), new, std)
+                    return tree_map(
+                        lambda x, n: (x.astype(jnp.float32) + n
+                                      ).astype(x.dtype), new, noise)
+            self._fused_jit[key] = jax.jit(fused)
+        return self._fused_jit[key]
+
+    # --------------------------------------------------------------- commit
+    def commit(self, plan, tr0, es, ups, weights, rng, clip):
+        """Two-tier aggregation of one plan group: ``es`` are the commit's
+        entries (dispatch order), ``ups`` their stacked ``(E, ...)`` update
+        tree, ``weights`` the (E,) staleness-discounted sample weights as a
+        HOST array — the silo-weight sums must never force a device sync
+        (a per-commit sync stalls the async dispatch pipeline and halves
+        events/s).  Returns ``(new_trainable, silos_present)``."""
+        strat = self.strategy
+        dp = strat.dp
+        by_silo = {}
+        for i, e in enumerate(es):
+            by_silo.setdefault(self.silo_of(e.client.cid), []).append(i)
+        order = sorted(by_silo)
+        # silo weights + tallies in one host pass — no device syncs
+        w_host = np.asarray(weights, np.float32)
+        W = []
+        for s in order:
+            idx = by_silo[s]
+            # silo weight: total member weight (DP: live member count — the
+            # uniform-mean composition)
+            W.append(float(len(idx)) if dp is not None
+                     else float(w_host[idx].sum()))
+            self.silo_commits[s] += 1
+            self.silo_updates[s] += len(idx)
+        S = len(order)
+        robust_silo = self.topology.aggregator != "fedavg"
+        robust_server = strat.aggregator != "fedavg"
+        if not robust_silo and not robust_server:
+            # the common fedavg/fedavg commit: gather → silo reduce →
+            # server combine run as ONE jitted call whose every input
+            # shape is churn-independent, so the trace set saturates in
+            # the first few commits.  Member slots pad to the commit's
+            # pow2 max member count (zero-weight: exact under the
+            # weighted mean, excluded from the DP live-mask), absent/pad
+            # silo rows duplicate the first present row — mask included,
+            # so no 0/0 — with zero server weight; the member axis pads
+            # to pow2 with zero rows that are never gathered.  The silo
+            # axis is the FULL topology when small (no silos-present in
+            # the key at all), pow2-compacted beyond that.
+            ns = self.topology.n_silos
+            tgt = _pow2_at_least(max(len(by_silo[s]) for s in order))
+            if ns <= 64:
+                R = ns
+                rows = order                     # row = absolute silo id
+            else:
+                R = _pow2_at_least(S)
+                rows = range(S)                  # row = compacted position
+            idx_mat = np.zeros((R, tgt), np.int64)
+            mask = np.zeros((R, tgt), np.float32)
+            Wv = np.zeros(R, np.float32)
+            present = np.zeros(R, bool)
+            for pos, (r, s) in enumerate(zip(rows, order)):
+                idx = by_silo[s]
+                m = len(idx)
+                idx_mat[r, :m] = idx
+                idx_mat[r, m:] = idx[-1]
+                mask[r, :m] = 1.0
+                Wv[r] = W[pos]
+                present[r] = True
+            idx_mat[~present] = idx_mat[rows[0]]
+            mask[~present] = mask[rows[0]]
+            E = len(es)
+            Ep = _pow2_at_least(E)
+            if Ep > E:
+                ups = tree_map(lambda u: jnp.concatenate(
+                    [u, jnp.zeros((Ep - E,) + u.shape[1:], u.dtype)]), ups)
+            w_pad = np.zeros(Ep, np.float32)
+            w_pad[:E] = w_host
+            fn = self._fused_fn(plan, dp)
+            if dp is None:
+                new = fn(tr0, ups, idx_mat, mask, w_pad, Wv)
+            else:
+                new = fn(tr0, ups, idx_mat, mask, w_pad, Wv, rng,
+                         clip, jnp.float32(E))
+            return new, S
+        weights = jnp.asarray(w_host)
+        if robust_silo:
+            deltas = []
+            for s in order:
+                idx = np.asarray(by_silo[s], np.int64)
+                sub = tree_map(lambda u: u[idx], ups)
+                w_s = weights[jnp.asarray(idx)]
+                fn = self._robust_fn(plan, len(idx), dp is not None)
+                deltas.append(fn(sub, w_s, clip) if dp is not None
+                              else fn(sub, w_s))
+            stacked = tree_map(lambda *ds: jnp.stack(ds), *deltas)
+        else:
+            # robust server over fedavg silos: batched vmapped reduce,
+            # sliced to the S real silo deltas — robust aggregators are
+            # weight-blind and must see exact sizes
+            tgt = _pow2_at_least(max(len(by_silo[s]) for s in order))
+            Sp = _pow2_at_least(S)
+            idx_mat = np.zeros((Sp, tgt), np.int64)
+            mask = np.zeros((Sp, tgt), np.float32)
+            for r, s in enumerate(order):
+                idx = by_silo[s]
+                m = len(idx)
+                idx_mat[r, :m] = idx
+                idx_mat[r, m:] = idx[-1]
+                mask[r, :m] = 1.0
+            idx_mat[S:] = idx_mat[0]
+            mask[S:] = mask[0]
+            gather = jnp.asarray(idx_mat)
+            sub = tree_map(lambda u: u[gather], ups)
+            w_mat = weights[gather] * jnp.asarray(mask)
+            fn = self._reduce_fn(plan, tgt, dp is not None)
+            out = (fn(sub, w_mat, clip) if dp is not None
+                   else fn(sub, w_mat))
+            stacked = tree_map(lambda d: d[:S], out)
+        Wv = jnp.asarray(W, jnp.float32)
+        fn = self._server_fn(plan, S, dp)
+        if dp is None:
+            new = fn(tr0, stacked, Wv)
+        else:
+            new = fn(tr0, stacked, Wv, rng, clip,
+                     jnp.float32(len(es)))
+        return new, S
+
+    # ------------------------------------------------------- durable state
+    def state_dict(self) -> dict:
+        return {"silo_commits": np.asarray(self.silo_commits),
+                "silo_updates": np.asarray(self.silo_updates)}
+
+    def load_state_dict(self, s: dict) -> None:
+        self.silo_commits = np.asarray(s["silo_commits"], np.int64).copy()
+        self.silo_updates = np.asarray(s["silo_updates"], np.int64).copy()
+
+
+def run_sync_rounds(sim: FedSim, strategy, rounds: int, eval_every: int = 5,
+                    verbose: bool = False):
+    """The one-call lockstep driver — ``FedScheduler(mode="sync").run``.
+    This is what the deprecated ``engine.run_rounds`` aliases; call this (or
+    ``run_experiment``) in new code."""
+    return FedScheduler(sim, strategy, mode="sync").run(
+        rounds, eval_every=eval_every, verbose=verbose)
 
 
 def client_round_time(sim: FedSim, strategy, client, plan=None) -> float:
@@ -200,6 +604,16 @@ class FedScheduler:
         backoff for dispatch attempts that find no available client —
         delay = min(base · 2^k, cap), giving up after ``max_backoff_retries``
         consecutive failures.
+    pad_policy : ``"fixed"`` (every bucket padded to ``bucket_pad`` — one
+        compile per plan) or ``"pow2"`` (padded to the next power of two,
+        capped at ``bucket_pad`` — the per-completion dispatch-batching
+        heuristic: size-1 replacement buckets compile at (plan, 1) instead
+        of paying a full-width padded wave, with the compile set still
+        bounded at {(plan, 2^k)}).
+    topology : a ``Topology`` — hierarchical edge → silo → server
+        aggregation.  ``n_silos=1`` (or ``None``) is the flat cohort;
+        ``Topology.trace`` adds per-silo availability on top of any
+        client-level trace.
     """
 
     def __init__(self, sim: FedSim, strategy, mode: str = "sync", *,
@@ -211,11 +625,16 @@ class FedScheduler:
                  staleness_cap: Optional[int] = None,
                  faults=None, trace=None,
                  backoff_base: float = 1.0, backoff_cap: float = 60.0,
-                 max_backoff_retries: int = 60):
+                 max_backoff_retries: int = 60,
+                 pad_policy: str = "fixed",
+                 topology: Optional[Topology] = None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; one of {MODES}")
         if straggler not in ("drop", "carry"):
             raise ValueError(f"straggler policy {straggler!r}: drop|carry")
+        if pad_policy not in PAD_POLICIES:
+            raise ValueError(f"unknown pad_policy {pad_policy!r}; "
+                             f"one of {PAD_POLICIES}")
         if isinstance(faults, ClientBehavior):
             faults = FaultModel(faults, sim.fed.n_clients, trace=trace)
         elif faults is None and trace is not None:
@@ -242,7 +661,19 @@ class FedScheduler:
                     "secure aggregation only supports the linear fedavg "
                     f"mean; robust aggregator {strategy.aggregator!r} needs "
                     "plaintext per-client updates")
+        self.topology = topology
+        if topology is not None and topology.n_silos > 1:
+            if strategy.secure is not None:
+                raise ValueError(
+                    "secure aggregation masks per dispatch bucket — pairwise "
+                    "sessions cannot span the cross-silo tier; use n_silos=1")
+            self._silo = SiloAggregator(topology, strategy,
+                                        sim.fed.n_clients)
+        else:
+            self._silo = None
         self.sim, self.strategy, self.mode = sim, strategy, mode
+        self.pad_policy = pad_policy
+        self.spec = None            # ExperimentSpec embedded in checkpoints
         self.concurrency = concurrency or sim.fed.clients_per_round
         self.buffer_size = buffer_size or self.concurrency
         if self.buffer_size > self.concurrency:
@@ -268,8 +699,13 @@ class FedScheduler:
         self.committed_updates = 0  # client updates aggregated so far
         self.fault_dropouts = 0     # dispatches lost to injected dropouts
         self.trace_dropouts = 0     # dispatches lost to availability windows
+        self.silo_dropouts = 0      # dispatches lost to silo-level windows
         self.redispatches = 0       # replacement dispatches (async recovery)
         self.backoff_retries = 0    # no-client-available backoff events
+        self.events = 0             # scheduler events processed (dispatches
+                                    # + commits + timeouts/retries) — the
+                                    # bench_round --population events/s
+        self.tier_bytes = {"edge": 0, "silo": 0}  # per-tier comm accounting
         # observed round latencies (on-time actuals; stragglers enter
         # censored at the deadline) — the adaptive semisync deadline
         self._lat_window = deque(maxlen=512)
@@ -308,7 +744,12 @@ class FedScheduler:
         if self.mode == "sync":
             # sync preserves the legacy ordering exactly: one-off setup
             # (chainfed FOAT) runs *inside* the first Strategy.round, after
-            # that round's eligibility sampling — bit-identical histories
+            # that round's eligibility sampling — bit-identical histories.
+            # The hierarchical sync wave bypasses Strategy.round, so begin
+            # must run here instead.
+            if self._silo is not None and not self._started:
+                self._started = True
+                self.strategy.begin(self.sim)
             return self._run_sync(rounds, eval_every, verbose)
         if not self._started:
             self._started = True
@@ -334,7 +775,8 @@ class FedScheduler:
         m = RoundMetrics(r, loss, acc, n,
                          self.strategy.comm_bytes_per_round(),
                          wallclock=self.clock, stale_updates=stale,
-                         dp_epsilon=eps)
+                         dp_epsilon=eps,
+                         silo_comm_bytes=int(self.tier_bytes["silo"]))
         if verbose:
             dp = f" ε={eps:.2f}" if self.strategy.dp is not None else ""
             print(f"  round {r:3d} n={n:2d} loss={loss:.4f} acc={acc:.4f} "
@@ -343,6 +785,24 @@ class FedScheduler:
 
     def _has_trace(self) -> bool:
         return self.faults is not None and self.faults.trace is not None
+
+    def _silo_trace(self) -> bool:
+        return self.topology is not None and self.topology.trace is not None
+
+    def _churny(self) -> bool:
+        """Any availability machinery that can empty a sample (and so
+        justifies a backoff retry instead of a wasted round)."""
+        return self._has_trace() or self._silo_trace()
+
+    def _silo_available(self, cid: int) -> bool:
+        t = self.topology
+        return t.trace.available(t.silo_of(cid, self.sim.n_clients),
+                                 self.clock)
+
+    def _silo_cut(self, cid: int, t0: float, t1: float):
+        t = self.topology
+        return t.trace.offline_cut(t.silo_of(cid, self.sim.n_clients),
+                                   t0, t1)
 
     def _checkpoint_unit(self, unit: int) -> bool:
         """Persist the run after completing ``unit`` (a round / a commit)
@@ -363,15 +823,33 @@ class FedScheduler:
         the sync path, which is what makes async-with-uniform-latencies
         coincide with sync."""
         sim, strat = self.sim, self.strategy
+        if sim.lazy:
+            # the lazy pool never enumerates the population: rejection-
+            # sample cids, testing the cheap (seed, cid) budget synthesis
+            # plus whatever availability applies at the current clock
+            if n <= 0:
+                return []
+            has_t, has_s = self._has_trace(), self._silo_trace()
+            avail = None
+            if has_t or has_s:
+                def avail(cid):
+                    if has_t and not self.faults.available(cid, self.clock):
+                        return False
+                    return not has_s or self._silo_available(cid)
+            return sim.pool_sample(n, strat.memory_method,
+                                   dict(strat.memory_kwargs(round_idx)),
+                                   busy=busy, avail=avail)
         if not busy and n == sim.fed.clients_per_round \
-                and not self._has_trace():
+                and not self._churny():
             return sim.sample_clients(strat.memory_method,
                                       **strat.memory_kwargs(round_idx))
         pool = [c for c in sim.eligible(strat.memory_method,
                                         **strat.memory_kwargs(round_idx))
                 if c.cid not in busy
                 and (self.faults is None
-                     or self.faults.available(c.cid, self.clock))]
+                     or self.faults.available(c.cid, self.clock))
+                and (not self._silo_trace()
+                     or self._silo_available(c.cid))]
         if not pool or n <= 0:
             return []
         k = min(n, len(pool))
@@ -381,9 +859,17 @@ class FedScheduler:
     # ------------------------------------------------------- dispatch waves
     def _dispatch(self, clients, round_idx: int) -> List[_Pending]:
         """Start a wave of clients at the current model version: bucket by
-        plan, pad each bucket to ``bucket_pad``, run one jitted
+        plan, pad each bucket to a shape-stable size, run one jitted
         ``cohort_updates`` per bucket, and return the per-client pending
-        completions (absolute finish times on the virtual clock)."""
+        completions (absolute finish times on the virtual clock).
+
+        Pad targets are the no-recompile contract.  ``pad_policy="fixed"``
+        pads every bucket to ``bucket_pad`` (one compiled shape per plan);
+        ``"pow2"`` pads to the next power of two capped at ``bucket_pad``
+        (compile set {(plan, 2^k)}, k ≤ log₂ bucket_pad) — the dispatch-
+        batching heuristic that makes per-completion FedBuff (size-1
+        buckets) cheap while still coalescing larger waves without new
+        shapes."""
         strat, sim = self.strategy, self.sim
         groups = {}
         for c in clients:
@@ -394,7 +880,11 @@ class FedScheduler:
             batches = sim.cohort_batches(bucket, strat.chain.local_steps)
             mask_list = [strat.plan_masks(sim, c, round_idx) for c in bucket]
             masks = stack_masks(mask_list)
-            pad = max(0, self.bucket_pad - n)
+            if self.pad_policy == "pow2":
+                tgt = max(min(_pow2_at_least(n), self.bucket_pad), n)
+            else:
+                tgt = max(self.bucket_pad, n)
+            pad = max(0, tgt - n)
             if pad:
                 # pad with *copies of already-drawn rows* — no extra sampler
                 # draws, so padding never perturbs the data stream; padded
@@ -445,12 +935,20 @@ class FedScheduler:
                             failed = True
                             t = max(cut - self.clock, 0.0)
                             self.trace_dropouts += 1
+                if not failed and self._silo_trace():
+                    # a silo going dark mid-round takes its members with it
+                    cut = self._silo_cut(c.cid, self.clock, self.clock + t)
+                    if cut is not None:
+                        failed = True
+                        t = max(cut - self.clock, 0.0)
+                        self.silo_dropouts += 1
                 pending.append(_Pending(
                     finish=self.clock + t,
                     client=c, plan=plan, bucket=updates, bi=i,
                     masks=mask_list[i], weight=float(c.n_samples),
                     version=self.version, seq=self._seq, loss=losses[i],
                     start=self.clock, failed=failed, session=session))
+        self.events += len(pending)
         return pending
 
     def _apply_replacement(self, updates, tr0, bucket, n, pad):
@@ -484,10 +982,13 @@ class FedScheduler:
         the model did not move and the caller must not count a commit) and
         how many of them were stale."""
         strat = self.strategy
+        consumed = entries        # every entry hands its client back to the
+                                  # lazy pool, committed or stale-voided
         if self.staleness_cap is not None:
             entries = [e for e in entries
                        if self.version - e.version <= self.staleness_cap]
         if not entries:
+            self.sim.release_clients([e.client for e in consumed])
             return 0, 0
         groups = {}
         for e in entries:
@@ -526,6 +1027,32 @@ class FedScheduler:
                              self.version - e.version)))
                 new = privacy.secure_commit(strat, plan, tr0,
                                             list(sgroups.values()), rng=rng)
+            elif self._silo is not None:
+                # hierarchical commit: silo partial reduces, then the
+                # server combines silo deltas — per-tier comm accounted
+                if strat.cohort_aggregate(plan) is not None:
+                    raise ValueError(
+                        f"strategy {type(strat).__name__} aggregates in a "
+                        "custom update space (cohort_aggregate) — the "
+                        "cross-silo tier only composes with trainable-"
+                        "shaped updates; run it flat (n_silos=1)")
+                ups = _stack_updates(es)
+                # host-side weights: the silo tier sums them per silo
+                # without ever syncing the device pipeline
+                w = np.asarray(
+                    [e.weight
+                     * strat.staleness_weight(self.version - e.version)
+                     for e in es], np.float32)
+                clip = (jnp.float32(privacy.current_clip(strat))
+                        if strat.dp is not None else None)
+                new, n_silos_present = self._silo.commit(
+                    plan, tr0, es, ups, w, rng, clip)
+                if adaptive:
+                    privacy.observe_update_norms(strat, cohort_norms(ups))
+                payload = strat.comm_bytes_per_round() // max(
+                    1, self.sim.fed.clients_per_round)
+                self.tier_bytes["edge"] += payload * len(es)
+                self.tier_bytes["silo"] += payload * n_silos_present
             else:
                 ups = _stack_updates(es)
                 masks = stack_masks([e.masks for e in es])
@@ -549,10 +1076,12 @@ class FedScheduler:
         strat.end_commit()
         self.version += 1
         self.committed_updates += len(entries)
+        self.events += 1
         if strat.dp is not None:
             strat.dp_accountant.step(
                 strat.dp.noise_multiplier,
-                q=len(entries) / max(1, len(self.sim.clients)))
+                q=len(entries) / max(1, self.sim.n_clients))
+        self.sim.release_clients([e.client for e in consumed])
         return len(entries), stale
 
     # ------------------------------------------------------------ sync mode
@@ -564,9 +1093,20 @@ class FedScheduler:
         sim, strat = self.sim, self.strategy
         eval_b = sim.eval_batch()
         for r in range(self._round, rounds):
-            clients = sim.sample_clients(strat.memory_method,
-                                         **strat.memory_kwargs(r))
-            if clients:
+            clients = self._sample(sim.fed.clients_per_round, r) \
+                if (self._silo is not None or self._silo_trace()) \
+                else sim.sample_clients(strat.memory_method,
+                                        **strat.memory_kwargs(r))
+            if clients and self._silo is not None:
+                # hierarchical lockstep: the wave rides the scheduler's
+                # dispatch/commit path so the silo tier sees every commit
+                wave = self._dispatch(clients, r)
+                self.clock = max((p.finish for p in wave),
+                                 default=self.clock)
+                self._commit([p for p in wave if not p.failed])
+                sim.release_clients(
+                    [p.client for p in wave if p.failed])
+            elif clients:
                 # cost reads the plan *before* the commit — stage-advance
                 # strategies (chainfed) move to the next plan on commit
                 dt = max(self._round_time(c, strat.plan(c, r))
@@ -575,6 +1115,8 @@ class FedScheduler:
                 self.clock += dt
                 self.version += 1
                 self.committed_updates += len(clients)
+                self.events += len(clients) + 1
+                sim.release_clients(clients)
             if (r + 1) % eval_every == 0 or r == rounds - 1:
                 self._history.append(self._metric(r, eval_b, len(clients),
                                                   0, verbose))
@@ -622,11 +1164,12 @@ class FedScheduler:
             # into the new cohort mid-flight
             busy = frozenset(p.client.cid for p in self._carried)
             clients = self._sample(sim.fed.clients_per_round, r, busy=busy)
-            if not clients and self._has_trace():
+            if not clients and self._churny():
                 delay = self.backoff_base
                 for _ in range(self.max_backoff_retries):
                     self.clock += delay
                     self.backoff_retries += 1
+                    self.events += 1
                     delay = min(delay * 2.0, self.backoff_cap)
                     clients = self._sample(sim.fed.clients_per_round, r,
                                            busy=busy)
@@ -660,6 +1203,11 @@ class FedScheduler:
                              if p.finish > deadline]
             if self.straggler == "carry":
                 self._carried += stragglers
+            else:
+                # aborted stragglers never reach a commit — hand their
+                # clients straight back to the lazy pool
+                sim.release_clients([p.client for p in stragglers])
+            sim.release_clients([p.client for p in failed])
             for p in on_time:
                 self._lat_window.append(p.finish - p.start)
             for p in stragglers + failed:
@@ -686,6 +1234,7 @@ class FedScheduler:
         delay = min(self.backoff_base * (2.0 ** retry), self.backoff_cap)
         self._seq += 1
         self.backoff_retries += 1
+        self.events += 1
         heapq.heappush(self._heap, _Pending(
             finish=self.clock + delay, client=None, plan=None, bucket=None,
             bi=-1, masks={}, weight=0.0, version=self.version,
@@ -705,7 +1254,7 @@ class FedScheduler:
             heapq.heappush(self._heap, q)
             if retry > 0:
                 self.redispatches += 1
-        if want > 0 and len(got) < want and self._has_trace():
+        if want > 0 and len(got) < want and self._churny():
             self._push_retry(retry)
 
     def _seed_async(self):
@@ -742,6 +1291,7 @@ class FedScheduler:
                 if p.failed:
                     # timeout event: the client died mid-round — re-dispatch
                     # a replacement on the same heap and keep draining
+                    self.sim.release_clients([p.client])
                     busy = frozenset(q.client.cid for q in self._heap
                                      if q.client is not None)
                     got = self._dispatch(self._sample(1, self._done, busy),
@@ -749,7 +1299,7 @@ class FedScheduler:
                     for q in got:
                         heapq.heappush(self._heap, q)
                         self.redispatches += 1
-                    if not got and self._has_trace():
+                    if not got and self._churny():
                         self._push_retry(0)
                     continue
                 self._buffered.append(p)

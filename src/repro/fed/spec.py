@@ -1,0 +1,404 @@
+"""Declarative experiment configuration (ISSUE 8 api_redesign).
+
+One frozen, serializable ``ExperimentSpec`` replaces the 50+ loose kwargs /
+CLI flags that ``run_experiment`` and ``launch.train`` had accreted.  The
+spec is the *single source of truth* for a run's configuration:
+
+* ``run_experiment(spec=ExperimentSpec(...))`` consumes it directly and
+  reproduces the exact results of the equivalent flag invocation;
+* ``launch.train`` builds it from flags (``--config spec.json`` round-trips
+  it through :meth:`ExperimentSpec.to_json` / :meth:`from_json`);
+* the scheduler embeds it in checkpoints, so ``--resume`` validates the
+  *whole* configuration field-by-field (:meth:`ExperimentSpec.diff`), not
+  just the mode/strategy/fleet/seed handful;
+* live objects that cannot serialize (a prebuilt ``FedSim``, pretrained
+  ``params``, a bespoke ``ModelConfig``) stay *outside* the spec as
+  explicit overrides on ``run_experiment``.
+
+Design rule: every field is a JSON scalar (or a tuple of ``(key, value)``
+pairs standing in for a dict), defaults mirror the runtime objects they
+configure, and ``None`` means "derive it" (e.g. ``PrivacySpec.seed=None``
+inherits ``RunSpec.seed``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+Pairs = Tuple[Tuple[str, object], ...]
+
+
+def freeze_opts(opts) -> Pairs:
+    """Normalize a kwargs dict (or pair tuple) into sorted hashable pairs —
+    the frozen-dataclass-safe stand-in for a dict field."""
+    if opts is None:
+        return ()
+    if isinstance(opts, dict):
+        items = opts.items()
+    else:
+        items = ((k, v) for k, v in opts)
+    return tuple(sorted((str(k), _freeze_value(v)) for k, v in items))
+
+
+def _freeze_value(v):
+    if isinstance(v, dict):
+        return freeze_opts(v)
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze_value(x) for x in v)
+    return v
+
+
+def thaw_opts(pairs: Pairs) -> dict:
+    return {k: v for k, v in pairs}
+
+
+# ================================================================ sections
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """What trains, on what data, for how long — model/chain/population."""
+    strategy: str = "chainfed"
+    arch: str = "bert_tiny"
+    smoke: bool = False                 # reduced smoke variant of the arch
+    task: str = "classification"
+    dataset: str = "agnews"
+    batch_size: int = 8
+    rounds: int = 20                    # async mode: server commits
+    eval_every: int = 5
+    seed: int = 0
+    memory_constrained: bool = True
+    pretrain_steps: int = 0
+    strategy_opts: Pairs = ()           # constructor kwargs for the strategy
+    # ---- chain schedule (ChainConfig) ----
+    window: int = 3
+    lam: float = 0.2
+    foat_threshold: float = 0.8
+    local_steps: int = 1
+    lr: float = 1e-3
+    optimizer: str = "adamw"
+    # ---- population (FedConfig) ----
+    n_clients: int = 16
+    clients_per_round: int = 4
+    dirichlet_alpha: float = 1.0
+    iid: bool = False
+    # ---- lazy ClientPool population (ISSUE 8) ----
+    lazy: bool = False                  # O(active cohort) resident state
+    shard_size: Optional[int] = None    # examples per lazy client shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """Event-driven runtime knobs (``FedScheduler``)."""
+    mode: str = "sync"                  # sync | semisync | async
+    concurrency: Optional[int] = None   # async clients in flight
+    buffer_size: Optional[int] = None   # async completions per commit
+    deadline_quantile: float = 0.75     # semisync cutoff
+    straggler: str = "drop"             # semisync: drop | carry
+    bucket_pad: Optional[int] = None    # dispatch-bucket pad target
+    pad_policy: str = "fixed"           # fixed | pow2 (per-completion async)
+    staleness_cap: Optional[int] = None
+    backoff_base: float = 1.0
+    backoff_cap: float = 60.0
+    max_backoff_retries: int = 60
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacySpec:
+    """Client-level DP + secure aggregation (``repro.fed.privacy``)."""
+    clip: Optional[float] = None        # None → DP off
+    noise_multiplier: float = 1.0
+    delta: float = 1e-5
+    adaptive_clip: bool = False
+    target_quantile: float = 0.5
+    clip_lr: float = 0.2
+    seed: Optional[int] = None          # None → RunSpec.seed
+    secure_agg: bool = False
+    fixedpoint_bits: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Fault injection, availability churn, robust server aggregation."""
+    dropout_prob: float = 0.0
+    byzantine_frac: float = 0.0
+    byzantine_scale: float = -10.0
+    attack: str = "scaling"             # scaling | replacement
+    replace_boost: float = 4.0
+    straggler_prob: float = 0.0
+    straggler_factor: float = 4.0
+    timeout_factor: float = 1.0
+    seed: Optional[int] = None          # None → RunSpec.seed
+    trace: Optional[str] = None         # diurnal | flaky | None
+    trace_period: float = 1000.0
+    trace_uptime: float = 0.45          # diurnal duty cycle
+    aggregator: Optional[str] = None    # robust server aggregation override
+    aggregator_opts: Pairs = ()
+
+    @property
+    def any_faults(self) -> bool:
+        return bool(self.dropout_prob or self.byzantine_frac
+                    or self.straggler_prob)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Edge → cross-silo → server hierarchy (``repro.fed.runtime.Topology``).
+    ``n_silos=1`` is the flat cohort."""
+    n_silos: int = 1
+    assign: str = "block"               # block | mod
+    aggregator: str = "fedavg"          # silo-tier aggregation
+    aggregator_opts: Pairs = ()
+    trace: Optional[str] = None         # per-silo availability trace kind
+    trace_period: float = 1000.0
+    trace_uptime: float = 0.45
+    trace_seed: Optional[int] = None    # None → RunSpec.seed
+
+
+_SECTIONS = (("run", RunSpec), ("schedule", ScheduleSpec),
+             ("privacy", PrivacySpec), ("faults", FaultSpec),
+             ("topology", TopologySpec))
+
+
+# ============================================================ the composite
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    run: RunSpec = dataclasses.field(default_factory=RunSpec)
+    schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
+    privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
+    faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        out = {}
+        for name, _ in _SECTIONS:
+            sec = dataclasses.asdict(getattr(self, name))
+            out[name] = {k: (list(v) if isinstance(v, tuple) else v)
+                         for k, v in sec.items()}
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        kw = {}
+        for name, sec_cls in _SECTIONS:
+            raw = dict(d.get(name, {}))
+            fields = {f.name for f in dataclasses.fields(sec_cls)}
+            unknown = set(raw) - fields
+            if unknown:
+                raise ValueError(
+                    f"unknown {name} spec field(s): {sorted(unknown)}")
+            for k in ("strategy_opts", "aggregator_opts"):
+                if k in raw and raw[k] is not None:
+                    raw[k] = freeze_opts(
+                        raw[k] if isinstance(raw[k], dict)
+                        else [tuple(p) for p in raw[k]])
+            kw[name] = sec_cls(**raw)
+        unknown = set(d) - {n for n, _ in _SECTIONS}
+        if unknown:
+            raise ValueError(f"unknown spec section(s): {sorted(unknown)}")
+        return cls(**kw)
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    # ---------------------------------------------------------- validation
+    def diff(self, other: "ExperimentSpec") -> dict:
+        """Field-level differences, ``{"section.field": (self, other)}`` —
+        the resume validator refuses a checkpoint on *any* entry."""
+        out = {}
+        for name, sec_cls in _SECTIONS:
+            a, b = getattr(self, name), getattr(other, name)
+            for f in dataclasses.fields(sec_cls):
+                va, vb = getattr(a, f.name), getattr(b, f.name)
+                if _norm(va) != _norm(vb):
+                    out[f"{name}.{f.name}"] = (va, vb)
+        return out
+
+
+def _norm(v):
+    """JSON round-trip normalization: tuples and lists compare equal."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_norm(x) for x in v)
+    return v
+
+
+# ==================================================== spec → runtime objects
+def build_configs(spec: ExperimentSpec):
+    """``(cfg, chain, fed)`` exactly as ``launch.train`` builds them from
+    the equivalent flags."""
+    from ..configs import get_config, get_smoke_config
+    from ..models.config import ChainConfig, FedConfig
+    r = spec.run
+    cfg = get_smoke_config(r.arch) if r.smoke else get_config(r.arch)
+    chain = ChainConfig(window=r.window, lam=r.lam,
+                        foat_threshold=r.foat_threshold,
+                        local_steps=r.local_steps, lr=r.lr,
+                        optimizer=r.optimizer)
+    fed = FedConfig(n_clients=r.n_clients,
+                    clients_per_round=r.clients_per_round,
+                    rounds=r.rounds, iid=r.iid,
+                    dirichlet_alpha=r.dirichlet_alpha, seed=r.seed)
+    return cfg, chain, fed
+
+
+def build_dp(spec: ExperimentSpec) -> Optional[dict]:
+    p = spec.privacy
+    if p.clip is None:
+        return None
+    return {"clip": p.clip, "noise_multiplier": p.noise_multiplier,
+            "delta": p.delta,
+            "seed": p.seed if p.seed is not None else spec.run.seed,
+            "adaptive_clip": p.adaptive_clip,
+            "target_quantile": p.target_quantile, "clip_lr": p.clip_lr}
+
+
+def build_faults(spec: ExperimentSpec) -> Optional[dict]:
+    f = spec.faults
+    if not f.any_faults:
+        return None
+    return {"dropout_prob": f.dropout_prob,
+            "byzantine_frac": f.byzantine_frac,
+            "byzantine_scale": f.byzantine_scale,
+            "attack": f.attack, "replace_boost": f.replace_boost,
+            "straggler_prob": f.straggler_prob,
+            "straggler_factor": f.straggler_factor,
+            "timeout_factor": f.timeout_factor,
+            "seed": f.seed if f.seed is not None else spec.run.seed}
+
+
+def build_trace(spec: ExperimentSpec) -> Optional[dict]:
+    f = spec.faults
+    if f.trace is None:
+        return None
+    t = {"kind": f.trace, "period": f.trace_period,
+         "seed": f.seed if f.seed is not None else spec.run.seed}
+    if f.trace == "diurnal":
+        t["uptime"] = f.trace_uptime
+    return t
+
+
+def build_topology(spec: ExperimentSpec):
+    """A ``repro.fed.runtime.Topology`` — or None for the flat cohort."""
+    t = spec.topology
+    if t.n_silos <= 1 and t.trace is None:
+        return None
+    from ..data.partition import make_trace
+    from .runtime import Topology
+    silo_trace = None
+    if t.trace is not None:
+        kw = {"period": t.trace_period,
+              "seed": (t.trace_seed if t.trace_seed is not None
+                       else spec.run.seed)}
+        if t.trace == "diurnal":
+            kw["uptime"] = t.trace_uptime
+        silo_trace = make_trace(t.trace, t.n_silos, **kw)
+    return Topology(n_silos=t.n_silos, assign=t.assign,
+                    aggregator=t.aggregator,
+                    aggregator_opts=freeze_opts(t.aggregator_opts),
+                    trace=silo_trace)
+
+
+def build_scheduler_opts(spec: ExperimentSpec) -> dict:
+    """Constructor kwargs for ``FedScheduler`` (``faults``/``trace``/
+    ``topology`` objects are attached by ``run_experiment``)."""
+    s = spec.schedule
+    so = {"deadline_quantile": s.deadline_quantile,
+          "straggler": s.straggler, "pad_policy": s.pad_policy,
+          "backoff_base": s.backoff_base, "backoff_cap": s.backoff_cap,
+          "max_backoff_retries": s.max_backoff_retries}
+    for k in ("concurrency", "buffer_size", "bucket_pad", "staleness_cap"):
+        v = getattr(s, k)
+        if v is not None:
+            so[k] = v
+    return so
+
+
+# ======================================================== kwargs → spec shim
+def spec_from_kwargs(strategy, *, arch="bert_tiny", task="classification",
+                     dataset="agnews", batch_size=8, rounds=20, eval_every=5,
+                     seed=0, memory_constrained=True, pretrain_steps=0,
+                     strategy_opts=None, mode="sync", scheduler_opts=None,
+                     dp=None, secure_agg=None, aggregator=None,
+                     aggregator_opts=None, faults=None, trace=None,
+                     chain=None, fed=None,
+                     lazy=False, shard_size=None) -> Optional[ExperimentSpec]:
+    """Best-effort spec for a legacy kwargs invocation — used to embed a
+    validated configuration in checkpoints.  Returns None when the kwargs
+    carry live objects a spec cannot faithfully represent (prebuilt traces
+    or fault models, a ``Topology`` instance, custom callables); callers
+    treat None as "no spec to embed", never an error."""
+    try:
+        run_kw = dict(strategy=str(strategy), arch=arch, task=task,
+                      dataset=dataset, batch_size=int(batch_size),
+                      rounds=int(rounds), eval_every=int(eval_every),
+                      seed=int(seed),
+                      memory_constrained=bool(memory_constrained),
+                      pretrain_steps=int(pretrain_steps),
+                      strategy_opts=freeze_opts(strategy_opts),
+                      lazy=bool(lazy), shard_size=shard_size)
+        if chain is not None:
+            run_kw.update(window=chain.window, lam=chain.lam,
+                          foat_threshold=chain.foat_threshold,
+                          local_steps=chain.local_steps, lr=chain.lr,
+                          optimizer=chain.optimizer)
+        if fed is not None:
+            run_kw.update(n_clients=fed.n_clients,
+                          clients_per_round=fed.clients_per_round,
+                          dirichlet_alpha=fed.dirichlet_alpha, iid=fed.iid)
+        so = dict(scheduler_opts or {})
+        topology = so.pop("topology", None)
+        topo_kw = {}
+        if topology is not None:
+            if topology.trace is not None:
+                return None      # a prebuilt trace object — not declarative
+            topo_kw = dict(n_silos=topology.n_silos, assign=topology.assign,
+                           aggregator=topology.aggregator,
+                           aggregator_opts=freeze_opts(
+                               topology.aggregator_opts))
+        sched_fields = {f.name for f in dataclasses.fields(ScheduleSpec)}
+        if not set(so) <= sched_fields:
+            return None
+        priv_kw = {}
+        if dp is not None:
+            d = dataclasses.asdict(dp) if dataclasses.is_dataclass(dp) \
+                else dict(dp)
+            priv_kw = {k: d[k] for k in
+                       ("clip", "noise_multiplier", "delta", "seed",
+                        "adaptive_clip", "target_quantile", "clip_lr")
+                       if k in d}
+        if secure_agg:
+            priv_kw["secure_agg"] = True
+            if dataclasses.is_dataclass(secure_agg):
+                priv_kw["fixedpoint_bits"] = secure_agg.fixedpoint_bits
+        fault_kw = {}
+        if faults is not None:
+            d = dataclasses.asdict(faults) \
+                if dataclasses.is_dataclass(faults) else dict(faults)
+            fault_kw.update(d)
+        if trace is not None:
+            if not isinstance(trace, dict):
+                return None      # prebuilt AvailabilityTrace object
+            t = dict(trace)
+            fault_kw["trace"] = t.pop("kind")
+            if "period" in t:
+                fault_kw["trace_period"] = t.pop("period")
+            if "uptime" in t:
+                fault_kw["trace_uptime"] = t.pop("uptime")
+            t.pop("seed", None)
+            if t:                # trace kwargs the spec has no field for
+                return None
+        if aggregator is not None:
+            fault_kw["aggregator"] = aggregator
+            fault_kw["aggregator_opts"] = freeze_opts(aggregator_opts)
+        return ExperimentSpec(
+            run=RunSpec(**run_kw),
+            schedule=ScheduleSpec(mode=mode, **so),
+            privacy=PrivacySpec(**priv_kw),
+            faults=FaultSpec(**fault_kw),
+            topology=TopologySpec(**topo_kw))
+    except (TypeError, ValueError, AttributeError, KeyError):
+        return None

@@ -741,6 +741,9 @@ class Strategy:
     aggregator_opts = None    # kwargs for the aggregator factory
     secure_compatible = True  # False: aggregation is not a linear weighted
                               # mean of uploads (FedRA holder normalization)
+    grad_programs = ("ad",)   # gradient programs the strategy can run —
+                              # "ad" backprop; fwdllm adds "spsa"/"jvp",
+                              # fedkseed "kseed" (describe_strategy reads it)
 
     def __init__(self, cfg: ModelConfig, chain: ChainConfig, key):
         self.cfg, self.chain = cfg, chain
@@ -1003,7 +1006,7 @@ class Strategy:
         if self.dp is not None:
             self.dp_accountant.step(
                 self.dp.noise_multiplier,
-                q=len(clients) / max(1, len(sim.clients)))
+                q=len(clients) / max(1, sim.n_clients))
 
     def sequential_round(self, sim, clients, round_idx):
         """Legacy per-client dispatch loop: one jitted ``local_step`` call per

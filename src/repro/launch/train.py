@@ -18,14 +18,81 @@ import argparse
 import json
 import time
 
-from ..configs import get_config, get_smoke_config
 from ..data.synthetic import DATASETS
-from ..fed.registry import available_strategies, run_experiment
-from ..models.config import ChainConfig, FedConfig
+from ..fed.registry import (available_strategies, describe_strategy,
+                            list_strategies, run_experiment)
+from ..fed.spec import (ExperimentSpec, FaultSpec, PrivacySpec, RunSpec,
+                        ScheduleSpec, TopologySpec, build_configs,
+                        freeze_opts)
+
+
+def spec_from_args(args) -> ExperimentSpec:
+    """The declarative spec equivalent of this flag invocation — by
+    construction, ``--config <dump>`` reproduces the flag run exactly."""
+    agg_opts = {}
+    if args.aggregator == "trimmed_mean":
+        agg_opts = {"trim": args.trim_frac}
+    elif args.aggregator == "krum":
+        agg_opts = {"f": args.krum_f}
+    elif args.aggregator == "multi_krum":
+        agg_opts = {"f": args.krum_f, "m": args.krum_m}
+    return ExperimentSpec(
+        run=RunSpec(
+            strategy=args.method, arch=args.arch, smoke=args.smoke,
+            task=args.task, dataset=args.dataset,
+            batch_size=args.batch_size, rounds=args.rounds,
+            eval_every=args.eval_every, seed=args.seed,
+            memory_constrained=not args.unconstrained_memory,
+            window=args.window, lam=args.lam,
+            foat_threshold=args.threshold, local_steps=args.local_steps,
+            lr=args.lr, optimizer=args.optimizer,
+            n_clients=args.clients,
+            clients_per_round=args.clients_per_round,
+            dirichlet_alpha=args.alpha, iid=args.iid,
+            lazy=args.lazy_pool, shard_size=args.shard_size),
+        schedule=ScheduleSpec(
+            mode=args.mode, concurrency=args.concurrency,
+            buffer_size=args.buffer_size,
+            deadline_quantile=args.deadline_quantile,
+            straggler=args.straggler, pad_policy=args.pad_policy,
+            backoff_base=args.backoff_base, backoff_cap=args.backoff_cap),
+        privacy=PrivacySpec(
+            clip=args.dp_clip, noise_multiplier=args.dp_noise,
+            delta=args.dp_delta, adaptive_clip=args.adaptive_clip,
+            target_quantile=args.clip_quantile, clip_lr=args.clip_lr,
+            secure_agg=args.secure_agg),
+        faults=FaultSpec(
+            dropout_prob=args.dropout_prob,
+            byzantine_frac=args.byzantine_frac,
+            byzantine_scale=args.byzantine_scale, attack=args.attack,
+            replace_boost=args.replace_boost,
+            straggler_prob=args.straggler_prob,
+            trace=args.trace, trace_period=args.trace_period,
+            trace_uptime=args.trace_uptime,
+            aggregator=args.aggregator,
+            aggregator_opts=freeze_opts(agg_opts)),
+        topology=TopologySpec(
+            n_silos=args.silos, assign=args.silo_assign,
+            aggregator=args.silo_aggregator, trace=args.silo_trace,
+            trace_period=args.trace_period,
+            trace_uptime=args.trace_uptime))
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None, metavar="SPEC_JSON",
+                    help="load the full ExperimentSpec from a JSON file "
+                         "(see --dump-config); config flags are ignored, "
+                         "invocation flags (--resume, --save, ...) still "
+                         "apply")
+    ap.add_argument("--dump-config", default=None, metavar="PATH",
+                    help="write this invocation's ExperimentSpec as JSON "
+                         "and exit (round-trips through --config)")
+    ap.add_argument("--list-strategies", action="store_true",
+                    help="print the strategy registry (name, grad programs, "
+                         "accepted options) and exit")
+    ap.add_argument("--describe", default=None, metavar="STRATEGY",
+                    help="print one strategy's spec knobs and exit")
     ap.add_argument("--arch", default="bert_tiny")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config of --arch")
@@ -113,8 +180,34 @@ def main(argv=None):
     ap.add_argument("--halt-after", type=int, default=None,
                     help="stop after this round/commit (crash simulation "
                          "for the resume-equality smoke)")
+    ap.add_argument("--silos", type=int, default=1,
+                    help="cross-silo aggregation tier: number of silos "
+                         "(1 = flat cohort)")
+    ap.add_argument("--silo-assign", default="block",
+                    choices=["block", "mod"],
+                    help="client → silo assignment policy")
+    ap.add_argument("--silo-aggregator", default="fedavg",
+                    choices=["fedavg", "trimmed_mean", "median", "norm_clip",
+                             "krum", "multi_krum"],
+                    help="silo-tier aggregation (robust entries filter "
+                         "byzantine members inside their silo)")
+    ap.add_argument("--silo-trace", default=None,
+                    choices=["diurnal", "flaky"],
+                    help="per-silo availability trace (a silo going dark "
+                         "takes its members offline)")
+    ap.add_argument("--pad-policy", default="fixed",
+                    choices=["fixed", "pow2"],
+                    help="dispatch-bucket pad targets: fixed bucket_pad or "
+                         "powers of two (per-completion async)")
+    ap.add_argument("--lazy-pool", action="store_true",
+                    help="lazy ClientPool population: clients synthesized "
+                         "from (seed, cid) at dispatch, O(active cohort) "
+                         "resident state — enables planet-scale --clients")
+    ap.add_argument("--shard-size", type=int, default=None,
+                    help="examples per lazy client shard")
     ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--clients", "--population", type=int, default=16,
+                    dest="clients", help="population size")
     ap.add_argument("--clients-per-round", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch-size", type=int, default=8)
@@ -133,66 +226,40 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    chain = ChainConfig(window=args.window, lam=args.lam,
-                        foat_threshold=args.threshold,
-                        local_steps=args.local_steps, lr=args.lr,
-                        optimizer=args.optimizer)
-    fed = FedConfig(n_clients=args.clients,
-                    clients_per_round=args.clients_per_round,
-                    rounds=args.rounds, iid=args.iid,
-                    dirichlet_alpha=args.alpha, seed=args.seed)
+    if args.list_strategies:
+        for d in list_strategies():
+            opts = ", ".join(f"{k}={v!r}" for k, v in d["options"].items())
+            print(f"{d['name']:22s} grad={'/'.join(d['grad_programs'])} "
+                  f"mem={d['memory_method']}"
+                  + (f"  options: {opts}" if opts else ""))
+        return []
+    if args.describe is not None:
+        print(json.dumps(describe_strategy(args.describe), indent=1,
+                         default=str))
+        return []
 
-    print(f"== {args.method} on {cfg.arch_id} ({args.task}/{args.dataset}) "
-          f"mode={args.mode} rounds={args.rounds} Q={args.window} "
-          f"λ={args.lam} T={args.threshold}")
-    sched = {}
-    if args.mode == "async":
-        sched = {k: v for k, v in (("buffer_size", args.buffer_size),
-                                   ("concurrency", args.concurrency))
-                 if v is not None}
-    elif args.mode == "semisync":
-        sched = {"deadline_quantile": args.deadline_quantile,
-                 "straggler": args.straggler}
-    if args.trace is not None:
-        sched.update({"backoff_base": args.backoff_base,
-                      "backoff_cap": args.backoff_cap})
-    dp = None
-    if args.dp_clip is not None:
-        dp = {"clip": args.dp_clip, "noise_multiplier": args.dp_noise,
-              "delta": args.dp_delta, "seed": args.seed,
-              "adaptive_clip": args.adaptive_clip,
-              "target_quantile": args.clip_quantile,
-              "clip_lr": args.clip_lr}
-    faults = None
-    if args.dropout_prob or args.byzantine_frac or args.straggler_prob:
-        faults = {"dropout_prob": args.dropout_prob,
-                  "byzantine_frac": args.byzantine_frac,
-                  "byzantine_scale": args.byzantine_scale,
-                  "attack": args.attack, "replace_boost": args.replace_boost,
-                  "straggler_prob": args.straggler_prob, "seed": args.seed}
-    trace = None
-    if args.trace is not None:
-        trace = {"kind": args.trace, "period": args.trace_period,
-                 "seed": args.seed}
-        if args.trace == "diurnal":
-            trace["uptime"] = args.trace_uptime
-    agg_opts = None
-    if args.aggregator == "trimmed_mean":
-        agg_opts = {"trim": args.trim_frac}
-    elif args.aggregator == "krum":
-        agg_opts = {"f": args.krum_f}
-    elif args.aggregator == "multi_krum":
-        agg_opts = {"f": args.krum_f, "m": args.krum_m}
+    if args.config is not None:
+        with open(args.config) as f:
+            spec = ExperimentSpec.from_json(f.read())
+    else:
+        spec = spec_from_args(args)
+    if args.dump_config is not None:
+        with open(args.dump_config, "w") as f:
+            f.write(spec.to_json())
+        print("spec:", args.dump_config)
+        return []
+
+    cfg, _, _ = build_configs(spec)
+    r = spec.run
+    print(f"== {r.strategy} on {cfg.arch_id} ({r.task}/{r.dataset}) "
+          f"mode={spec.schedule.mode} rounds={r.rounds} Q={r.window} "
+          f"λ={r.lam} T={r.foat_threshold}"
+          + (f" silos={spec.topology.n_silos}"
+             if spec.topology.n_silos > 1 else "")
+          + (" lazy-pool" if r.lazy else ""))
     t0 = time.time()
     result = run_experiment(
-        args.method, cfg=cfg, chain=chain, fed=fed, task=args.task,
-        dataset=args.dataset, batch_size=args.batch_size, rounds=args.rounds,
-        eval_every=args.eval_every, seed=args.seed,
-        memory_constrained=not args.unconstrained_memory, verbose=True,
-        mode=args.mode, scheduler_opts=sched or None,
-        dp=dp, secure_agg=args.secure_agg or None, aggregator=args.aggregator,
-        aggregator_opts=agg_opts, faults=faults, trace=trace,
+        spec=spec, verbose=True,
         checkpoint_every=args.checkpoint_every,
         checkpoint_path=args.checkpoint_path, resume=args.resume,
         halt_after=args.halt_after)
@@ -202,16 +269,25 @@ def main(argv=None):
     print(f"== done in {dt:.1f}s  final acc="
           f"{final.acc if final else float('nan'):.4f}  virtual wallclock="
           f"{final.wallclock if final else 0.0:.1f}s")
-    if dp and final is not None:
+    if spec.privacy.clip is not None and final is not None:
         print(f"== privacy spend: ε={final.dp_epsilon:.2f} at "
-              f"δ={args.dp_delta:g}")
-    if result.scheduler is not None:
-        s = result.scheduler
-        if s.faults is not None:
+              f"δ={spec.privacy.delta:g}")
+    s = result.scheduler
+    if s is not None:
+        if s.faults is not None or s.topology is not None:
             print(f"== churn: fault_dropouts={s.fault_dropouts} "
                   f"trace_dropouts={s.trace_dropouts} "
+                  f"silo_dropouts={s.silo_dropouts} "
                   f"redispatches={s.redispatches} "
                   f"backoff_retries={s.backoff_retries}")
+        if s.topology is not None and s.topology.n_silos > 1:
+            print(f"== hierarchy: silos={s.topology.n_silos} "
+                  f"edge_bytes={s.tier_bytes['edge']} "
+                  f"silo_bytes={s.tier_bytes['silo']}")
+        if r.lazy:
+            print(f"== lazy pool: resident={result.sim.pool.resident} "
+                  f"max_resident={result.sim.pool.max_resident} "
+                  f"max_resident_bytes={result.sim.pool.max_resident_bytes}")
         if args.checkpoint_every or args.resume:
             # the crash-resume smoke parses this line: every compiled cohort
             # fn must hold exactly one cache entry (no resume recompiles)

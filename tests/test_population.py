@@ -1,0 +1,329 @@
+"""Planet-scale population runtime (ISSUE 8): hierarchical edge → silo →
+server aggregation equals the flat cohort (the 1-silo topology routes
+through the unmodified flat commit, N-silo matches to ≤1e-5 for uniform and
+weighted cohorts), lazy ``ClientPool`` synthesis is deterministic in
+``(seed, cid)`` and keeps resident state O(active cohort) at a 10⁶-client
+population, a kill/resume through a hierarchical + lazy run is
+bit-identical, per-completion async (pow2 dispatch batching) matches the
+buffer=1 fixed-pad path, and the event loop stays recompile-free."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.memory import hierarchy_comm_bytes
+from repro.data.partition import AvailabilityTrace, uniform_profiles
+from repro.data.synthetic import (DATASETS, classification_batch,
+                                  make_classification)
+from repro.fed.engine import FedSim
+from repro.fed.registry import make_strategy
+from repro.fed.runtime import FedScheduler, SiloAggregator, Topology
+from repro.models.config import ChainConfig, FedConfig
+
+CFG = get_config("bert_tiny").replace(n_layers=4, d_model=64, d_ff=128)
+CHAIN = ChainConfig(window=2, local_steps=1, lr=3e-3)
+KEY = jax.random.PRNGKey(0)
+
+
+def build_sim(seed=3, n_clients=6, clients_per_round=3, batch_size=4,
+              uniform=False, iid=False, lazy=False, shard_size=None):
+    spec = dataclasses.replace(DATASETS["agnews"], vocab=CFG.vocab_size)
+    tokens, labels = make_classification(spec)
+    batch_fn = lambda idx: classification_batch(spec, tokens, labels, idx)
+    fed = FedConfig(n_clients=n_clients, clients_per_round=clients_per_round,
+                    seed=seed, iid=iid)
+    sim = FedSim(CFG, fed, tokens, labels, batch_fn, batch_size=batch_size,
+                 memory_constrained=False, lazy=lazy, shard_size=shard_size)
+    if uniform and not lazy:
+        for c, p in zip(sim.clients, uniform_profiles(n_clients)):
+            c.profile = p
+    return sim
+
+
+def run_topo(topology, mode="sync", rounds=4, name="full_adapters",
+             eval_every=2, sim_kw=None, sched_kw=None, dp=False):
+    sim = build_sim(**(sim_kw or {}))
+    strat = make_strategy(name, CFG, CHAIN, KEY)
+    if dp:
+        from repro.fed.privacy import DPConfig, enable_dp
+        enable_dp(strat, DPConfig(clip=0.5, noise_multiplier=0.0, delta=1e-5))
+    sched = FedScheduler(sim, strat, mode=mode, topology=topology,
+                         **(sched_kw or {}))
+    hist = sched.run(rounds, eval_every=eval_every)
+    leaves = [np.asarray(l)
+              for l in jax.tree_util.tree_leaves(strat.adapters)]
+    return hist, leaves, sched
+
+
+def metric_rows(hist):
+    return [(m.round, m.loss, m.acc, m.n_participants) for m in hist]
+
+
+# ===================================================== hierarchy ≡ flat
+def test_one_silo_topology_routes_through_flat_path():
+    """``n_silos=1`` must be *literally* the flat path — no ``SiloAggregator``
+    is even constructed, so the histories and trainables are bit-identical
+    by construction (and verified here anyway)."""
+    h_flat, s_flat, _ = run_topo(None)
+    h_one, s_one, sched = run_topo(Topology(n_silos=1))
+    assert sched._silo is None
+    assert metric_rows(h_flat) == metric_rows(h_one)
+    for a, b in zip(s_flat, s_one):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("assign", ["block", "mod"])
+def test_hierarchy_matches_flat_weighted_cohort(assign):
+    """2-tier aggregation over dirichlet (non-uniform sample weight) cohorts
+    is the same weighted mean as the flat commit, differing only in float
+    summation order: every eval and the final trainables agree to ≤1e-5."""
+    h_flat, s_flat, _ = run_topo(None)
+    h_hier, s_hier, sched = run_topo(Topology(n_silos=3, assign=assign))
+    assert [(m.round, m.n_participants) for m in h_flat] == \
+           [(m.round, m.n_participants) for m in h_hier]
+    for a, b in zip(h_flat, h_hier):
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(a.acc, b.acc, rtol=1e-5, atol=1e-5)
+    for a, b in zip(s_flat, s_hier):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+    # every silo that held sampled members contributed
+    assert int(sched._silo.silo_updates.sum()) == sched.committed_updates
+
+
+def test_hierarchy_matches_flat_uniform_weights():
+    """IID shards → equal sample counts → uniform weights: the two-tier mean
+    collapses to the flat mean exactly (up to summation order)."""
+    kw = {"iid": True, "clients_per_round": 4, "n_clients": 8}
+    h_flat, s_flat, _ = run_topo(None, sim_kw=kw, rounds=3)
+    h_hier, s_hier, _ = run_topo(Topology(n_silos=2), sim_kw=kw, rounds=3)
+    for a, b in zip(h_flat, h_hier):
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-5, atol=1e-5)
+    for a, b in zip(s_flat, s_hier):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_hierarchy_dp_clips_at_silo_tier_matches_flat():
+    """σ=0 isolates the clip: per-tier DP (members clipped at the silo, the
+    uniform live-member mean at the server) must equal the flat private
+    aggregate's clip-then-mean to float tolerance."""
+    h_flat, s_flat, _ = run_topo(None, dp=True)
+    h_hier, s_hier, _ = run_topo(Topology(n_silos=2), dp=True)
+    for a, b in zip(s_flat, s_hier):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+    for a, b in zip(h_flat, h_hier):
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-5, atol=1e-5)
+
+
+def test_hierarchy_tier_bytes_accounting():
+    """Edge traffic counts every member upload; WAN traffic one payload per
+    contributing silo per commit — and the static ``hierarchy_comm_bytes``
+    model agrees with the live counters for full-wave commits."""
+    _, _, sched = run_topo(Topology(n_silos=3), rounds=3)
+    strat = sched.strategy
+    payload = strat.comm_bytes_per_round() // max(
+        1, sched.sim.fed.clients_per_round)
+    assert sched.tier_bytes["edge"] == payload * sched.committed_updates
+    assert sched.tier_bytes["silo"] > 0
+    assert sched.tier_bytes["silo"] <= sched.tier_bytes["edge"]
+    model = hierarchy_comm_bytes(payload, 3, n_silos=3)
+    assert model["edge"] == 3 * payload and model["silo"] <= 3 * payload
+    flat = hierarchy_comm_bytes(payload, 3, n_silos=1)
+    assert flat == {"edge": 0, "silo": 3 * payload, "total": 3 * payload}
+
+
+def test_silo_trace_takes_members_offline():
+    """A dark silo's clients must never be sampled: with silo 1 offline for
+    the whole horizon every commit draws from silo 0 only."""
+    trace = AvailabilityTrace(windows=(((0.0, 900.0),), ((990.0, 999.0),)),
+                              period=1000.0)
+    h, _, sched = run_topo(Topology(n_silos=2, trace=trace), mode="semisync",
+                           rounds=3)
+    assert sched.committed_updates > 0
+    assert int(sched._silo.silo_updates[0]) == sched.committed_updates
+    assert int(sched._silo.silo_updates[1]) == 0
+
+
+def test_hierarchy_refuses_custom_update_space():
+    """Strategies with a bespoke in-graph cohort aggregation (fedkseed's
+    (K,) coefficient space) can't be silo-pre-aggregated as parameter
+    deltas — the scheduler must refuse loudly, not aggregate garbage."""
+    sim = build_sim()
+    strat = make_strategy("fedkseed", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="sync", topology=Topology(n_silos=2))
+    with pytest.raises(ValueError, match="cohort"):
+        sched.run(2, eval_every=2)
+
+
+# ==================================================== lazy client pool
+def test_lazy_synthesis_deterministic_in_seed_and_cid():
+    """Budget, device profile and data shard depend on ``(seed, cid)``
+    alone; the minibatch stream additionally on the visit number — so two
+    pools visiting cids in different orders materialize identical clients
+    and identical per-visit batches."""
+    a = build_sim(lazy=True, n_clients=12)
+    b = build_sim(lazy=True, n_clients=12)
+    for cid in (0, 7, 11):
+        ca = a.pool.acquire(cid)
+        a.pool.release(cid)
+    # b visits in a different global order, interleaved with other cids
+    for cid in (5, 11, 3, 7, 0):
+        b.pool.acquire(cid)
+        b.pool.release(cid)
+    for cid in (0, 7, 11):
+        ca, cb = a.pool.acquire(cid), b.pool.acquire(cid)
+        assert ca.mem_budget == cb.mem_budget == a.lazy_budget(cid)
+        assert ca.profile == cb.profile
+        np.testing.assert_array_equal(ca.sampler.shard, cb.sampler.shard)
+        # same visit number (2nd for both) → identical batch stream
+        np.testing.assert_array_equal(ca.sampler.next_indices(),
+                                      cb.sampler.next_indices())
+        a.pool.release(cid)
+        b.pool.release(cid)
+
+
+def test_lazy_run_is_reproducible():
+    """Two identical lazy runs (same seed, same population) must produce
+    bit-identical histories and trainables — dispatch-order determinism of
+    the pool's rejection sampler and visit cursors."""
+    kw = {"lazy": True, "n_clients": 32, "shard_size": 8}
+    h1, s1, _ = run_topo(None, mode="semisync", sim_kw=kw)
+    h2, s2, _ = run_topo(None, mode="semisync", sim_kw=kw)
+    assert metric_rows(h1) == metric_rows(h2)
+    for a, b in zip(s1, s2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_million_client_population_smoke():
+    """A 10⁶-client federation on one host: resident client state stays
+    O(active cohort) — the pool materializes only dispatched cids and
+    releases them at commit."""
+    kw = {"lazy": True, "n_clients": 1_000_000, "clients_per_round": 3,
+          "shard_size": 8}
+    h, _, sched = run_topo(Topology(n_silos=4, assign="mod"), mode="semisync",
+                           rounds=2, eval_every=2, sim_kw=kw)
+    pool = sched.sim.pool
+    assert sched.committed_updates > 0
+    assert pool.resident == 0                    # all released post-commit
+    assert pool.max_resident <= 4 * 3 + 8        # O(cohort), not O(10⁶)
+    assert pool.max_resident_bytes < 1 << 20
+    assert sched.events > 0
+
+
+# ============================================== per-completion dispatch
+def test_pow2_per_completion_matches_fixed_pad_async():
+    """buffer=1 async under ``pad_policy="pow2"`` dispatches size-1
+    replacement buckets (true per-completion FedBuff) — the trajectory must
+    match the fixed-pad path (padding rows never contribute) with the
+    compile set still bounded."""
+    common = dict(mode="async", rounds=6, eval_every=3,
+                  sim_kw={"uniform": True})
+    h_fix, s_fix, _ = run_topo(None, sched_kw={"buffer_size": 1,
+                                               "concurrency": 3,
+                                               "pad_policy": "fixed"},
+                               **common)
+    h_p2, s_p2, sched = run_topo(None, sched_kw={"buffer_size": 1,
+                                                 "concurrency": 3,
+                                                 "pad_policy": "pow2"},
+                                 **common)
+    assert [(m.round, m.n_participants) for m in h_fix] == \
+           [(m.round, m.n_participants) for m in h_p2]
+    for a, b in zip(h_fix, h_p2):
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-5, atol=1e-6)
+    for a, b in zip(s_fix, s_p2):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    # pow2 compile keys: initial wave (3) + singles (1) only
+    for f in sched.strategy.engine._cohort.values():
+        if hasattr(f, "_cache_size"):
+            assert f._cache_size() <= 2
+
+
+def _engine_cache_sizes(strat):
+    return [f._cache_size()
+            for cache in (strat.engine._cohort, strat.engine._cohort_updates)
+            for f in cache.values() if hasattr(f, "_cache_size")]
+
+
+def test_hierarchical_event_loop_is_recompile_free():
+    """Steady state triggers zero recompiles: with a constant commit
+    composition (full participation) every jit cache — the cohort step,
+    the silo reduce and the server combine — is warm after the first
+    commit and must stop growing."""
+    sim = build_sim(n_clients=8, clients_per_round=8)
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="sync",
+                         topology=Topology(n_silos=2), pad_policy="pow2")
+    sched.run(2, eval_every=2)
+    warm = (_engine_cache_sizes(strat), sched._silo._cache_sizes())
+    sched.run(6, eval_every=3)
+    assert (_engine_cache_sizes(strat), sched._silo._cache_sizes()) == warm
+
+
+def test_hierarchical_compile_set_is_bounded_under_churn():
+    """Partial participation varies the commit size and the per-silo member
+    counts commit to commit; pow2 padding must still bound the whole
+    compile set: ONE fused fedavg/fedavg entry whose traces are capped by
+    the reachable pow2 ``(E, tgt, Sp)`` triples — a handful no matter how
+    many rounds run."""
+    sim = build_sim(n_clients=8, clients_per_round=4)
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="semisync",
+                         topology=Topology(n_silos=2), pad_policy="pow2")
+    sched.run(10, eval_every=5)
+    assert len(sched._silo._fused_jit) == 1
+    assert not sched._silo._reduce_jit and not sched._silo._server_jit
+    # commits of E ∈ {1..4} members over 2 silos reach ≤ 9 distinct
+    # (pow2 members, pow2 max-per-silo) shape pairs — the silo axis is
+    # churn-independent and never keys a trace
+    assert all(n <= 9 for n in sched._silo._cache_sizes())
+
+
+# ========================================== kill/resume at planet scale
+def test_kill_resume_hierarchical_lazy_bit_identical(tmp_path):
+    """The full ISSUE-8 state surface round-trips: pool visit cursors, silo
+    tallies and the event heap — a run killed mid-flight over a lazy
+    population with 2 silos finishes bit-identically to an uninterrupted
+    one."""
+    def sched_for():
+        sim = build_sim(lazy=True, n_clients=24, clients_per_round=3,
+                        shard_size=8)
+        strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+        return FedScheduler(sim, strat, mode="semisync",
+                            topology=Topology(n_silos=2))
+
+    rounds, ck = 6, tmp_path / "pop.msgpack"
+    a = sched_for()
+    ha = a.run(rounds, eval_every=2)
+    b = sched_for()
+    b.run(rounds, eval_every=2, checkpoint_every=2, checkpoint_path=ck,
+          halt_after=2)
+    c = sched_for()
+    c.restore(ck)
+    hc = c.run(rounds, eval_every=2)
+    assert ha == hc
+    for x, y in zip(jax.tree_util.tree_leaves(a.strategy.adapters),
+                    jax.tree_util.tree_leaves(c.strategy.adapters)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(a._silo.silo_commits, c._silo.silo_commits)
+    np.testing.assert_array_equal(a._silo.silo_updates, c._silo.silo_updates)
+    sa, sc = a.sim.pool.state_dict(), c.sim.pool.state_dict()
+    np.testing.assert_array_equal(sa["cids"], sc["cids"])
+    np.testing.assert_array_equal(sa["visits"], sc["visits"])
+
+
+def test_flat_checkpoint_refuses_silo_restore(tmp_path):
+    """A checkpoint carrying silo state must not restore into a flat run —
+    the tallies would silently vanish."""
+    sim = build_sim(n_clients=8, clients_per_round=4)
+    strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
+    sched = FedScheduler(sim, strat, mode="semisync",
+                         topology=Topology(n_silos=2))
+    ck = tmp_path / "hier.msgpack"
+    sched.run(2, eval_every=2, checkpoint_every=2, checkpoint_path=ck)
+    flat = FedScheduler(build_sim(n_clients=8, clients_per_round=4),
+                        make_strategy("full_adapters", CFG, CHAIN, KEY),
+                        mode="semisync")
+    with pytest.raises(ValueError):
+        flat.restore(ck)

@@ -1,0 +1,177 @@
+"""Declarative ExperimentSpec API (ISSUE 8 satellite): frozen spec sections
+serialize/deserialize losslessly, ``run_experiment(spec=...)`` reproduces the
+equivalent kwargs invocation bit for bit, checkpoints embed the spec and
+refuse to resume under any changed field, the registry introspects strategy
+knobs, and the legacy kwargs/``run_rounds`` surfaces are deprecated aliases
+rather than separate code paths."""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.fed.registry import (describe_strategy, list_strategies,
+                                make_strategy, run_experiment)
+from repro.fed.spec import (ExperimentSpec, FaultSpec, PrivacySpec, RunSpec,
+                            ScheduleSpec, TopologySpec, spec_from_kwargs)
+from repro.models.config import ChainConfig, FedConfig
+
+CFG = get_config("bert_tiny").replace(n_layers=4, d_model=64, d_ff=128)
+KEY = jax.random.PRNGKey(0)
+
+SPEC = ExperimentSpec(
+    run=RunSpec(strategy="full_adapters", rounds=3, eval_every=1, seed=3,
+                batch_size=4, memory_constrained=False, n_clients=6,
+                clients_per_round=3, window=2, local_steps=1, lr=3e-3))
+
+
+# ============================================================ serialization
+def test_spec_json_round_trip_lossless():
+    spec = ExperimentSpec(
+        run=RunSpec(strategy="fwdllm", rounds=7, lazy=True, shard_size=16,
+                    strategy_opts=(("n_samples", 2),)),
+        schedule=ScheduleSpec(mode="async", buffer_size=2, pad_policy="pow2"),
+        privacy=PrivacySpec(clip=0.5, noise_multiplier=0.6,
+                            adaptive_clip=True),
+        faults=FaultSpec(dropout_prob=0.2, aggregator="trimmed_mean",
+                         aggregator_opts=(("trim", 0.2),)),
+        topology=TopologySpec(n_silos=4, assign="mod", trace="diurnal"))
+    twin = ExperimentSpec.from_json(spec.to_json())
+    assert twin == spec
+    assert spec.diff(twin) == {}
+    # the wire form is plain JSON — editable config files
+    doc = json.loads(spec.to_json())
+    assert doc["run"]["strategy"] == "fwdllm"
+    assert doc["topology"]["n_silos"] == 4
+
+
+def test_spec_diff_names_every_changed_field():
+    a = ExperimentSpec()
+    b = dataclasses.replace(
+        a, run=dataclasses.replace(a.run, lr=1e-4, rounds=99),
+        topology=dataclasses.replace(a.topology, n_silos=8))
+    d = a.diff(b)
+    assert set(d) == {"run.lr", "run.rounds", "topology.n_silos"}
+    assert d["run.rounds"] == (20, 99)
+
+
+def test_spec_rejects_unknown_fields():
+    with pytest.raises((ValueError, TypeError)):
+        ExperimentSpec.from_dict({"run": {"no_such_knob": 1}})
+    with pytest.raises((ValueError, TypeError)):
+        ExperimentSpec.from_dict({"no_such_section": {}})
+
+
+def test_spec_from_kwargs_shim():
+    chain = ChainConfig(window=2, local_steps=1, lr=3e-3)
+    fed = FedConfig(n_clients=6, clients_per_round=3, rounds=3, seed=3)
+    s = spec_from_kwargs("full_adapters", batch_size=4, rounds=3,
+                         eval_every=1, seed=3, memory_constrained=False,
+                         chain=chain, fed=fed)
+    assert s is not None
+    assert s.run.strategy == "full_adapters" and s.run.window == 2
+    assert s.run.n_clients == 6 and s.run.lr == 3e-3
+    # live objects a spec can't represent → None (embed nothing), not a crash
+    from repro.data.partition import AvailabilityTrace
+    t = AvailabilityTrace(windows=(((0.0, 1.0),),), period=2.0)
+    assert spec_from_kwargs("full_adapters", trace=t) is None
+
+
+# ================================================== spec ≡ kwargs invocation
+def test_spec_reproduces_kwargs_invocation():
+    """The declarative path must build *exactly* what the deprecated loose
+    kwargs built: identical RoundMetrics and bit-identical trainables."""
+    r_spec = run_experiment(spec=SPEC, cfg=CFG)
+    chain = ChainConfig(window=2, lam=0.2, foat_threshold=0.8, local_steps=1,
+                        lr=3e-3, optimizer="adamw")
+    fed = FedConfig(n_clients=6, clients_per_round=3, rounds=3, iid=False,
+                    dirichlet_alpha=1.0, seed=3)
+    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
+        r_kw = run_experiment("full_adapters", cfg=CFG, chain=chain, fed=fed,
+                              batch_size=4, memory_constrained=False,
+                              rounds=3, eval_every=1, seed=3)
+    assert r_spec.history == r_kw.history
+    for a, b in zip(jax.tree_util.tree_leaves(r_spec.strategy.adapters),
+                    jax.tree_util.tree_leaves(r_kw.strategy.adapters)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spec_and_strategy_arg_are_exclusive():
+    with pytest.raises(TypeError):
+        run_experiment("full_adapters", spec=SPEC)
+
+
+# ======================================================= checkpointed specs
+def test_resume_validates_whole_spec(tmp_path):
+    """The checkpoint embeds the spec; resume succeeds under the identical
+    spec and refuses — naming the field — under any mismatch."""
+    ck = tmp_path / "spec.msgpack"
+    full = run_experiment(spec=SPEC, cfg=CFG)
+    run_experiment(spec=SPEC, cfg=CFG, checkpoint_every=2,
+                   checkpoint_path=ck, halt_after=2)
+    resumed = run_experiment(spec=SPEC, cfg=CFG, resume=ck)
+    assert full.history == resumed.history
+    for a, b in zip(jax.tree_util.tree_leaves(full.strategy.adapters),
+                    jax.tree_util.tree_leaves(resumed.strategy.adapters)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    drifted = dataclasses.replace(
+        SPEC, run=dataclasses.replace(SPEC.run, lr=1e-4))
+    with pytest.raises(ValueError, match=r"spec mismatch.*run\.lr"):
+        run_experiment(spec=drifted, cfg=CFG, resume=ck)
+
+
+# ==================================================== registry introspection
+def test_describe_strategy_surfaces_knobs():
+    d = describe_strategy("fwdllm")
+    assert d["grad_programs"] == ("spsa", "jvp")
+    assert "n_samples" in d["options"]
+    assert describe_strategy("fwdllm_jvp")["defaults"] == \
+        {"grad_program": "jvp"}
+    assert describe_strategy("fedkseed")["grad_programs"] == ("kseed",)
+    assert describe_strategy("chainfed")["grad_programs"] == ("ad",)
+
+
+def test_list_strategies_covers_registry():
+    names = [d["name"] for d in list_strategies()]
+    assert names == sorted(names)
+    for expected in ("chainfed", "full_adapters", "fedkseed", "fwdllm"):
+        assert expected in names
+
+
+def test_unknown_strategy_suggests_nearest():
+    with pytest.raises(KeyError, match="did you mean 'chainfed'"):
+        make_strategy("chianfed", CFG, ChainConfig(), KEY)
+
+
+def test_unknown_strategy_option_suggests_nearest():
+    with pytest.raises(TypeError, match="did you mean 'n_samples'"):
+        make_strategy("fwdllm", CFG, ChainConfig(), KEY, n_sample=2)
+
+
+# ========================================================= deprecated aliases
+def test_run_rounds_is_deprecated_alias():
+    from repro.data.synthetic import (DATASETS, classification_batch,
+                                      make_classification)
+    from repro.fed.engine import FedSim, run_rounds
+    from repro.fed.runtime import run_sync_rounds
+    spec = dataclasses.replace(DATASETS["agnews"], vocab=CFG.vocab_size)
+    tokens, labels = make_classification(spec)
+    batch_fn = lambda idx: classification_batch(spec, tokens, labels, idx)
+
+    def sim():
+        return FedSim(CFG, FedConfig(n_clients=6, clients_per_round=3,
+                                     seed=3),
+                      tokens, labels, batch_fn, batch_size=4,
+                      memory_constrained=False)
+
+    chain = ChainConfig(window=2, local_steps=1, lr=3e-3)
+    with pytest.warns(DeprecationWarning, match="run_rounds is deprecated"):
+        h_alias = run_rounds(sim(), make_strategy("full_adapters", CFG,
+                                                  chain, KEY), 2,
+                             eval_every=1)
+    h_direct = run_sync_rounds(sim(), make_strategy("full_adapters", CFG,
+                                                    chain, KEY), 2,
+                               eval_every=1)
+    assert h_alias == h_direct

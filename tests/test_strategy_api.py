@@ -12,7 +12,8 @@ from repro.core.adapters import (ActiveAdapters, AdapterLibrary,
 from repro.core.dlct import window_scatter, window_slice
 from repro.data.synthetic import (DATASETS, classification_batch,
                                   make_classification)
-from repro.fed.engine import FedSim, run_rounds
+from repro.fed.engine import FedSim
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import (available_strategies, make_strategy,
                                 register_strategy, run_experiment)
 from repro.fed.strategies import PlanEngine, Strategy, TrainablePlan
@@ -159,7 +160,7 @@ def test_sample_clients_empty_eligible_pool():
     assert sim.eligible("full_adapters") == []
     assert sim.sample_clients("full_adapters") == []
     strat = make_strategy("full_adapters", CFG, CHAIN, KEY)
-    hist = run_rounds(sim, strat, rounds=1, eval_every=1)
+    hist = run_sync_rounds(sim, strat, rounds=1, eval_every=1)
     assert hist[-1].n_participants == 0
     assert np.isfinite(hist[-1].loss)
 

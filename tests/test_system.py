@@ -10,7 +10,8 @@ from repro.core.memory import comm_bytes_per_round, peak_memory
 from repro.data.synthetic import (DATASETS, classification_batch,
                                   make_classification)
 from repro.fed.baselines import BASELINES
-from repro.fed.engine import FedSim, run_rounds
+from repro.fed.engine import FedSim
+from repro.fed.runtime import run_sync_rounds
 from repro.fed.registry import make_strategy
 from repro.models.config import ChainConfig, FedConfig
 
@@ -37,7 +38,7 @@ def test_chainfed_improves_over_rounds():
     params, _ = lm_pretrain(strat.params, CFG, tokens, steps=60)
     strat.params = params
     l0, a0 = strat.evaluate(sim.eval_batch())
-    hist = run_rounds(sim, strat, rounds=10, eval_every=5)
+    hist = run_sync_rounds(sim, strat, rounds=10, eval_every=5)
     assert hist[-1].loss < l0, "chainfed did not reduce eval loss"
 
 
@@ -111,7 +112,7 @@ def test_all_baselines_one_round():
     chain = ChainConfig(window=2, local_steps=1, lr=1e-3)
     for name, cls in BASELINES.items():
         strat = cls(CFG, chain, jax.random.PRNGKey(1))
-        hist = run_rounds(sim, strat, rounds=1, eval_every=1)
+        hist = run_sync_rounds(sim, strat, rounds=1, eval_every=1)
         assert np.isfinite(hist[-1].loss), name
 
 
