@@ -23,9 +23,15 @@ Two workloads:
 
 Writes ``BENCH_serve_throughput.json`` (see --out): per workload the
 single-tenant / mixed-tenant / continuous tokens/s and the mixed/single
-ratio.  This file is the serving-perf baseline future PRs are judged
-against; ``benchmarks.report`` renders it.  ``--smoke`` asserts the
-regression gate: mixed-tenant tokens/s ≥ 0.7× single-tenant.
+ratio, plus (ISSUE 9) the **paged-KV** sections — paged-vs-dense continuous
+throughput at uniform lengths, the long-tail KV-footprint shrink (KV
+bytes/token, dense vs paged peak) and the host-tier **tenancy** run (T
+tenants through an R-row LRU resident set, hit rate + bit-equality).  This
+file is the serving-perf baseline future PRs are judged against;
+``benchmarks.report`` renders it.  ``--smoke`` asserts the regression
+gates: mixed-tenant ≥ 0.7× single-tenant tokens/s, paged ≥ 0.9× dense
+continuous tokens/s, long-tail KV footprint shrink ≥ 2×, LRU serving
+bit-identical with zero steady-state re-jits.
 """
 from __future__ import annotations
 
@@ -40,13 +46,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.launch.serve import Request, ServeEngine
+from repro.core.memory import paged_kv_bytes, serve_kv_bytes
+from repro.launch.serve import Request, ServeEngine, _decode_paged_jit
 from repro.models import transformer as T
 
 DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serve_throughput.json"
 
 GATE = 0.7          # mixed-tenant tokens/s must stay ≥ GATE × single-tenant
+PAGED_GATE = 0.9    # paged continuous tokens/s ≥ PAGED_GATE × dense
+FOOTPRINT_GATE = 2.0  # long-tail mix: dense KV bytes ≥ 2× paged peak
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,37 +65,52 @@ class Workload:
     prompt_len: int
     gen: int
     tenants: int        # registered single-task tenants (a fused one is added)
+    page_size: int = 8
+    # long-tail mix: most requests stop at ``tail_gen``, a few run to the
+    # full ``long_cap`` horizon the dense cache must provision for
+    long_cap: int = 48
+    tail_gen: int = 4
+    # tenancy run: T registered tenants through an R-row resident set
+    lib_tenants: int = 12
+    lib_resident: int = 4
 
 
 def workloads(smoke: bool):
     if smoke:
         return {"qwen2_smoke": Workload(get_smoke_config("qwen2_0_5b"),
                                         batch=4, prompt_len=8, gen=8,
-                                        tenants=3)}
+                                        tenants=3, page_size=4, long_cap=40,
+                                        tail_gen=4, lib_tenants=12,
+                                        lib_resident=4)}
     return {
         "qwen2_sm": Workload(get_smoke_config("qwen2_0_5b"), batch=8,
-                             prompt_len=16, gen=24, tenants=3),
+                             prompt_len=16, gen=24, tenants=3,
+                             lib_tenants=64, lib_resident=8),
         "llama_sm": Workload(get_config("llama_100m").replace(
                                  n_layers=6, d_model=256, n_heads=8,
                                  n_kv_heads=8, d_ff=768, vocab_size=2048),
-                             batch=8, prompt_len=16, gen=24, tenants=3),
+                             batch=8, prompt_len=16, gen=24, tenants=3,
+                             lib_tenants=64, lib_resident=8),
     }
 
 
-def build_engine(wl: Workload, seed=0):
-    """Engine with ``wl.tenants`` perturbed tenant stacks + a fused tenant."""
+def build_engine(wl: Workload, seed=0, n_tenants=None, resident=None):
+    """Engine with perturbed tenant stacks + a fused tenant (fused only in
+    the default small-registry shape)."""
     key = jax.random.PRNGKey(seed)
     params = T.init_lm(key, wl.cfg)
     base = T.init_adapters(key, wl.cfg)
-    engine = ServeEngine(params, wl.cfg, base)
+    engine = ServeEngine(params, wl.cfg, base, resident_capacity=resident)
     names = []
-    for i in range(wl.tenants):
+    for i in range(n_tenants if n_tenants is not None else wl.tenants):
         k = jax.random.PRNGKey(100 + i)
         stack = jax.tree_util.tree_map(
             lambda x: x + 0.02 * jax.random.normal(k, x.shape, x.dtype), base)
         names.append(engine.register_tenant(f"tenant{i}", stack=stack))
-    engine.fuse_tenants("fused", names[:2], weights=[0.5, 0.5])
-    return engine, names + ["fused"]
+    if n_tenants is None:
+        engine.fuse_tenants("fused", names[:2], weights=[0.5, 0.5])
+        names.append("fused")
+    return engine, names
 
 
 def time_tok_s(fn, n_tokens, iters):
@@ -124,7 +148,99 @@ def bench_one(wname, wl: Workload, iters, seed=0):
         2 * n_tok, max(1, iters // 2))
     out["continuous"] = {"tokens_per_s": tok_s, "requests": len(reqs),
                          "slots": wl.batch}
+
+    # paged continuous batching, identical uniform workload: throughput must
+    # track the dense slot cache (writes are page-routed scatters, reads a
+    # page gather / the scalar-prefetch kernel — no horizon-sized copies)
+    paged_tok_s = time_tok_s(
+        lambda: engine.serve(list(reqs), slots=wl.batch,
+                             prompt_len=wl.prompt_len, max_new_cap=wl.gen,
+                             paged=True, page_size=wl.page_size),
+        2 * n_tok, max(1, iters // 2))
+    jits_before = _decode_paged_jit._cache_size()
+    uniform = engine.serve(list(reqs), slots=wl.batch,
+                           prompt_len=wl.prompt_len, max_new_cap=wl.gen,
+                           paged=True, page_size=wl.page_size)
+    rejits = _decode_paged_jit._cache_size() - jits_before
+    dense_ref = engine.serve(list(reqs), slots=wl.batch,
+                             prompt_len=wl.prompt_len, max_new_cap=wl.gen)
+    out["paged"] = {
+        "tokens_per_s": paged_tok_s,
+        "ratio_vs_dense": paged_tok_s / out["continuous"]["tokens_per_s"],
+        "page_size": wl.page_size,
+        "steady_state_rejits": int(rejits),
+        "equal_to_dense": all(np.array_equal(uniform[r.rid],
+                                             dense_ref[r.rid])
+                              for r in reqs),
+    }
     return out
+
+
+def bench_long_tail(wl: Workload, seed=0):
+    """Long-tail request mix: every request decodes ``tail_gen`` tokens
+    except one straggler that runs to ``long_cap`` — the dense slot cache
+    provisions *every* slot for the straggler's horizon while the paged pool
+    pays each request's actual pages.  Returns the KV footprint comparison
+    (bytes and bytes/token)."""
+    engine, names = build_engine(wl, seed)
+    rng = np.random.default_rng(seed + 7)
+    n_req = 3 * wl.batch
+    reqs = []
+    for i in range(n_req):
+        gen = wl.long_cap if i == 0 else wl.tail_gen
+        toks = rng.integers(4, wl.cfg.vocab_size,
+                            wl.prompt_len).astype(np.int32)
+        reqs.append(Request(i, toks, names[i % len(names)], gen))
+    horizon = wl.prompt_len + wl.long_cap
+    mp = -(-horizon // wl.page_size)
+    out = engine.serve(list(reqs), slots=wl.batch, prompt_len=wl.prompt_len,
+                       max_new_cap=wl.long_cap, paged=True,
+                       page_size=wl.page_size, n_pages=wl.batch * mp)
+    stats = engine.last_serve_stats["pages"]
+    n_tokens = sum(len(v) for v in out.values()) + n_req * wl.prompt_len
+    dense_bytes = serve_kv_bytes(wl.cfg, wl.batch, horizon)
+    paged_bytes = paged_kv_bytes(wl.cfg, stats["peak_in_use"], wl.page_size)
+    return {
+        "requests": n_req, "slots": wl.batch, "horizon": horizon,
+        "tail_gen": wl.tail_gen, "long_cap": wl.long_cap,
+        "dense_kv_bytes": dense_bytes,
+        "paged_kv_bytes_peak": paged_bytes,
+        "footprint_ratio": dense_bytes / max(1, paged_bytes),
+        "dense_kv_bytes_per_token": dense_bytes / n_tokens,
+        "paged_kv_bytes_per_token": paged_bytes / n_tokens,
+        "peak_pages": stats["peak_in_use"],
+    }
+
+
+def bench_tenancy(wl: Workload, seed=0, check_equal=True):
+    """T ≫ resident-set serving: ``lib_tenants`` registered stacks served
+    through a ``lib_resident``-row LRU device slab.  Reports the resident-set
+    hit rate and (``check_equal``) bit-equality against the fully resident
+    library."""
+    T_, R = wl.lib_tenants, wl.lib_resident
+    eng_lru, names = build_engine(wl, seed, n_tenants=T_, resident=R)
+    rng = np.random.default_rng(seed + 3)
+    n_req = 3 * wl.batch
+    reqs = [Request(i, rng.integers(4, wl.cfg.vocab_size,
+                                    wl.prompt_len).astype(np.int32),
+                    names[int(rng.integers(0, T_))],
+                    wl.gen) for i in range(n_req)]
+    out = eng_lru.serve(list(reqs), slots=wl.batch, prompt_len=wl.prompt_len,
+                        max_new_cap=wl.gen, paged=True,
+                        page_size=wl.page_size)
+    stats = eng_lru.last_serve_stats
+    rec = {"tenants": T_, "resident": R,
+           "hit_rate": stats["adapter_hit_rate"],
+           "uploads": stats["adapter"]["uploads"],
+           "evictions": stats["adapter"]["evictions"]}
+    if check_equal:
+        eng_full, _ = build_engine(wl, seed, n_tenants=T_)
+        ref = eng_full.serve(list(reqs), slots=wl.batch,
+                             prompt_len=wl.prompt_len, max_new_cap=wl.gen,
+                             paged=True, page_size=wl.page_size)
+        rec["equal_to_full_resident"] = all(
+            np.array_equal(out[r.rid], ref[r.rid]) for r in reqs)
+    return rec
 
 
 def run(fast: bool = False, smoke: bool = False, iters: int = None,
@@ -133,6 +249,8 @@ def run(fast: bool = False, smoke: bool = False, iters: int = None,
     results, rows = [], []
     for wname, wl in workloads(smoke).items():
         r = bench_one(wname, wl, iters)
+        r["long_tail"] = bench_long_tail(wl)
+        r["tenancy"] = bench_tenancy(wl, check_equal=smoke or wl.cfg.n_layers <= 4)
         rec = {"arch": wname, "batch": wl.batch, "prompt_len": wl.prompt_len,
                "gen": wl.gen, "n_tenants": wl.tenants + 1, "iters": iters,
                **r}
@@ -143,11 +261,17 @@ def run(fast: bool = False, smoke: bool = False, iters: int = None,
             f"single_tok_s={r['single']['tokens_per_s']:.1f}"
             f";mixed_tok_s={r['mixed']['tokens_per_s']:.1f}"
             f";ratio={r['ratio']:.2f}"
-            f";continuous_tok_s={r['continuous']['tokens_per_s']:.1f}")
+            f";continuous_tok_s={r['continuous']['tokens_per_s']:.1f}"
+            f";paged_tok_s={r['paged']['tokens_per_s']:.1f}"
+            f";paged_ratio={r['paged']['ratio_vs_dense']:.2f}"
+            f";kv_shrink={r['long_tail']['footprint_ratio']:.1f}x"
+            f";lru_hit_rate={r['tenancy']['hit_rate']:.2f}")
         print(rows[-1], flush=True)
     doc = {"backend": jax.default_backend(),
            "mode": "smoke" if smoke else ("fast" if fast else "full"),
            "gate_mixed_over_single": GATE,
+           "gate_paged_over_dense": PAGED_GATE,
+           "gate_long_tail_footprint": FOOTPRINT_GATE,
            "results": results}
     pathlib.Path(out_path).write_text(json.dumps(doc, indent=2) + "\n")
     return rows, doc
@@ -171,7 +295,25 @@ def main(argv=None):
                 f"{rec['ratio']:.2f} < {GATE} (single "
                 f"{rec['single']['tokens_per_s']:.1f} tok/s, mixed "
                 f"{rec['mixed']['tokens_per_s']:.1f} tok/s)")
-        print(f"# smoke OK: mixed-tenant ≥ {GATE}× single-tenant tokens/s")
+            assert rec["paged"]["ratio_vs_dense"] >= PAGED_GATE, (
+                f"paged serving regressed: {rec['arch']} paged/dense "
+                f"{rec['paged']['ratio_vs_dense']:.2f} < {PAGED_GATE} "
+                f"(dense {rec['continuous']['tokens_per_s']:.1f} tok/s, "
+                f"paged {rec['paged']['tokens_per_s']:.1f} tok/s)")
+            assert rec["paged"]["equal_to_dense"], (
+                f"{rec['arch']}: paged tokens diverge from dense")
+            assert rec["paged"]["steady_state_rejits"] == 0, (
+                f"{rec['arch']}: paged decode re-jitted in steady state")
+            assert rec["long_tail"]["footprint_ratio"] >= FOOTPRINT_GATE, (
+                f"long-tail KV footprint: {rec['arch']} shrink "
+                f"{rec['long_tail']['footprint_ratio']:.2f}x < "
+                f"{FOOTPRINT_GATE}x")
+            assert rec["tenancy"].get("equal_to_full_resident", True), (
+                f"{rec['arch']}: LRU resident-set serving diverges from "
+                f"the fully resident library")
+        print(f"# smoke OK: mixed ≥ {GATE}× single; paged ≥ {PAGED_GATE}× "
+              f"dense (bit-equal, 0 re-jits); long-tail KV shrink ≥ "
+              f"{FOOTPRINT_GATE}×; LRU serving bit-identical")
 
 
 if __name__ == "__main__":

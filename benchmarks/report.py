@@ -194,18 +194,44 @@ def serve_throughput_table(path=SERVE_JSON):
     doc = json.loads(path.read_text())
     lines = [f"backend: {doc.get('backend', '?')}, "
              f"mode: {doc.get('mode', '?')}, "
-             f"gate: mixed ≥ {doc.get('gate_mixed_over_single', '?')}× single",
+             f"gates: mixed ≥ {doc.get('gate_mixed_over_single', '?')}× "
+             f"single, paged ≥ {doc.get('gate_paged_over_dense', '?')}× "
+             f"dense, long-tail KV shrink ≥ "
+             f"{doc.get('gate_long_tail_footprint', '?')}×",
              "",
              "| workload | batch | tenants | single tok/s | mixed tok/s | "
-             "mixed/single | continuous tok/s |",
-             "|---|---|---|---|---|---|---|"]
+             "mixed/single | continuous tok/s | paged tok/s | paged/dense |",
+             "|---|---|---|---|---|---|---|---|---|"]
     for r in doc.get("results", []):
+        pg = r.get("paged", {})
         lines.append(
             f"| {r['arch']} | {r['batch']} | {r['n_tenants']} "
             f"| {r['single']['tokens_per_s']:.1f} "
             f"| {r['mixed']['tokens_per_s']:.1f} "
             f"| {r['ratio']:.2f}× "
-            f"| {r['continuous']['tokens_per_s']:.1f} |")
+            f"| {r['continuous']['tokens_per_s']:.1f} "
+            f"| {pg.get('tokens_per_s', float('nan')):.1f} "
+            f"| {pg.get('ratio_vs_dense', float('nan')):.2f}× |")
+    if any("long_tail" in r for r in doc.get("results", [])):
+        lines += ["", "Paged KV footprint (long-tail mix) and tenant "
+                  "library (LRU resident set):", "",
+                  "| workload | dense KV B/token | paged KV B/token | "
+                  "KV shrink | peak pages | tenants (T/R) | LRU hit rate | "
+                  "evictions |",
+                  "|---|---|---|---|---|---|---|---|"]
+        for r in doc.get("results", []):
+            lt, tn = r.get("long_tail", {}), r.get("tenancy", {})
+            if not lt:
+                continue
+            lines.append(
+                f"| {r['arch']} "
+                f"| {lt['dense_kv_bytes_per_token']:.0f} "
+                f"| {lt['paged_kv_bytes_per_token']:.0f} "
+                f"| {lt['footprint_ratio']:.1f}× "
+                f"| {lt['peak_pages']} "
+                f"| {tn.get('tenants', '?')}/{tn.get('resident', '?')} "
+                f"| {tn.get('hit_rate', float('nan')):.2f} "
+                f"| {tn.get('evictions', '?')} |")
     return "\n".join(lines)
 
 

@@ -160,15 +160,45 @@ class AdapterLibrary:
     into the library's base stack, so partial and full tenants serve through
     the same ``(T, L, ...)`` layout.  ``fuse`` composes stacks
     AdapterFusion-style and can register the result as a synthetic tenant.
+
+    **Host tier** (``resident_capacity=R``): registered stacks live in host
+    memory and only an LRU *resident set* of ``R`` stacks occupies the
+    device slab.  The slab keeps the fixed scan layout ``(L, R, ...)`` —
+    compiled shapes depend on ``R``, never on the library size ``T`` — and
+    ``route_ids`` is the admission point: routing a non-resident tenant
+    uploads its stack into a free (or LRU-evicted) slab row and returns
+    resident-row indices instead of registration slots.  Rows named in
+    ``pin`` (tenants live in serve slots mid-flight) are never evicted.
+    Without a capacity the library is fully resident and byte-identical to
+    the original behavior.
     """
 
-    def __init__(self, base=None):
+    def __init__(self, base=None, resident_capacity: int | None = None):
         self._stacks: Dict[str, object] = {}
         self._active: Tuple[str, ...] = ()
         self._order: list = []          # registration order == tenant slots
         self._base = base               # template for partial-chain tenants
         self._stacked = None            # (T, L, ...) cache
         self._scan = None               # (L, T, ...) scan-layout cache
+        if resident_capacity is not None and resident_capacity < 1:
+            raise ValueError(f"resident_capacity must be >= 1, "
+                             f"got {resident_capacity}")
+        self._capacity = resident_capacity
+        self._resident: Dict[str, int] = {}   # name -> slab row
+        self._lru: list = []                  # LRU order, front = coldest
+        self._slab = None                     # (L, R, ...) device slab
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0, "uploads": 0}
+
+    @staticmethod
+    def _host_put(stack):
+        """Pin a stack in host memory (the cold tier).  On a CPU-only host
+        this is the same device — the tiering logic is still exercised; on an
+        accelerator it keeps cold tenants out of device HBM."""
+        try:
+            cpu = jax.devices("cpu")[0]
+        except RuntimeError:
+            return stack
+        return jax.device_put(stack, cpu)
 
     def add(self, name: str, stack, spec: "ActiveAdapters | None" = None) -> None:
         """Register a stack.  With ``spec``, ``stack`` holds only the spec's
@@ -179,6 +209,11 @@ class AdapterLibrary:
                 raise ValueError("partial-chain registration needs a library "
                                  "base stack (AdapterLibrary(base=...))")
             stack = spec.scatter_train(self._base, stack)
+        if self._capacity is not None:
+            stack = self._host_put(stack)
+            if name in self._resident:      # re-registration: stale on device
+                self._lru.remove(name)
+                del self._resident[name]
         self._stacks[name] = stack
         if name not in self._order:
             self._order.append(name)
@@ -206,6 +241,93 @@ class AdapterLibrary:
         """(B,) int32 row-routing vector for a batch of tenant names."""
         return jnp.asarray([self.tenant_id(n) for n in names], jnp.int32)
 
+    # ------------------------------------------------------- host/LRU tier
+    @property
+    def resident_capacity(self) -> "int | None":
+        return self._capacity
+
+    @property
+    def resident(self) -> Tuple[str, ...]:
+        """Currently device-resident tenants, coldest first."""
+        return tuple(self._lru)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / n if n else 1.0
+
+    def _slab_init(self, template):
+        """Zero ``(L, R, ...)`` device slab shaped like one stack."""
+        R = self._capacity
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((x.shape[0], R) + x.shape[1:], x.dtype),
+            template)
+
+    @staticmethod
+    @jax.jit
+    def _upload(slab, stack, row):
+        """Write one host stack into slab row ``row`` (axis 1 of every
+        ``(L, R, ...)`` leaf).  Jitted: steady-state tenant swaps are one
+        compiled donate-free dynamic-update, not a per-leaf re-stack."""
+        return jax.tree_util.tree_map(
+            lambda s, x: jax.lax.dynamic_update_index_in_dim(
+                s, x.astype(s.dtype), row, axis=1), slab, stack)
+
+    def _ensure_resident(self, name: str, protect) -> int:
+        """Return ``name``'s slab row, uploading + LRU-evicting on a miss.
+        Rows of tenants in ``protect`` are never evicted."""
+        if name not in self._stacks:
+            raise KeyError(f"unknown tenant {name!r}; have "
+                           f"{tuple(self._order)}")
+        if name in self._resident:
+            self.stats["hits"] += 1
+            self._lru.remove(name)
+            self._lru.append(name)          # most recently used
+            return self._resident[name]
+        self.stats["misses"] += 1
+        if self._slab is None:
+            self._slab = self._slab_init(self._stacks[name])
+        if len(self._resident) < self._capacity:
+            used = set(self._resident.values())
+            row = next(r for r in range(self._capacity) if r not in used)
+        else:
+            victim = next((n for n in self._lru if n not in protect), None)
+            if victim is None:
+                raise RuntimeError(
+                    f"adapter resident set exhausted: all "
+                    f"{self._capacity} rows are pinned ({sorted(protect)}); "
+                    f"raise resident_capacity or shrink the live batch")
+            row = self._resident.pop(victim)
+            self._lru.remove(victim)
+            self.stats["evictions"] += 1
+        self._slab = self._upload(self._slab, self._stacks[name], row)
+        self.stats["uploads"] += 1
+        self._resident[name] = row
+        self._lru.append(name)
+        return row
+
+    def route_ids(self, names, pin=()) -> jnp.ndarray:
+        """(B,) int32 row-routing vector for a batch of tenant names —
+        the host-tier admission point.  Without a resident capacity this is
+        exactly ``tenant_ids``.  With one, every distinct name is made
+        device-resident first (async upload into a free or LRU-evicted slab
+        row), and the returned ids index the **resident slab**, not the
+        registration order.  ``pin`` lists tenants that must stay resident
+        (rows still live in serve slots) even when not in this batch."""
+        if self._capacity is None:
+            return self.tenant_ids(names)
+        distinct = list(dict.fromkeys(names))
+        protect = set(distinct) | set(pin)
+        needed = len(protect & set(self._stacks))
+        if needed > self._capacity:
+            raise RuntimeError(
+                f"batch needs {needed} distinct resident tenants but "
+                f"resident_capacity={self._capacity}; shrink the batch or "
+                f"raise the capacity")
+        for n in distinct:
+            self._ensure_resident(n, protect)
+        return jnp.asarray([self._resident[n] for n in names], jnp.int32)
+
     def stacked(self):
         """All registered stacks packed as one ``(T, L, ...)`` pytree in slot
         order — the gather table of the mixed-tenant forward.  Cached until
@@ -213,6 +335,9 @@ class AdapterLibrary:
         batch)."""
         if not self._order:
             raise ValueError("empty library; add() at least one stack")
+        if self._capacity is not None:
+            return jax.tree_util.tree_map(
+                lambda x: jnp.swapaxes(x, 0, 1), self.stacked_scan())
         if self._stacked is None:
             parts = [self._stacks[n] for n in self._order]
             self._stacked = jax.tree_util.tree_map(
@@ -224,7 +349,15 @@ class AdapterLibrary:
         multi-tenant forwards consume (one ``(T, ...)`` slab per layer-scan
         step).  Cached on the host like ``stacked()`` — transposing here,
         once per registration change, keeps the full-library copy out of the
-        compiled per-token decode."""
+        compiled per-token decode.  Under a resident capacity this is the
+        ``(L, R, ...)`` device slab itself: its shape is fixed by ``R``, so
+        compiled decode never re-specializes as tenants onboard."""
+        if self._capacity is not None:
+            if not self._order:
+                raise ValueError("empty library; add() at least one stack")
+            if self._slab is None:
+                self._slab = self._slab_init(self._stacks[self._order[0]])
+            return self._slab
         if self._scan is None:
             self._scan = jax.tree_util.tree_map(
                 lambda x: jnp.swapaxes(x, 0, 1), self.stacked())

@@ -207,6 +207,42 @@ def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
     return ad_layer * L   # full adapters / fedadapter / c2a / fwdllm
 
 
+# ----------------------------------------------------------- serving memory
+def _cb(cfg: ModelConfig) -> int:
+    """Bytes per element of serve-time cache/activation state (KV lives in
+    the compute dtype, not the param dtype)."""
+    return BYTES[cfg.compute_dtype]
+
+
+def serve_kv_bytes(cfg: ModelConfig, slots: int, horizon: int) -> int:
+    """Dense slot-cache KV footprint of a ``serve()`` run: every slot pays
+    the full decode horizon, whatever its request actually stores.
+    Attention-free families (ssm) hold no KV."""
+    if cfg.family == "ssm":
+        return 0
+    kv = 2 * cfg.n_kv_heads * cfg.head_dim_
+    return cfg.n_layers * slots * horizon * kv * _cb(cfg)
+
+
+def paged_kv_bytes(cfg: ModelConfig, n_pages: int, page_size: int) -> int:
+    """Paged-pool KV footprint (``init_paged_cache``): the pool is sized by
+    allocated pages, not ``slots × horizon`` — a long-tail request mix
+    shrinks ``n_pages`` far below the dense worst case.  Pass the
+    ``PageTable``'s ``peak_in_use`` for the high-water footprint actually
+    touched by a run."""
+    if cfg.family == "ssm":
+        return 0
+    kv = 2 * cfg.n_kv_heads * cfg.head_dim_
+    return cfg.n_layers * n_pages * page_size * kv * _cb(cfg)
+
+
+def resident_library_bytes(cfg: ModelConfig, n_resident: int) -> int:
+    """Device bytes of the adapter library's resident set: ``n_resident``
+    stacks (``AdapterLibrary.resident_capacity``, or the full tenant count
+    without a host tier) of ``L`` bottleneck adapters each."""
+    return n_resident * adapter_param_count(cfg) * _b(cfg)
+
+
 def hierarchy_comm_bytes(payload: int, cohort: int, n_silos: int = 1) -> dict:
     """Per-commit traffic split across aggregation tiers (ISSUE 8).
 

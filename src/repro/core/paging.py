@@ -1,0 +1,171 @@
+"""Block-granular KV-cache paging for the serve path (ISSUE 9 tentpole).
+
+The dense slot cache allocates ``(L, slots, horizon, ...)`` — every request
+pays the full decode horizon whatever its actual length, and a long-tail
+request mix wastes most of it.  ``PageTable`` is the host-side allocator of
+the paged alternative: KV lives in a flat pool of fixed-size **pages**
+(``(L, n_pages, page_size, KV, hd)``, see ``transformer.init_paged_cache``)
+and each serve slot owns an ordered page list covering exactly the tokens it
+will write.  Admission allocates from a free list, drain releases back to
+it, and **shared prefix pages** (a tenant's common system prompt) are
+refcounted so the prefix KV is stored once however many concurrent requests
+carry it.
+
+The table itself is plain numpy — the device only ever sees the packed
+``(slots, max_pages)`` int32 page-id array (``rows()``), which rides into
+the jitted paged decode as *traced data*: admissions, drains and prefix
+sharing never change a compiled shape.  Unallocated entries are ``-1``
+(readers clamp; the attention mask hides them) and writers route parked /
+shared pages to the out-of-range sentinel ``n_pages`` so scatter-``drop``
+semantics skip them.
+
+Copy-on-write semantics for shared prefixes are write-time-trivial by
+construction: only *whole* pages of the prefix are shared, so a slot's
+private tokens (the partial tail page, the rest of the prompt, every decoded
+token) always land in private pages — the "copy" of the divergent page is
+simply that slot's own prefill write.  Shared pages are read-only for their
+whole lifetime.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+class PageTable:
+    """Free-list page allocator + per-slot page lists for a paged KV pool.
+
+    ``n_pages``  — pool capacity (pages); ``page_size`` — tokens per page;
+    ``slots``    — serve-loop batch rows; ``max_pages`` — page-list length
+    per slot (``ceil(horizon / page_size)``, fixes the device-side shape).
+    """
+
+    def __init__(self, n_pages: int, page_size: int, slots: int,
+                 max_pages: int):
+        if n_pages < 1 or page_size < 1 or slots < 1 or max_pages < 1:
+            raise ValueError(f"PageTable: all sizes must be >= 1, got "
+                             f"n_pages={n_pages} page_size={page_size} "
+                             f"slots={slots} max_pages={max_pages}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.slots = int(slots)
+        self.max_pages = int(max_pages)
+        # LIFO free list: a drained slot's pages are the next allocated —
+        # re-admission reuses released pages (asserted in tests)
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._rows = np.full((self.slots, self.max_pages), -1, np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(self.slots)]
+        self._refs = np.zeros(self.n_pages, np.int64)
+        self._shared: Dict[object, List[int]] = {}
+        self.peak_in_use = 0
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+
+    # ------------------------------------------------------------- queries
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` (at least one for any live slot)."""
+        return max(1, -(-int(n_tokens) // self.page_size))
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def can_admit(self, n_tokens: int, shared: Sequence[int] = ()) -> bool:
+        return self.pages_for(n_tokens) - len(shared) <= len(self._free)
+
+    def rows(self) -> np.ndarray:
+        """The device-facing ``(slots, max_pages)`` int32 page-id array."""
+        return self._rows
+
+    # ---------------------------------------------------------- allocation
+    def _take(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n} pages, {len(self._free)} "
+                f"free of {self.n_pages} (page_size={self.page_size}); "
+                f"grow n_pages or drain slots first")
+        got = [self._free.pop() for _ in range(n)]
+        for g in got:
+            self._refs[g] += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return got
+
+    def admit(self, slot: int, n_tokens: int,
+              shared: Sequence[int] = ()) -> np.ndarray:
+        """Allocate ``slot``'s page list for a request storing ``n_tokens``
+        tokens total.  ``shared`` — already-populated prefix pages the slot
+        references (refcounted) instead of allocating; they must be whole
+        leading pages.  Returns the slot's page-id vector (``max_pages``,
+        ``-1``-padded)."""
+        if self._owned[slot] or (self._rows[slot] >= 0).any():
+            raise RuntimeError(f"slot {slot} already holds pages; "
+                               f"release() before re-admission")
+        need = self.pages_for(n_tokens)
+        if len(shared) > need:
+            raise ValueError(f"{len(shared)} shared pages exceed the "
+                             f"{need}-page request")
+        if need > self.max_pages:
+            raise ValueError(f"request needs {need} pages > max_pages="
+                             f"{self.max_pages} (horizon overflow)")
+        for pg in shared:
+            self._refs[pg] += 1
+        fresh = self._take(need - len(shared))
+        pages = list(shared) + fresh
+        self._owned[slot] = pages
+        self._rows[slot, :] = -1
+        self._rows[slot, :need] = np.asarray(pages, np.int32)
+        return self._rows[slot]
+
+    def release(self, slot: int) -> None:
+        """Drain: drop the slot's references; pages whose refcount reaches
+        zero return to the free list (shared prefix pages stay while their
+        registration pin — see ``share_prefix`` — or other slots hold them)."""
+        for pg in self._owned[slot]:
+            self._refs[pg] -= 1
+            if self._refs[pg] == 0:
+                self._free.append(pg)
+        self._owned[slot] = []
+        self._rows[slot, :] = -1
+
+    # ------------------------------------------------------- prefix sharing
+    def has_prefix(self, key) -> bool:
+        """True if ``key``'s prefix pages are already registered (a lookup
+        via ``share_prefix`` would be allocation-free)."""
+        return key in self._shared
+
+    def share_prefix(self, key, n_tokens: int) -> Tuple[List[int], bool]:
+        """Pages for a shared prefix of ``n_tokens`` (must be page-aligned —
+        callers share only whole pages).  Returns ``(pages, fresh)``:
+        ``fresh`` means the caller must populate them (first admission);
+        later lookups return the same pages storage-free.  The registration
+        itself holds one pin so the prefix survives every referencing slot
+        draining; ``drop_prefixes()`` releases the pins."""
+        if n_tokens % self.page_size:
+            raise ValueError(f"shared prefix must be page-aligned: "
+                             f"{n_tokens} tokens, page_size={self.page_size}")
+        if key in self._shared:
+            self.prefix_hits += 1
+            return list(self._shared[key]), False
+        self.prefix_misses += 1
+        pages = self._take(n_tokens // self.page_size)
+        self._shared[key] = pages
+        return list(pages), True
+
+    def drop_prefixes(self) -> None:
+        """Release the registration pins of every shared prefix (end of a
+        serve run); pages still referenced by live slots stay allocated."""
+        for pages in self._shared.values():
+            for pg in pages:
+                self._refs[pg] -= 1
+                if self._refs[pg] == 0:
+                    self._free.append(pg)
+        self._shared.clear()
+
+    # ------------------------------------------------------------ reporting
+    def stats(self) -> dict:
+        return {"n_pages": self.n_pages, "page_size": self.page_size,
+                "in_use": self.in_use, "peak_in_use": self.peak_in_use,
+                "shared_prefixes": len(self._shared),
+                "prefix_hits": self.prefix_hits,
+                "prefix_misses": self.prefix_misses}

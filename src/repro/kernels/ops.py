@@ -15,6 +15,7 @@ from .flash_attention import flash_attention as _flash_attention
 from .fused_adapter import fused_adapter as _fused_adapter
 from .fused_adapter import fused_adapter_grad as _fused_adapter_grad
 from .fused_adapter import fused_adapter_tenants as _fused_adapter_tenants
+from .paged_attention import paged_attention as _paged_attention
 from .ssm_scan import ssm_scan as _ssm_scan
 
 
@@ -43,6 +44,14 @@ def fused_adapter_tenants(h, tenant_ids, w_down, w_up, activation="gelu",
     kw.setdefault("interpret", _interpret())
     return _fused_adapter_tenants(h, tenant_ids, w_down, w_up,
                                   activation=activation, **kw)
+
+
+def paged_attention(q, k_pool, v_pool, pages, lengths, **kw):
+    """Paged-KV decode attention — the serve path's kernel route
+    (``attention_decode_paged``); the page table is scalar-prefetched so the
+    per-row page gather never materializes."""
+    kw.setdefault("interpret", _interpret())
+    return _paged_attention(q, k_pool, v_pool, pages, lengths, **kw)
 
 
 def flash_attention(q, k, v, causal=True, window=None, **kw):

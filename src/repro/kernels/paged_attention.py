@@ -1,0 +1,114 @@
+"""Paged-attention decode kernel (ISSUE 9 tentpole).
+
+One-token decode over a **paged** KV pool: each batch row's keys/values live
+in fixed-size pages scattered through a flat ``(P, page_size, KV, hd)`` pool,
+with a per-row page list (``core.paging.PageTable``).  The XLA fallback
+gathers every row's pages into a contiguous view first; this kernel is
+gather-free, exactly like the tenant-routed adapter kernel
+(``fused_adapter_tenants``): the page table rides as a **scalar-prefetch**
+argument and drives the KV BlockSpec ``index_map``, so each grid step DMAs
+one page straight from the pool — the ``(B, max_pages, page_size, ...)``
+gather never materializes.
+
+Grid: ``(B, max_pages)`` — row-major, pages of a row visited in order.
+Online softmax (flash-decode style) accumulates across the page axis in VMEM
+scratch: running row-max ``m``, normalizer ``l`` and the f32 output
+accumulator; the normalized output is written once on a row's last page.
+Pages beyond a row's length are masked token-wise (``pos >= length`` →
+probability exactly 0 — masking is applied *after* the exp so an all-masked
+page cannot pollute ``l`` through ``exp(-inf - (-inf)) = 1``).  Rows with
+``length <= 0`` (parked serve slots) divide by a clamped normalizer and
+output zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pages_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    ps = k_ref.shape[1]
+
+    @pl.when(p == 0)
+    def _reset():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # (KV, G, hd)
+    k = k_ref[0].astype(jnp.float32)                       # (ps, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    # (KV, G, ps) scores for this page, one matmul per kv-head group
+    s = jnp.einsum("kgh,skh->kgs", q, k,
+                   preferred_element_type=jnp.float32) / \
+        jnp.sqrt(jnp.float32(hd))
+
+    valid = (p * ps + jax.lax.iota(jnp.int32, ps)) < len_ref[b]
+    m_prev = m_ref[...]                                    # (KV, G)
+    m_new = jnp.maximum(m_prev, jnp.max(
+        jnp.where(valid[None, None, :], s, -1e30), axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    # mask AFTER the exp: an all-masked page keeps l/acc untouched
+    pexp = jnp.where(valid[None, None, :],
+                     jnp.exp(s - m_new[..., None]), 0.0)   # (KV, G, ps)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=-1)
+    # (KV, G, hd) accumulator update: sum_s pexp[k,g,s] * v[s,k,h]
+    pv = jnp.einsum("kgs,skh->kgh", pexp, v,
+                    preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _write():
+        l = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, pages, lengths, interpret=True):
+    """Decode attention over paged KV.
+
+    q: (B, KV, G, hd) — the current token's grouped query heads.
+    k_pool / v_pool: (P, page_size, KV, hd) — the flat page pool.
+    pages: (B, max_pages) int32 page ids, in token order; entries < 0 are
+    unallocated (clamped here — the length mask hides them).
+    lengths: (B,) int32 valid token counts (``idx + 1`` after the current
+    token's KV write).  Returns (B, KV, G, hd) in q's dtype.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, KV, G, hd = q.shape
+    P, ps = k_pool.shape[0], k_pool.shape[1]
+    mp = pages.shape[1]
+    pages = jnp.clip(pages.astype(jnp.int32), 0, P - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, mp),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, p, pg, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, p, pg, ln: (pg[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, p, pg, ln: (pg[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd),
+                               lambda b, p, pg, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),        # running max m
+            pltpu.VMEM((KV, G), jnp.float32),        # normalizer l
+            pltpu.VMEM((KV, G, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(pages, lengths.astype(jnp.int32), q, k_pool, v_pool)

@@ -37,6 +37,7 @@ import numpy as np
 
 from ..configs import get_config, get_smoke_config
 from ..core.adapters import ActiveAdapters, AdapterLibrary
+from ..core.paging import PageTable
 from ..models import transformer as T
 
 
@@ -57,13 +58,16 @@ def _decode_jit(params, adapters, tok, cache, idx, cfg, enc_len=None,
 
 
 @jax.jit
-def _sample_jit(logits, temps, topks, key):
-    """Per-row sampling: each batch row carries its own (traced) temperature
-    and top-k — routed per row exactly like tenant ids, so one compiled
+def _sample_jit(logits, temps, topks, topps, key):
+    """Per-row sampling: each batch row carries its own (traced) temperature,
+    top-k and top-p — routed per row exactly like tenant ids, so one compiled
     sampler serves any tenant mix and re-registering sampling params never
     re-jits.  ``temps <= 0`` rows are greedy (bit-identical to the old
-    ``argmax`` path); ``topks <= 0`` disables the top-k cut.  Sampling uses
-    the Gumbel-max trick on the top-k-masked, temperature-scaled logits."""
+    ``argmax`` path); ``topks <= 0`` disables the top-k cut; ``topps`` outside
+    (0, 1) disables the nucleus cut.  The nucleus is computed on the raw
+    logits' softmax (same basis as top-k): the smallest descending-order set
+    whose probability mass reaches ``top_p``.  Both cuts intersect; sampling
+    uses the Gumbel-max trick on the masked, temperature-scaled logits."""
     V = logits.shape[-1]
     # top_k ≤ 0 or ≥ V both mean "no cut" — clamp so an over-large k never
     # wraps the kth-largest index negative (which would *tighten* the cut)
@@ -71,11 +75,60 @@ def _sample_jit(logits, temps, topks, key):
     srt = jnp.sort(logits, axis=-1)                       # ascending
     kth = jnp.take_along_axis(srt, (V - k)[:, None], axis=-1)
     masked = jnp.where(logits >= kth, logits, -jnp.inf)
+    # nucleus cut, in descending-sorted space: keep tokens whose *exclusive*
+    # cumulative mass is < p (the top token always survives), then threshold
+    # the raw logits at the last kept value.  p outside (0, 1) maps to an
+    # always-true predicate, so "off" leaves ``masked`` bit-identical.
+    p_keep = jnp.where((topps <= 0.0) | (topps >= 1.0), 2.0,
+                       topps).astype(jnp.float32)[:, None]
+    desc = srt[:, ::-1]
+    probs = jax.nn.softmax(desc.astype(jnp.float32), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1) - probs              # exclusive
+    n_keep = jnp.sum((cum < p_keep).astype(jnp.int32), axis=-1)
+    pth = jnp.take_along_axis(desc, (n_keep - 1)[:, None], axis=-1)
+    masked = jnp.where(logits >= pth, masked, -jnp.inf)
     g = -jnp.log(-jnp.log(
         jax.random.uniform(key, logits.shape) + 1e-20) + 1e-20)
     z = masked / jnp.maximum(temps, 1e-6)[:, None] + g
     return jnp.where(temps > 0, jnp.argmax(z, axis=-1),
                      jnp.argmax(logits, axis=-1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_paged_jit(params, adapters, tok, cache, pages, idx, cfg,
+                      tenant_ids=None):
+    return T.decode_step_paged(params, adapters, tok, cache, pages, idx, cfg,
+                               tenant_ids=tenant_ids)
+
+
+@jax.jit
+def _paged_splice_kv_jit(pool, small, pages):
+    """Write a single-row prefill KV (``(L, 1, S, KV, hd)`` leaves) into the
+    paged pool (``(L, P, page_size, KV, hd)`` leaves) at the row's ``pages``
+    (``(ceil(S / page_size),)`` int32) — the paged admission step.  Page ids
+    are traced, so admissions never recompile; entries set to the sentinel
+    ``P`` (already-populated shared prefix pages) are skipped via
+    scatter-``drop``."""
+    def leaf(p, s):
+        L, S = s.shape[0], s.shape[2]
+        ps = p.shape[2]
+        npp = pages.shape[0]
+        pad = [(0, 0)] * (s.ndim - 1)
+        pad[1] = (0, npp * ps - S)
+        blk = jnp.pad(s[:, 0], pad).reshape((L, npp, ps) + s.shape[3:])
+        return p.at[:, pages].set(blk.astype(p.dtype), mode="drop")
+    return jax.tree_util.tree_map(leaf, pool, small)
+
+
+def _claim_slot(live, slot, rid):
+    """Admission guard: a busy slot must never be clobbered by a new
+    request.  (The serve loop only admits into drained slots, but any future
+    external admission path hits this check first.)"""
+    if live[slot] is not None:
+        raise RuntimeError(
+            f"no free slots: slot {slot} is busy with request "
+            f"{live[slot][0]!r}; admitting {rid!r} would clobber a live row "
+            f"— wait for a drain or serve with more slots")
 
 
 @jax.jit
@@ -143,9 +196,11 @@ def generate(params, adapters, cfg, prompt_tokens, max_new: int,
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
     """Per-tenant decode-time sampling configuration.  ``temperature <= 0``
-    means greedy; ``top_k <= 0`` means no top-k cut."""
+    means greedy; ``top_k <= 0`` means no top-k cut; ``top_p`` outside
+    (0, 1) means no nucleus cut (so the default 1.0 is off)."""
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
 
 
 @dataclasses.dataclass
@@ -168,10 +223,12 @@ class ServeEngine:
     data — only a change of T, i.e. onboarding, triggers a recompile).
     """
 
-    def __init__(self, params, cfg, base_adapters):
+    def __init__(self, params, cfg, base_adapters, resident_capacity=None):
         self.params, self.cfg = params, cfg
-        self.library = AdapterLibrary(base=base_adapters)
+        self.library = AdapterLibrary(base=base_adapters,
+                                      resident_capacity=resident_capacity)
         self._sampling = {}         # tenant name -> SamplingParams
+        self.last_serve_stats = {}  # filled by every serve() run
 
     # ------------------------------------------------------------- tenants
     def register_tenant(self, name, stack=None, ckpt=None,
@@ -197,11 +254,12 @@ class ServeEngine:
             self._sampling[name] = sampling
         return name
 
-    def set_sampling(self, name, temperature: float = 0.0, top_k: int = 0):
+    def set_sampling(self, name, temperature: float = 0.0, top_k: int = 0,
+                     top_p: float = 1.0):
         """(Re)configure a tenant's decode-time sampling.  Params are traced
         per-row data in the serve loop — changing them never recompiles."""
         self.library.tenant_id(name)     # raises on unknown tenant
-        self._sampling[name] = SamplingParams(temperature, top_k)
+        self._sampling[name] = SamplingParams(temperature, top_k, top_p)
 
     def _tenant_sampling(self, name) -> SamplingParams:
         return self._sampling.get(name, SamplingParams())
@@ -214,26 +272,45 @@ class ServeEngine:
     # ------------------------------------------------------------ batching
     def generate(self, prompt_tokens, tenants, max_new: int):
         """Mixed-tenant batched generation: row i of ``prompt_tokens`` runs
-        tenant ``tenants[i]``'s adapter stack."""
-        ids = self.library.tenant_ids(tenants)
+        tenant ``tenants[i]``'s adapter stack.  Under a library resident
+        capacity, ``route_ids`` first makes the batch's tenants device-
+        resident (LRU upload/evict) and the ids index the resident slab."""
+        ids = self.library.route_ids(tenants)
         return generate(self.params, self.library.stacked_scan(), self.cfg,
                         prompt_tokens, max_new, tenant_ids=ids)
 
     # ------------------------------------------- continuous (slot) batching
     def serve(self, requests, slots: int = 4, prompt_len: int = 16,
-              max_new_cap: int = 16, sample_seed: int = 0):
+              max_new_cap: int = 16, sample_seed: int = 0,
+              paged: bool = False, page_size: int = 8,
+              n_pages: int | None = None,
+              shared_prefix_len: int | None = None):
         """Slot-based continuous batching over a request queue.
 
         A fixed ``(slots,)``-row decode program runs every step; each row
         carries its own decode depth (vector ``idx``), tenant id **and the
-        tenant's sampling params** (temperature / top-k — per-row traced
-        data through ``_sample_jit``, exactly like tenant routing, so mixed
-        greedy/sampling batches never re-jit).  When a row finishes, the
-        next queued request is admitted by a single-row jitted prefill + a
-        jitted cache splice — the decode program never re-jits, whatever
-        the admission pattern.  Drained slots park at ``idx = horizon``
-        (their cache writes one-hot to nothing) until the queue refills
-        them.
+        tenant's sampling params** (temperature / top-k / top-p — per-row
+        traced data through ``_sample_jit``, exactly like tenant routing, so
+        mixed greedy/sampling batches never re-jit).  When a row finishes,
+        the next queued request is admitted by a single-row jitted prefill +
+        a jitted cache splice — the decode program never re-jits, whatever
+        the admission pattern.  Drained slots park at an out-of-range
+        ``idx`` (their cache writes scatter to nothing) until the queue
+        refills them.
+
+        ``paged=True`` serves over the **paged KV pool** instead of the
+        dense ``(L, slots, horizon, ...)`` slot cache: a ``PageTable``
+        allocates each request exactly ``ceil((prompt_len + max_new - 1) /
+        page_size)`` pages at admission and releases them at drain, so a
+        long-tail request mix pays its actual token footprint, not the
+        horizon.  ``n_pages`` sizes the pool (default: worst case,
+        ``slots * ceil(horizon / page_size)``); when the pool is exhausted
+        admission backpressures (the request waits for a drain).
+        ``shared_prefix_len`` (page-aligned, ≤ prompt_len) refcount-shares
+        each tenant's leading prompt pages across concurrent requests — the
+        common-system-prompt KV is stored once per tenant.  Page tables ride
+        into the jitted decode as traced data: the paged program compiles
+        once, whatever the admission/drain pattern.
 
         Sampling is reproducible: row randomness derives from
         ``sample_seed`` folded with the decode-step / admission counters.
@@ -243,10 +320,24 @@ class ServeEngine:
         Rows are independent through attention/SSM state, so outputs equal
         the static-batch path row-for-row on dense/ssm/hybrid families
         (MoE capacity routing is batch-composition-dependent — same caveat
-        as the decode exactness tests).  Returns {rid: np.ndarray tokens}.
+        as the decode exactness tests), and the paged path equals the dense
+        path token-for-token.  Returns {rid: np.ndarray tokens}; per-run
+        counters land in ``self.last_serve_stats``.
         """
         cfg = self.cfg
-        lib = self.library.stacked_scan()
+        requests = list(requests)
+        if slots < 1:
+            raise ValueError(f"serve needs slots >= 1, got {slots}")
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            dup = sorted({r for r in rids if rids.count(r) > 1})
+            raise ValueError(f"duplicate request ids {dup}: outputs are "
+                             f"keyed by rid")
+        for r in requests:
+            if len(r.tokens) != prompt_len:
+                raise ValueError(
+                    f"request {r.rid!r}: prompt has {len(r.tokens)} tokens "
+                    f"but the serve loop is fixed at prompt_len={prompt_len}")
         # independent streams for the decode loop and admissions, each
         # folded with its own counter — replays are bit-identical
         step_key, admit_key = jax.random.split(jax.random.PRNGKey(sample_seed))
@@ -257,32 +348,91 @@ class ServeEngine:
                 f"(horizon {total} > window {cfg.sliding_window}): the ring "
                 f"buffer would wrap mid-request; cap max_new_cap or serve "
                 f"with full attention")
-        park = total                      # one-hot OOB: parked rows write nothing
+
+        table = None
+        if paged:
+            if shared_prefix_len is not None:
+                if shared_prefix_len % page_size:
+                    raise ValueError(
+                        f"shared_prefix_len={shared_prefix_len} must be a "
+                        f"multiple of page_size={page_size} (only whole "
+                        f"pages are shared)")
+                if shared_prefix_len > prompt_len:
+                    raise ValueError(f"shared_prefix_len={shared_prefix_len}"
+                                     f" > prompt_len={prompt_len}")
+            mp = -(-total // page_size)
+            if n_pages is None:
+                n_pages = slots * mp
+            table = PageTable(n_pages, page_size, slots, mp)
+            cache = T.init_paged_cache(cfg, slots, n_pages, page_size)
+            pages_np = table.rows()       # live view, refreshed in place
+            park = mp * page_size         # past every page: writes drop
+        else:
+            cache = T.init_cache(cfg, slots, total)
+            park = total                  # one-hot OOB: parked rows write nothing
 
         queue = collections.deque(requests)
-        cache = T.init_cache(cfg, slots, total)
         tok = np.zeros((slots, 1), np.int32)
         idx = np.full((slots,), park, np.int32)
         tids = np.zeros((slots,), np.int32)
         temps = np.zeros((slots,), np.float32)    # per-row sampling params,
         topks = np.zeros((slots,), np.int32)      # refreshed at admission
-        live = [None] * slots             # per-slot (rid, remaining)
-        out = {r.rid: [] for r in queue}
+        topps = np.ones((slots,), np.float32)
+        live = [None] * slots             # per-slot [rid, remaining, tenant]
+        out = {r.rid: [] for r in requests}
         n_admits = 0
         n_steps = 0
 
         def admit(slot, req):
+            """Admit ``req`` into ``slot``; False = backpressure (page pool
+            exhausted — the request waits for a drain)."""
             nonlocal cache, n_admits
-            tid = self.library.tenant_ids([req.tenant])
+            _claim_slot(live, slot, req.rid)
+            n_store = prompt_len + req.max_new - 1   # tokens this slot writes
+            shared, fresh = (), False
+            if paged:
+                if shared_prefix_len:
+                    pkey = (req.tenant,
+                            np.asarray(req.tokens[:shared_prefix_len],
+                                       np.int32).tobytes())
+                    # a fresh registration takes pages itself — only
+                    # register when the whole request fits
+                    if table.has_prefix(pkey) or table.can_admit(n_store):
+                        shared, fresh = table.share_prefix(
+                            pkey, shared_prefix_len)
+                if not table.can_admit(n_store, shared=shared):
+                    return False
+                row_pages = table.admit(slot, n_store, shared=shared)
+            # pin live tenants: their resident-slab rows are mid-flight
+            pin = tuple(l[2] for l in live if l is not None)
+            tid = self.library.route_ids([req.tenant], pin=pin)
+            lib = self.library.stacked_scan()
             sp = self._tenant_sampling(req.tenant)
             lg, pcache, _ = _prefill_jit(self.params, lib,
                                          {"tokens": jnp.asarray(req.tokens)[None]},
                                          cfg=cfg, tenant_ids=tid)
-            cache = _splice_jit(cache, pcache, slot)
+            if paged:
+                if cache["kv"]:
+                    npp = -(-prompt_len // page_size)
+                    wp = [int(p) for p in row_pages[:npp]]
+                    if shared and not fresh:     # already populated: skip
+                        for i in range(min(len(shared), npp)):
+                            wp[i] = table.n_pages
+                    kv_small = {k: pcache[k] for k in ("k", "v")
+                                if k in pcache}
+                    cache["kv"] = _paged_splice_kv_jit(
+                        cache["kv"], kv_small, jnp.asarray(wp, jnp.int32))
+                if cache["state"]:
+                    st_small = {k: pcache[k] for k in cache["state"]}
+                    cache["state"] = _splice_jit(cache["state"], st_small,
+                                                 slot)
+            else:
+                cache = _splice_jit(cache, pcache, slot)
             n_admits += 1
             first = int(_sample_jit(
                 lg, jnp.asarray([sp.temperature], jnp.float32),
                 jnp.asarray([sp.top_k], jnp.int32),
+                jnp.asarray([sp.top_p], jnp.float32),
                 jax.random.fold_in(admit_key, n_admits))[0])
             out[req.rid].append(first)
             tok[slot, 0] = first
@@ -290,24 +440,49 @@ class ServeEngine:
             tids[slot] = int(tid[0])
             temps[slot] = sp.temperature
             topks[slot] = sp.top_k
-            live[slot] = [req.rid, req.max_new - 1]
+            topps[slot] = sp.top_p
+            live[slot] = [req.rid, req.max_new - 1, req.tenant]
+            return True
+
+        def drain(slot):
+            live[slot] = None
+            idx[slot] = park
+            if paged:
+                table.release(slot)
 
         while queue or any(live):
+            stalled = False
             for s in range(slots):
                 if live[s] is None and queue:
                     req = queue.popleft()
-                    admit(s, req)
-                    if req.max_new <= 1:            # prefill already emitted it
-                        idx[s] = park
-                        live[s] = None
+                    if not admit(s, req):
+                        queue.appendleft(req)     # FIFO backpressure
+                        stalled = True
+                        break
+                    if req.max_new <= 1:          # prefill already emitted it
+                        drain(s)
             if not any(live):
+                if stalled:
+                    raise RuntimeError(
+                        f"page pool too small: {table.n_pages} pages "
+                        f"(page_size={table.page_size}) cannot admit even "
+                        f"one queued request with every slot drained; grow "
+                        f"n_pages")
                 continue
-            lg, cache, _ = _decode_jit(self.params, lib, jnp.asarray(tok),
-                                       cache, jnp.asarray(idx), cfg=cfg,
-                                       tenant_ids=jnp.asarray(tids))
+            lib = self.library.stacked_scan()
+            if paged:
+                lg, cache, _ = _decode_paged_jit(
+                    self.params, lib, jnp.asarray(tok), cache,
+                    jnp.asarray(pages_np), jnp.asarray(idx), cfg=cfg,
+                    tenant_ids=jnp.asarray(tids))
+            else:
+                lg, cache, _ = _decode_jit(self.params, lib, jnp.asarray(tok),
+                                           cache, jnp.asarray(idx), cfg=cfg,
+                                           tenant_ids=jnp.asarray(tids))
             n_steps += 1
             nxt = np.asarray(_sample_jit(lg, jnp.asarray(temps),
                                          jnp.asarray(topks),
+                                         jnp.asarray(topps),
                                          jax.random.fold_in(step_key,
                                                             n_steps)),
                              np.int32)
@@ -319,8 +494,16 @@ class ServeEngine:
                 idx[s] += 1
                 live[s][1] -= 1
                 if live[s][1] <= 0:
-                    live[s] = None
-                    idx[s] = park
+                    drain(s)
+
+        self.last_serve_stats = {
+            "steps": n_steps, "admits": n_admits, "paged": bool(paged),
+            "adapter": dict(self.library.stats),
+            "adapter_hit_rate": self.library.hit_rate,
+        }
+        if paged:
+            table.drop_prefixes()
+            self.last_serve_stats["pages"] = table.stats()
         return {rid: np.asarray(toks, np.int32) for rid, toks in out.items()}
 
 

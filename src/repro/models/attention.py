@@ -250,6 +250,101 @@ def attention_decode(p, x, cache, idx, cfg: ModelConfig, cross=False):
     return dense(p["o"], out, cd), cache
 
 
+def attention_decode_paged(p, x, pool, pages, idx, cfg: ModelConfig,
+                           use_kernel=None):
+    """One-token decode over a **paged** KV pool (ISSUE 9).
+
+    x: (B, 1, d).  pool: {"k","v"}: (P, page_size, KV, hd) — the flat page
+    pool shared by every slot; ``pages`` (B, max_pages) int32 maps each
+    row's token positions to pool pages in order (entries < 0 unallocated,
+    see ``core.paging.PageTable``); ``idx`` (B,) int32 per-row decode depth
+    (rows parked at ``idx >= max_pages·page_size`` write nothing, exactly
+    like the dense one-hot OOB parking).  Returns (out (B,1,d), pool).
+
+    The fallback path gathers the row's pages into a contiguous
+    ``(B, max_pages·page_size, KV, hd)`` view and runs the *identical*
+    masked-softmax einsums as the dense ``attention_decode`` — paged and
+    dense decode are row-for-row equal by construction.  On TPU the Pallas
+    kernel (``kernels.paged_attention``) skips the gather: the page table
+    is scalar-prefetched and drives the KV BlockSpec index_map.
+
+    Sliding-window ring semantics are not paged (the serve loop already
+    refuses horizons beyond the window, so positions never wrap).
+    """
+    hd = cfg.head_dim_
+    B = x.shape[0]
+    cd = cfg.cdtype()
+    P, ps = pool["k"].shape[0], pool["k"].shape[1]
+    mp = pages.shape[1]
+    horizon = mp * ps
+    idx = jnp.asarray(idx, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.full((B,), idx, jnp.int32)
+
+    q = _split_heads(dense(p["q"], x, cd), cfg.n_heads, hd)      # (B,1,H,hd)
+    k_new = _split_heads(dense(p["k"], x, cd), cfg.n_kv_heads, hd)
+    v_new = _split_heads(dense(p["v"], x, cd), cfg.n_kv_heads, hd)
+    pos = idx.reshape(B, 1)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos[None], (3, B, 1))
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k_new = apply_mrope(k_new, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+    # -- paged KV write: token idx lands in page pages[b, idx // ps] at
+    # offset idx % ps.  Parked rows (idx >= horizon) route to the OOB
+    # sentinel P and scatter-drop; shared prefix pages are never written
+    # here (decode positions sit past the prompt, hence past the prefix).
+    pidx = jnp.clip(idx // ps, 0, mp - 1)
+    page = jnp.take_along_axis(pages, pidx[:, None], axis=1)[:, 0]
+    page = jnp.where((idx >= 0) & (idx < horizon), page, P)
+    off = idx % ps
+    k_pool = pool["k"].at[page, off].set(
+        k_new[:, 0].astype(pool["k"].dtype), mode="drop")
+    v_pool = pool["v"].at[page, off].set(
+        v_new[:, 0].astype(pool["v"].dtype), mode="drop")
+    pool = {"k": k_pool, "v": v_pool}
+
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, cfg.n_kv_heads, G, hd)
+
+    use = use_kernel
+    if use is None:
+        use = jax.default_backend() == "tpu"
+    if use:
+        from ..kernels import ops as kops
+        out = kops.paged_attention(qg[:, 0], k_pool, v_pool, pages,
+                                   jnp.minimum(idx, horizon - 1) + 1)
+        out = out[:, None]                                   # (B,1,KV,G,hd)
+    else:
+        # contiguous per-row view of the pages, then the dense decode math
+        gather = jnp.maximum(pages, 0)
+        K = k_pool[gather].reshape(B, horizon, cfg.n_kv_heads, hd)
+        V = v_pool[gather].reshape(B, horizon, cfg.n_kv_heads, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, K,
+                            preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+        j = jnp.arange(horizon)
+        valid = j[None, :] <= idx[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(V.dtype), V,
+                         preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(cd)
+    return dense(p["o"], out, cd), pool
+
+
+def init_paged_kv_pool(cfg: ModelConfig, n_pages, page_size, dtype=None):
+    """Per-layer paged pool entry; the model stacks these along axis 0."""
+    hd = cfg.head_dim_
+    dt = dtype or cfg.cdtype()
+    return {
+        "k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd), dt),
+    }
+
+
 def init_kv_cache(cfg: ModelConfig, batch, max_len, dtype=None):
     """Per-layer cache entry; the model stacks these along axis 0."""
     hd = cfg.head_dim_

@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .attention import (attention, attention_decode, attention_prefill,
-                        init_kv_cache)
+from .attention import (attention, attention_decode, attention_decode_paged,
+                        attention_prefill, init_kv_cache, init_paged_kv_pool)
 from .config import ModelConfig
 from .mlp import mlp, mlp_init, moe, moe_init
 from .module import apply_norm, norm_init
@@ -156,6 +156,37 @@ def block_decode(p, x, cache, idx, cfg: ModelConfig, kind: str, enc_len=None):
     else:
         x = x + mlp(p["ffn"], h2, cfg)
     return x, new_cache
+
+
+def block_decode_paged(p, x, kv, st, pages, idx, cfg: ModelConfig, kind: str):
+    """Paged-KV decode step.  ``kv``: this layer's page pool ({"k","v"}
+    (P, page_size, KV, hd), empty for attention-free kinds); ``st``: this
+    layer's per-slot state (SSM conv/h, empty for pure-attention kinds);
+    ``pages`` (B, max_pages) / ``idx`` (B,) route KV reads and writes.
+    Returns (x, kv, st) — same contract as ``block_decode`` with the cache
+    split into its paged and slot-resident halves."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "ssm":
+        mix, st = mamba_decode(p["mixer"], h, st, cfg)
+        return x + mix, kv, st
+    if kind == "hybrid":
+        a, kv = attention_decode_paged(p["attn"], h, kv, pages, idx, cfg)
+        s, st = mamba_decode(p["ssm"], h, {"conv": st["conv"], "h": st["h"]},
+                             cfg)
+        mix = 0.5 * (apply_norm(p["attn_out_norm"], a, cfg.norm)
+                     + apply_norm(p["ssm_out_norm"], s, cfg.norm))
+        x = x + mix
+        x = x + mlp(p["ffn"], apply_norm(p["norm2"], x, cfg.norm), cfg)
+        return x, kv, st
+    a, kv = attention_decode_paged(p["attn"], h, kv, pages, idx, cfg)
+    x = x + a
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "moe":
+        y, _ = moe(p["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp(p["ffn"], h2, cfg)
+    return x, kv, st
 
 
 # ------------------------------------------------------------------ cache init

@@ -23,8 +23,8 @@ from ..core.adapters import (AUX, FROZEN, TRAIN, ActiveAdapters,
                              adapter_apply, adapter_apply_routed,
                              adapter_chain_apply, adapter_stack_init)
 from ..sharding.hooks import constrain_logits, constrain_residual
-from .blocks import (block_apply, block_cache_init, block_decode, block_init,
-                     block_prefill)
+from .blocks import (block_apply, block_cache_init, block_decode,
+                     block_decode_paged, block_init, block_prefill)
 from .config import ModelConfig
 from .module import apply_norm, embed, embed_init, norm_init, unembed
 from .attention import default_positions
@@ -424,6 +424,67 @@ def init_cache(cfg: ModelConfig, batch, max_len, enc_len=None):
     one = block_cache_init(cfg, kind, batch, max_len, enc_len=enc_len)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def init_paged_cache(cfg: ModelConfig, slots, n_pages, page_size):
+    """Paged serve cache (ISSUE 9): ``{"kv", "state"}`` where ``kv`` is the
+    stacked ``(L, n_pages, page_size, KV, hd)`` page pool (empty for
+    attention-free families) and ``state`` holds the per-slot leaves that
+    have no sequence axis (SSM conv/h), stacked ``(L, slots, ...)`` exactly
+    like the dense cache.  Page lists (``core.paging.PageTable``) decide
+    which pool pages belong to which slot — the shapes here never depend on
+    request lengths or admission order."""
+    from .blocks import init_paged_kv_pool
+    from .ssm import init_ssm_cache
+    _, kind = _kinds(cfg)
+    assert kind in ("dense", "moe", "ssm", "hybrid"), \
+        f"paged serving: single-stack decoder families only, got {kind!r}"
+    L = cfg.n_layers
+
+    def stack(one):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), one)
+
+    kv = {} if kind == "ssm" else stack(
+        init_paged_kv_pool(cfg, n_pages, page_size))
+    state = stack(init_ssm_cache(cfg, slots)) if kind in ("ssm", "hybrid") \
+        else {}
+    return {"kv": kv, "state": state}
+
+
+def decode_step_paged(params, adapters, token, cache, pages, idx,
+                      cfg: ModelConfig, tenant_ids=None):
+    """One decode step over the paged KV cache (``init_paged_cache``).
+
+    ``pages`` (B, max_pages) int32 — per-row page lists (traced data:
+    admission/drain/prefix-sharing never recompile); ``idx`` (B,) per-row
+    decode depths, parked rows at ``idx >= max_pages·page_size``.  Tenant
+    routing is identical to ``decode_step``.  Returns
+    (logits (B, V), cache, idx + 1).
+    """
+    _require_adapters(adapters)
+    assert not cfg.is_encdec, "paged serving: single-stack models"
+    x = embed(params["embed"], token, cfg.cdtype())
+    _, kind = _kinds(cfg)
+    if tenant_ids is not None:
+        assert tenant_ids.ndim == 1, "tenant_ids: (B,) int32"
+
+    def body(carry, xs):
+        h = carry
+        lp, ap, kvc, st = xs
+        h, kvc, st = block_decode_paged(lp, h, kvc, st, pages, idx, cfg,
+                                        kind)
+        if tenant_ids is not None:
+            h = adapter_apply_routed(ap, h, tenant_ids, cfg)
+        else:
+            h = adapter_apply(ap, h, cfg)
+        return h, (kvc, st)
+
+    x, (kv, state) = jax.lax.scan(
+        body, x, (params["layers"], adapters, cache["kv"], cache["state"]),
+        unroll=_unroll())
+    logits = head(params, x, cfg)[:, 0]
+    return logits, {"kv": kv, "state": state}, idx + 1
 
 
 def decode_step(params, adapters, token, cache, idx, cfg: ModelConfig,

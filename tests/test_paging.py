@@ -1,0 +1,338 @@
+"""Paged KV-cache serving (ISSUE 9): the PageTable allocator (free-list
+reuse, refcounted shared prefixes, exhaustion), the paged-attention kernel
+vs the gather fallback, paged ≡ dense serve equality across families and
+slot-lifecycle edge cases, the adapter library's host/LRU tier, nucleus
+sampling, and the serve-loop admission guards."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.adapters import AdapterLibrary, adapter_stack_init
+from repro.core.memory import (paged_kv_bytes, resident_library_bytes,
+                               serve_kv_bytes)
+from repro.core.paging import PageTable
+from repro.launch.serve import (Request, SamplingParams, ServeEngine,
+                                _claim_slot, _sample_jit)
+from repro.models import transformer as T
+
+CFG = get_smoke_config("qwen2_0_5b")
+KEY = jax.random.PRNGKey(5)
+
+
+def perturbed(base, seed, scale=0.02):
+    k = jax.random.PRNGKey(seed)
+    return jax.tree_util.tree_map(
+        lambda x: x + scale * jax.random.normal(k, x.shape, x.dtype), base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = T.init_lm(KEY, CFG)
+    base = T.init_adapters(KEY, CFG)
+    return params, base
+
+
+def _engine(params, base, n_tenants=3, capacity=None):
+    eng = ServeEngine(params, CFG, base, resident_capacity=capacity)
+    names = [eng.register_tenant(f"t{i}", stack=perturbed(base, 100 + i))
+             for i in range(n_tenants)]
+    return eng, names
+
+
+def _requests(n, prompt_len, names, seed=3, max_new=(2, 9)):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(4, CFG.vocab_size,
+                                    prompt_len).astype(np.int32),
+                    names[int(rng.integers(0, len(names)))],
+                    int(rng.integers(*max_new))) for i in range(n)]
+
+
+# ================================================================ PageTable
+def test_page_table_admit_release_and_reuse():
+    t = PageTable(n_pages=8, page_size=4, slots=2, max_pages=4)
+    rows = t.admit(0, 10)                     # ceil(10/4) = 3 pages
+    assert (rows[:3] >= 0).all() and (rows[3:] == -1).all()
+    assert t.in_use == 3
+    first = [int(p) for p in rows[:3]]
+    t.release(0)
+    assert t.in_use == 0 and (t.rows()[0] == -1).all()
+    # LIFO free list: re-admission reuses the released pages
+    again = [int(p) for p in t.admit(1, 12)[:3]]
+    assert set(again) == set(first)
+
+
+def test_page_table_exhaustion_and_guards():
+    t = PageTable(n_pages=4, page_size=4, slots=3, max_pages=4)
+    t.admit(0, 16)                            # takes the whole pool
+    assert not t.can_admit(4)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        t.admit(1, 4)
+    with pytest.raises(RuntimeError, match="release"):
+        t.admit(0, 4)                         # slot already holds pages
+    with pytest.raises(ValueError, match="max_pages"):
+        PageTable(8, 4, 2, 2).admit(0, 16)    # horizon overflow
+    assert t.peak_in_use == 4
+
+
+def test_page_table_shared_prefix_refcounts():
+    t = PageTable(n_pages=8, page_size=4, slots=3, max_pages=4)
+    pages, fresh = t.share_prefix("sys", 8)   # 2 pages, registration pin
+    assert fresh and len(pages) == 2
+    same, fresh2 = t.share_prefix("sys", 8)
+    assert not fresh2 and same == pages
+    t.admit(0, 12, shared=pages)              # 2 shared + 1 private
+    t.admit(1, 12, shared=pages)
+    assert t.in_use == 4                      # 2 shared + 2 private
+    t.release(0)
+    t.release(1)
+    assert t.in_use == 2                      # pin keeps the prefix alive
+    t.drop_prefixes()
+    assert t.in_use == 0
+    with pytest.raises(ValueError, match="aligned"):
+        t.share_prefix("odd", 6)
+
+
+# ========================================================== paged attention
+def test_paged_attention_kernel_matches_gather_fallback():
+    """The scalar-prefetched kernel (interpret=True) equals the contiguous
+    gather + masked-softmax reference, including parked rows (length 0) and
+    unallocated (-1) page entries."""
+    from repro.kernels.ops import paged_attention
+
+    ks = jax.random.split(KEY, 3)
+    B, KV, G, hd, P, ps, mp = 4, 2, 3, 16, 12, 4, 3
+    q = jax.random.normal(ks[0], (B, KV, G, hd), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (P, ps, KV, hd), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (P, ps, KV, hd), jnp.float32)
+    pages = jnp.asarray([[0, 1, 2], [3, 4, -1], [5, -1, -1], [6, 7, 8]],
+                        jnp.int32)
+    lengths = jnp.asarray([11, 7, 3, 0], jnp.int32)
+    out = paged_attention(q, k_pool, v_pool, pages, lengths)
+
+    Kc = k_pool[jnp.maximum(pages, 0)].reshape(B, mp * ps, KV, hd)
+    Vc = v_pool[jnp.maximum(pages, 0)].reshape(B, mp * ps, KV, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", q, Kc) / jnp.sqrt(jnp.float32(hd))
+    valid = jnp.arange(mp * ps)[None] < lengths[:, None]
+    w = jax.nn.softmax(jnp.where(valid[:, None, None, :], s, -1e30), axis=-1)
+    ref = jnp.einsum("bkgs,bskh->bkgh", w, Vc)
+    ref = jnp.where((lengths > 0)[:, None, None, None], ref, 0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ====================================================== paged ≡ dense serve
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "falcon_mamba_7b",
+                                  "hymba_1_5b"])
+def test_paged_serve_equals_dense_serve(arch):
+    """Row-for-row token equality between the paged pool and the dense slot
+    cache under continuous batching, for attention, SSM and hybrid blocks —
+    drains, re-admissions and partial tail pages included."""
+    cfg = get_smoke_config(arch)
+    params = T.init_lm(KEY, cfg)
+    base = T.init_adapters(KEY, cfg)
+    eng = ServeEngine(params, cfg, base)
+    names = [eng.register_tenant(f"t{i}", stack=perturbed(base, 100 + i))
+             for i in range(3)]
+    rng = np.random.default_rng(7)
+    reqs = [Request(i, rng.integers(4, cfg.vocab_size, 12).astype(np.int32),
+                    names[i % 3], int(rng.integers(2, 9))) for i in range(7)]
+    dense = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8)
+    paged = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8,
+                      paged=True, page_size=5)     # 17 % 5 ≠ 0: tail pages
+    for r in reqs:
+        np.testing.assert_array_equal(dense[r.rid], paged[r.rid])
+    stats = eng.last_serve_stats
+    assert stats["paged"] and stats["pages"]["in_use"] == 0
+
+
+def test_paged_serve_drained_slot_reuses_pages_and_parks_oob(setup):
+    """Slot lifecycle: more requests than slots forces drains + re-admission
+    (reusing released pages — peak stays at the concurrent footprint, not
+    the cumulative one), and drained rows park without corrupting live
+    rows' pages."""
+    params, base = setup
+    eng, names = _engine(params, base)
+    reqs = _requests(9, 12, names, seed=11)
+    out = eng.serve(list(reqs), slots=2, prompt_len=12, max_new_cap=8,
+                    paged=True, page_size=4)
+    for r in reqs:
+        assert len(out[r.rid]) == r.max_new
+    st = eng.last_serve_stats["pages"]
+    # 9 admissions × 5 pages each would be 45 without reuse; two slots
+    # can hold at most 2 × ceil(19/4) = 10 concurrently
+    assert st["peak_in_use"] <= 10
+    ref = eng.serve(list(reqs), slots=2, prompt_len=12, max_new_cap=8)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+
+
+def test_paged_serve_shared_prefix_exact_and_smaller(setup):
+    """Sharing page-aligned common prompt prefixes is bit-exact and strictly
+    lowers the peak page footprint."""
+    params, base = setup
+    eng, names = _engine(params, base)
+    rng = np.random.default_rng(0)
+    pre = rng.integers(4, CFG.vocab_size, 8).astype(np.int32)
+    reqs = [Request(i, np.concatenate(
+                [pre, rng.integers(4, CFG.vocab_size, 4).astype(np.int32)]),
+                    names[0], 6) for i in range(6)]
+    plain = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8,
+                      paged=True, page_size=4)
+    peak_plain = eng.last_serve_stats["pages"]["peak_in_use"]
+    shared = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8,
+                       paged=True, page_size=4, shared_prefix_len=8)
+    st = eng.last_serve_stats["pages"]
+    for r in reqs:
+        np.testing.assert_array_equal(plain[r.rid], shared[r.rid])
+    assert st["peak_in_use"] < peak_plain
+    assert st["prefix_hits"] >= 1 and st["prefix_misses"] == 1
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8,
+                  paged=True, page_size=4, shared_prefix_len=6)
+
+
+def test_paged_serve_backpressure_completes(setup):
+    """A pool smaller than slots × worst-case forces admission waits; every
+    request still completes at full length.  A pool too small for even one
+    request raises instead of spinning."""
+    params, base = setup
+    eng, names = _engine(params, base)
+    reqs = _requests(6, 12, names, seed=2)
+    out = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8,
+                    paged=True, page_size=4, n_pages=6)
+    for r in reqs:
+        assert len(out[r.rid]) == r.max_new
+    with pytest.raises(RuntimeError, match="pool too small"):
+        eng.serve(_requests(2, 12, names, max_new=(8, 9)), slots=2,
+                  prompt_len=12, max_new_cap=8, paged=True, page_size=4,
+                  n_pages=2)
+
+
+# ===================================================== serve-loop guards
+def test_serve_admission_guard_and_validation(setup):
+    """Satellite: admitting into a busy slot raises 'no free slots' instead
+    of clobbering the live row; malformed serve calls fail fast."""
+    params, base = setup
+    eng, names = _engine(params, base)
+    with pytest.raises(RuntimeError, match="no free slots"):
+        _claim_slot([["rid0", 3, names[0]]], 0, "rid1")
+    _claim_slot([None], 0, "rid1")            # free slot: no error
+    reqs = _requests(4, 12, names)
+    with pytest.raises(ValueError, match="slots >= 1"):
+        eng.serve(list(reqs), slots=0, prompt_len=12)
+    dup = [Request(7, reqs[0].tokens, names[0], 2),
+           Request(7, reqs[1].tokens, names[1], 2)]
+    with pytest.raises(ValueError, match="duplicate request ids"):
+        eng.serve(dup, slots=2, prompt_len=12)
+    bad = [Request(0, np.zeros(5, np.int32), names[0], 2)]
+    with pytest.raises(ValueError, match="prompt_len"):
+        eng.serve(bad, slots=2, prompt_len=12)
+
+
+# ======================================================== host / LRU tier
+def test_library_lru_resident_set_routes_like_full(setup):
+    """route_ids through an R-row resident slab gathers the same stacks as
+    registration-order ids through the full (L, T, ...) library."""
+    _, base = setup
+    T_, R = 8, 3
+    stacks = {f"t{i}": perturbed(base, i) for i in range(T_)}
+    full, lru = AdapterLibrary(), AdapterLibrary(resident_capacity=R)
+    for n, s in stacks.items():
+        full.add(n, s)
+        lru.add(n, s)
+    for batch in (["t0", "t1", "t0", "t2"], ["t3", "t1"],
+                  ["t4", "t5", "t6"], ["t0", "t7"]):
+        rids = lru.route_ids(batch)
+        got = jax.tree_util.tree_map(lambda x: x[:, rids],
+                                     lru.stacked_scan())
+        want = jax.tree_util.tree_map(
+            lambda x: x[:, full.tenant_ids(batch)], full.stacked_scan())
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert lru.stats["evictions"] > 0 and lru.stats["uploads"] > R
+    assert 0.0 <= lru.hit_rate < 1.0
+    # slab shape is pinned by R: onboarding more tenants can't re-jit
+    leaf = jax.tree_util.tree_leaves(lru.stacked_scan())[0]
+    assert leaf.shape[1] == R
+    with pytest.raises(RuntimeError, match="resident_capacity"):
+        lru.route_ids(["t0", "t1", "t2", "t3"])
+    with pytest.raises(RuntimeError, match="resident_capacity"):
+        lru.route_ids(["t4"], pin=("t0", "t1", "t2"))
+
+
+def test_serve_through_lru_resident_set_bit_identical(setup):
+    """T=8 tenants served through an R=3 resident set equal the fully
+    resident library token-for-token, with evictions actually happening."""
+    params, base = setup
+    engF, names = _engine(params, base, n_tenants=8)
+    engL, _ = _engine(params, base, n_tenants=8, capacity=3)
+    reqs = _requests(10, 12, names, seed=13)
+    a = engF.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8,
+                   paged=True, page_size=4)
+    b = engL.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8,
+                   paged=True, page_size=4)
+    for r in reqs:
+        np.testing.assert_array_equal(a[r.rid], b[r.rid])
+    st = engL.last_serve_stats
+    assert st["adapter"]["evictions"] > 0
+    assert 0.0 <= st["adapter_hit_rate"] <= 1.0
+
+
+# ======================================================= nucleus sampling
+def test_sample_jit_nucleus_cut():
+    """top_p: greedy rows stay exact argmax; p outside (0, 1) is bit-
+    identical to no cut; a tiny p collapses to argmax; a mid p never leaves
+    the nucleus set."""
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(key, (4, 32)) * 3
+    zk = jnp.zeros((4,), jnp.int32)
+    greedy = _sample_jit(logits, jnp.zeros(4), zk, jnp.full(4, 0.5), key)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    off1 = _sample_jit(logits, jnp.ones(4), zk, jnp.ones(4), key)
+    off0 = _sample_jit(logits, jnp.ones(4), zk, jnp.zeros(4), key)
+    np.testing.assert_array_equal(np.asarray(off1), np.asarray(off0))
+    tiny = _sample_jit(logits, jnp.full(4, 5.0), zk, jnp.full(4, 1e-6), key)
+    np.testing.assert_array_equal(np.asarray(tiny),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    probs = np.asarray(jax.nn.softmax(logits[0]))
+    order = np.argsort(-probs)
+    nucleus = set(order[(np.cumsum(probs[order]) - probs[order])
+                        < 0.5].tolist())
+    for i in range(50):
+        tok = _sample_jit(logits[:1], jnp.ones(1), zk[:1], jnp.full(1, 0.5),
+                          jax.random.fold_in(key, i))
+        assert int(tok[0]) in nucleus
+
+
+def test_serve_with_topp_tenant_reproducible(setup):
+    """A top_p tenant serves reproducibly and greedy tenants stay bit-
+    identical to the all-greedy run."""
+    params, base = setup
+    eng, names = _engine(params, base)
+    reqs = _requests(6, 12, names, seed=4, max_new=(4, 7))
+    ref = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8)
+    eng.set_sampling(names[1], temperature=2.0, top_p=0.8)
+    assert eng._tenant_sampling(names[1]) == SamplingParams(2.0, 0, 0.8)
+    hot = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8)
+    again = eng.serve(list(reqs), slots=3, prompt_len=12, max_new_cap=8)
+    for r in reqs:
+        np.testing.assert_array_equal(hot[r.rid], again[r.rid])
+        if r.tenant != names[1]:
+            np.testing.assert_array_equal(hot[r.rid], ref[r.rid])
+    assert any(not np.array_equal(hot[r.rid], ref[r.rid])
+               for r in reqs if r.tenant == names[1])
+
+
+# ========================================================== memory model
+def test_serving_memory_model():
+    slots, horizon, ps = 4, 32, 8
+    dense = serve_kv_bytes(CFG, slots, horizon)
+    worst = paged_kv_bytes(CFG, slots * (horizon // ps), ps)
+    assert dense == worst > 0                 # full pool == dense worst case
+    assert paged_kv_bytes(CFG, 6, ps) < dense  # long-tail pools shrink
+    ssm = get_smoke_config("falcon_mamba_7b")
+    assert serve_kv_bytes(ssm, slots, horizon) == 0
+    assert resident_library_bytes(CFG, 3) * 2 == resident_library_bytes(CFG, 6)

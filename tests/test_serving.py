@@ -237,9 +237,10 @@ def test_sample_jit_respects_topk_and_temperature():
     # row 0 greedy, row 1 top-1 sampling (≡ greedy), rows 2/3 top-k sampled
     temps = jnp.asarray([0.0, 5.0, 1.0, 2.0], jnp.float32)
     topks = jnp.asarray([0, 1, 4, 8], jnp.int32)
+    nopp = jnp.ones((4,), jnp.float32)           # top_p=1.0: nucleus off
     seen = set()
     for i in range(24):
-        tok = np.asarray(_sample_jit(logits, temps, topks,
+        tok = np.asarray(_sample_jit(logits, temps, topks, nopp,
                                      jax.random.fold_in(key, i)))
         assert tok[0] == greedy[0]
         assert tok[1] == greedy[1]
@@ -249,9 +250,9 @@ def test_sample_jit_respects_topk_and_temperature():
         seen.add(int(tok[3]))
     assert len(seen) > 1        # hot rows actually sample
     # top_k ≥ V is "no cut", identical to top_k = 0 (no negative wrap)
-    wide = _sample_jit(logits, temps, jnp.asarray([0, 1, 32 + 9, 8]),
+    wide = _sample_jit(logits, temps, jnp.asarray([0, 1, 32 + 9, 8]), nopp,
                        jax.random.fold_in(key, 0))
-    base = _sample_jit(logits, temps, jnp.asarray([0, 1, 0, 8]),
+    base = _sample_jit(logits, temps, jnp.asarray([0, 1, 0, 8]), nopp,
                        jax.random.fold_in(key, 0))
     np.testing.assert_array_equal(np.asarray(wide), np.asarray(base))
 
