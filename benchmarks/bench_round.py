@@ -279,6 +279,127 @@ def bench_population(smoke: bool, seed=0):
     return out
 
 
+# ---------------------------------------------------- fused-optimizer cells
+# Analytic HBM traffic per element per AdamW step (the roofline inputs —
+# ``benchmarks.roofline`` falls back to these when no dryrun artifacts
+# exist).  unfused: four materialized passes (clip-scale g, mu, nu, p);
+# fused: every stream read once, written once; int8: moments are 1-byte
+# streams (+ per-128 fp32 scales, amortized to ~0.25 B/elem).
+OPTIM_BYTES_PER_ELEM = {"unfused_fp32": 48.0, "fused_fp32": 28.0,
+                        "fused_int8": 16.25}
+ADAMW_FLOPS_PER_ELEM = 15   # mul/add chain + sqrt + div, clip scale applied
+
+
+def bench_fused_optim(smoke: bool, seed=0, reps=None):
+    """Cohort-shaped optimizer hot-path microbench (ISSUE 10 tentpole):
+    one vmapped AdamW step over a ``(C, ...)`` trainable stack, sized past
+    LLC so the step is memory-bound — the regime where the chainfed cohort
+    round spends its optimizer time.
+
+    Three cells:
+
+    * ``unfused_fp32`` — the legacy multi-``tree_map`` step (``fused=False``)
+      dispatched without a wrapping jit, materializing every intermediate:
+      the seed's op-by-op behavior and the bytes-moved baseline.
+    * ``fused_fp32``   — the single-pass path (``fused=None``) under jit:
+      one fused chain per leaf (Pallas kernel on TPU, XLA elsewhere).
+    * ``fused_int8``   — the single-pass path with block-quantized moments
+      (``opt_bits=8``): 4× less resident optimizer state and ~16 vs 28
+      B/elem of moment traffic; on CPU the in-tile requant costs compute,
+      so its *throughput* win only materializes on HBM-bound accelerators —
+      the cell reports resident bytes alongside steps/s for exactly that
+      reason.
+
+    The CI gate reads ``fused_fp32``: ≥ 1.1× the unfused steps/s."""
+    from repro.core.memory import optimizer_state_bytes
+    from repro.optim.base import adamw
+
+    C, N = (4, 250_000) if smoke else (8, 1_000_000)
+    reps = reps or (4 if smoke else 8)
+    key = jax.random.PRNGKey(seed)
+    # two adapter-like leaves so the per-leaf dispatch cost is represented
+    p = {"down": jax.random.normal(key, (C, N // 2)) * 0.1,
+         "up": jax.random.normal(jax.random.fold_in(key, 1), (C, N // 2))
+         * 0.1}
+    g = {k: jax.random.normal(jax.random.fold_in(key, 2 + i), v.shape)
+         for i, (k, v) in enumerate(p.items())}
+    elems = C * N
+
+    def cell(opt_bits, fused, use_jit):
+        opt = adamw(1e-3, clip=1.0, opt_bits=opt_bits, fused=fused)
+        step = jax.vmap(opt.step)
+        if use_jit:
+            step = jax.jit(step)
+        st = jax.vmap(opt.init)(p)
+        p2, _ = step(p, g, st)           # compile / trace warmup
+        jax.block_until_ready(p2)
+        cp, cst = p, st
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            cp, cst = step(cp, g, cst)
+        jax.block_until_ready(cp)
+        return (time.perf_counter() - t0) / reps
+
+    out = {}
+    for tag, (bits, fused, use_jit) in (
+            ("unfused_fp32", (32, False, False)),
+            ("fused_fp32", (32, None, True)),
+            ("fused_int8", (8, None, True))):
+        s = cell(bits, fused, use_jit)
+        out[tag] = {
+            "s_per_step": s, "steps_per_s": 1.0 / s,
+            "elems": elems,
+            "bytes_per_step": int(OPTIM_BYTES_PER_ELEM[tag] * elems),
+            "bytes_per_s": OPTIM_BYTES_PER_ELEM[tag] * elems / s,
+            "opt_state_bytes_per_client": optimizer_state_bytes(
+                N, opt_bits=bits),
+        }
+    for tag in ("fused_fp32", "fused_int8"):
+        out[tag]["speedup_vs_unfused"] = (
+            out["unfused_fp32"]["s_per_step"] / out[tag]["s_per_step"])
+    for tag, rec in out.items():
+        extra = ""
+        if "speedup_vs_unfused" in rec:
+            extra = f";speedup={rec['speedup_vs_unfused']:.2f}"
+        print(f"round/fused_optim/{tag},{rec['s_per_step']*1e6:.0f},"
+              f"steps_per_s={rec['steps_per_s']:.2f}"
+              f";bytes_per_step={rec['bytes_per_step']}"
+              f";opt_state_B={rec['opt_state_bytes_per_client']}"
+              f"{extra}", flush=True)
+    return out
+
+
+def bench_comm(smoke: bool, seed=0):
+    """Per-round per-client uplink bytes across the communication ladder:
+    dense chainfed, compressed chainfed (top-k 5%, int8 QSGD), and
+    FedKSeed's accumulated-coefficient protocol — including the paper's
+    headline cell, 18 KB *total* (up + down) at K=1152
+    (``core.memory.fedkseed_total_comm``)."""
+    from repro.core.memory import fedkseed_total_comm
+    from repro.fed.compress import CompressionConfig
+    from repro.fed.registry import make_strategy
+
+    cfg = get_config("bert_tiny").reduced() if smoke else get_config(
+        "bert_tiny")
+    chain = ChainConfig(window=3, local_steps=1, lr=1e-3)
+    dense = make_strategy("chainfed", cfg, chain, jax.random.PRNGKey(seed),
+                          use_foat=False).comm_bytes_per_round()
+    kseed = make_strategy("fedkseed", cfg, chain, jax.random.PRNGKey(seed))
+    out = {
+        "chainfed_dense": dense,
+        "chainfed_topk05": CompressionConfig(
+            kind="topk", ratio=0.05).compressed_bytes(dense),
+        "chainfed_qsgd8": CompressionConfig(
+            kind="qsgd").compressed_bytes(dense),
+        "fedkseed_uplink": kseed.comm_bytes_per_round(),
+        "fedkseed_total": kseed.total_comm_bytes(),
+        "fedkseed_paper_k1152_total": fedkseed_total_comm(1152),
+    }
+    for tag, b in out.items():
+        print(f"round/comm/{tag},0,bytes={b}", flush=True)
+    return out
+
+
 # the 10⁵-client smoke gate: lazy resident state must stay under this —
 # the whole point of the pool is O(active cohort), not O(population)
 POPULATION_RESIDENT_CEILING = 1 << 20
@@ -313,6 +434,8 @@ def run(fast: bool = False, smoke: bool = False, rounds: int = None,
     doc = {"backend": jax.default_backend(),
            "mode": "smoke" if smoke else ("fast" if fast else "full"),
            "results": results}
+    doc["fused_optim"] = bench_fused_optim(smoke)
+    doc["comm"] = bench_comm(smoke)
     if modes:
         doc["modes"] = bench_modes(modes, smoke, rounds)
     if population:
@@ -352,6 +475,23 @@ def main(argv=None):
                 f"{per_step_cohort:.4f}s/step vs legacy "
                 f"{per_step_legacy:.4f}s/step")
         print("# smoke OK: cohort path within 1.5× of legacy per step")
+        fo = doc["fused_optim"]
+        sp = fo["fused_fp32"]["speedup_vs_unfused"]
+        assert sp >= 1.1, (
+            f"fused optimizer path regressed: {sp:.2f}× unfused steps/s "
+            f"on the memory-bound cohort microbench (gate: ≥ 1.1×)")
+        ratio = (fo["unfused_fp32"]["opt_state_bytes_per_client"]
+                 / fo["fused_int8"]["opt_state_bytes_per_client"])
+        assert ratio >= 3.5, (
+            f"int8 optimizer-state cut regressed: {ratio:.2f}× (≈4× "
+            f"expected; scales cost ~3% of the fp32 payload)")
+        print(f"# smoke OK: fused optimizer {sp:.2f}× unfused steps/s "
+              f"(≥ 1.1×), int8 state {ratio:.2f}× smaller")
+        k1152 = doc["comm"]["fedkseed_paper_k1152_total"]
+        assert k1152 == 18 * 1024 == 18432, (
+            f"FedKSeed paper-scale total communication drifted: {k1152} B "
+            f"(expected exactly 18 KiB at K=1152)")
+        print("# smoke OK: fedkseed K=1152 total comm = 18 KiB exactly")
         if modes and "sync" in doc.get("modes", {}) \
                 and "async" in doc.get("modes", {}):
             s = doc["modes"]["sync"]["steps_per_s"]

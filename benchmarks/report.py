@@ -118,6 +118,39 @@ def round_throughput_table(path=ROUND_JSON):
     return "\n".join(lines)
 
 
+def fused_optim_table(path=ROUND_JSON):
+    """§Fused-optimizer table from the ``fused_optim`` section of
+    BENCH_round_throughput.json (ISSUE 10): the three cohort-microbench
+    cells with their analytic bytes-moved and resident optimizer state;
+    None when absent (pre-ISSUE-10 artifacts)."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    doc = json.loads(path.read_text())
+    fo = doc.get("fused_optim")
+    if not fo:
+        return None
+    lines = ["| cell | ms/step | steps/s | vs unfused | bytes/step | "
+             "opt state B/client |",
+             "|---|---|---|---|---|---|"]
+    for tag, r in fo.items():
+        sp = (f"{r['speedup_vs_unfused']:.2f}×"
+              if "speedup_vs_unfused" in r else "—")
+        lines.append(
+            f"| {tag} | {r['s_per_step'] * 1e3:.1f} "
+            f"| {r['steps_per_s']:.2f} | {sp} "
+            f"| {r['bytes_per_step']:,} "
+            f"| {r['opt_state_bytes_per_client']:,} |")
+    comm = doc.get("comm")
+    if comm:
+        lines += ["", "Uplink bytes per client per round "
+                  "(fedkseed_paper_k1152_total is up+down, pinned to "
+                  "18 KiB):", "",
+                  "| payload | bytes |", "|---|---|"]
+        lines += [f"| {tag} | {b:,} |" for tag, b in comm.items()]
+    return "\n".join(lines)
+
+
 def scheduler_modes_table(path=ROUND_JSON):
     """§Scheduler-modes tables from the ``modes`` section of
     BENCH_round_throughput.json (written by ``benchmarks.bench_round
@@ -275,6 +308,10 @@ def main():
     if rt is not None:
         print("\n## §Round throughput (single host)\n")
         print(rt)
+    ft = fused_optim_table()
+    if ft is not None:
+        print("\n## §Fused optimizer & communication ladder\n")
+        print(ft)
     mt = scheduler_modes_table()
     if mt is not None:
         print("\n## §Scheduler modes (event-driven runtime, virtual clock)\n")

@@ -87,11 +87,52 @@ def load_records(mesh=None, step="chain", seq_shard=None, optimized=False):
     return recs
 
 
+BENCH_ROUND = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_round_throughput.json"
+
+# AdamW update chain ops per element (matches bench_round's constant)
+ADAMW_FLOPS_PER_ELEM = 15
+
+
+def optim_rows(path=BENCH_ROUND):
+    """Fallback roofline source (ISSUE 10): when no ``experiments/dryrun/``
+    artifacts exist, derive the terms from ``bench_round``'s fused-optimizer
+    bytes-moved cells instead — the optimizer step has no collectives, so
+    the verdict is the compute-vs-memory ratio at hardware peaks.  Every
+    cell should come out memory-dominant (that is the premise of fusing the
+    update chain into one pass)."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return [], {}
+    doc = json.loads(path.read_text())
+    rows, table = [], {}
+    for tag, rec in doc.get("fused_optim", {}).items():
+        t_compute = ADAMW_FLOPS_PER_ELEM * rec["elems"] / PEAK_FLOPS
+        t_memory = rec["bytes_per_step"] / HBM_BW
+        a = {"cell": tag, "elems": rec["elems"],
+             "bytes_per_step": rec["bytes_per_step"],
+             "t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": 0.0,
+             "dominant": "memory" if t_memory >= t_compute else "compute",
+             "measured_s_per_step": rec["s_per_step"],
+             "measured_bytes_per_s": rec["bytes_per_s"]}
+        key = f"optim/{tag}"
+        table[key] = a
+        rows.append(
+            f"roofline/{key},0,"
+            f"t_comp={t_compute:.3e};t_mem={t_memory:.3e};"
+            f"dom={a['dominant']};bytes_per_step={rec['bytes_per_step']};"
+            f"measured_GBps={rec['bytes_per_s']/1e9:.2f}")
+    return rows, table
+
+
 def run(rounds=0, fast=False):
     rows, table = [], {}
     recs = [r for r in load_records(mesh="16x16", step="chain",
                                     seq_shard=False)
             if not r.get("cost_unroll")]
+    if not recs:
+        return optim_rows()
     cost = {(r["arch"], r["shape"]): r
             for r in load_records(mesh="16x16", step="chain", seq_shard=False)
             if r.get("cost_unroll")}

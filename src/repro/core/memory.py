@@ -66,9 +66,42 @@ def activation_bytes_per_layer(cfg: ModelConfig, batch: int, seq: int) -> int:
     return 4 * batch * seq * cfg.d_model * _b(cfg)
 
 
+def optimizer_state_bytes(n_params: int, opt_bits: int = 32,
+                          optimizer: str = "adamw", qblock: int = 128,
+                          include_scales: bool = True) -> int:
+    """Resident optimizer *moment* bytes for ``n_params`` trainable fp32
+    parameters — the quantity ``opt_bits=8`` cuts 4×.
+
+    fp32 AdamW holds two fp32 moment trees (8 B/param); the int8 path
+    (``optim.quant``) holds two int8 trees — exactly 4× smaller — plus one
+    fp32 scale per ``qblock``-element block (8 B per 128 params, ~3%;
+    ``include_scales=False`` reports the payload alone).  SGD+momentum
+    carries one moment tree, plain SGD none."""
+    moments = {"adamw": 2, "sgd": 1}.get(optimizer, 2)
+    if opt_bits == 32:
+        return moments * 4 * n_params
+    if opt_bits == 8:
+        blocks = (n_params + qblock - 1) // qblock
+        return moments * (n_params
+                          + (4 * blocks if include_scales else 0))
+    raise ValueError(f"opt_bits must be 32 or 8, got {opt_bits!r}")
+
+
+def _opt_mult(opt_bits: int) -> float:
+    """Trainable-state multiplier over the fp32 params themselves: grads
+    (1×) + AdamW moments + fp32 master copy (1×).  Moments are 2× at fp32;
+    at int8 they shrink to ``optimizer_state_bytes / (4·n)`` ≈ 0.53× — the
+    resident-cohort ceiling the fused int8 kernel buys back."""
+    if opt_bits == 32:
+        return 4.0                   # the historical opt_mult
+    return 2.0 + optimizer_state_bytes(128 * 1024, opt_bits) / (4.0
+                                                                * 128 * 1024)
+
+
 def peak_memory(cfg: ModelConfig, method: str, batch: int, seq: int,
                 window: int = 3, l_start: int = 0, lora_rank: int = 8,
-                layer_offload: bool = True, keep_layers: int = 0) -> dict:
+                layer_offload: bool = True, keep_layers: int = 0,
+                opt_bits: int = 32) -> dict:
     """Returns {params, activations, adapter_state, total} bytes for a local
     client step under each method's execution model."""
     b = _b(cfg)
@@ -78,7 +111,9 @@ def peak_memory(cfg: ModelConfig, method: str, batch: int, seq: int,
     p_all = total_param_count(cfg) * b
     a_layer = activation_bytes_per_layer(cfg, batch, seq)
     ad_layer = 2 * cfg.d_model * cfg.adapter.rank * b
-    opt_mult = 4  # grads + AdamW m/v + fp32 master ≈ 4× trainable params
+    # grads + AdamW m/v + fp32 master ≈ 4× trainable params at fp32 moments;
+    # opt_bits=8 shrinks the m/v share 4× (see optimizer_state_bytes)
+    opt_mult = _opt_mult(opt_bits)
 
     if method in ("full_adapters", "fedadapter", "c2a", "flora"):
         rank = lora_rank if method == "flora" else cfg.adapter.rank
@@ -205,6 +240,15 @@ def comm_bytes_per_round(cfg: ModelConfig, method: str, window: int = 3,
     if method in ("layer_pruning", "layer_dropout"):
         return ad_layer * (keep_layers or max(1, L // 2))
     return ad_layer * L   # full adapters / fedadapter / c2a / fwdllm
+
+
+def fedkseed_total_comm(kseeds: int) -> int:
+    """FedKSeed round-trip bytes per client per round: K fp64 coefficients
+    up, the K-scalar aggregated coefficient history delta down — the model
+    itself never crosses the link (``FedKSeed.replay`` reconstructs it from
+    seeds + history).  The paper's "18 KB total communication" is this at
+    K=1152: 16·1152 = 18432 B = 18 KiB exactly."""
+    return 2 * max(1, kseeds) * 8
 
 
 # ----------------------------------------------------------- serving memory

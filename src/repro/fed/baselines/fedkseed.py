@@ -10,6 +10,7 @@ never formed per client."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.adapters import ActiveAdapters
 from ...optim.zeroth import kseed_apply
@@ -28,6 +29,16 @@ class FedKSeed(Strategy):
     def __init__(self, cfg, chain, key, k_by_tier=None):
         super().__init__(cfg, chain, key)
         self.seeds = tuple(range(1000, 1000 + self.K))
+        # accumulated-coefficient seed history (paper §3 of arXiv:2312.06353,
+        # the "18 KB total communication" mechanism): ``_hist[k]`` sums every
+        # committed round-mean coefficient for seed k.  Because a seed's
+        # perturbation depends only on the *tree structure* — never the
+        # values — ``kseed_apply`` is linear in the coefficients, so
+        # θ_T = kseed_apply(θ_0, seeds, Σ_t c_t): a joining client downloads
+        # the K-scalar history instead of the full model and replays it
+        # (:meth:`replay`).  fp64 accumulator — rounds of fp32 coefficient
+        # sums must not drift the replayed model.
+        self._hist = np.zeros(self.K, np.float64)
         # memory-stratified seed budgets (ISSUE 5): a client's tier selects
         # a *prefix* of the shared seed list, so small devices pay fewer
         # forward passes; each K is its own plan and the cohort/event
@@ -73,12 +84,30 @@ class FedKSeed(Strategy):
 
     def commit_trainable(self, plan, new):
         seeds = plan.grad_options["seeds"]    # the plan's (possibly tiered) K
-        full = kseed_apply(self._full_tree(), seeds,
-                           [float(c) for c in new["kseed"]], self.chain.lr)
+        coeffs = [float(c) for c in new["kseed"]]
+        # tiered plans select a *prefix* of the shared seed list, so the
+        # history accumulates positionally
+        self._hist[:len(coeffs)] += np.asarray(coeffs, np.float64)
+        full = kseed_apply(self._full_tree(), seeds, coeffs, self.chain.lr)
         self._params = full["_base"]
         self.adapters = full["adapters"]
         if self.head is not None:
             self.head = full["head"]
+
+    def replay(self, tree0):
+        """Materialize the *current* model from a round-0 full tree (the
+        ``_full_tree`` structure) and the accumulated coefficient history —
+        what a client joining at round T actually downloads: K scalars, not
+        the model."""
+        return kseed_apply(tree0, self.seeds,
+                           [float(c) for c in self._hist], self.chain.lr)
+
+    def extra_state(self):
+        return {"kseed_hist": np.asarray(self._hist)}
+
+    def load_extra_state(self, state):
+        if "kseed_hist" in state:
+            self._hist = np.asarray(state["kseed_hist"], np.float64).copy()
 
     def aggregate(self, round_idx, plans, deltas, weights, masks):
         """Sequential-path counterpart: weighted mean of the per-client
@@ -89,3 +118,14 @@ class FedKSeed(Strategy):
 
     def base_comm_bytes(self):
         return self.K * 8
+
+    def downlink_bytes(self):
+        """Per-round server→client payload: the round's K aggregated fp64
+        coefficients (the history *delta*) — the model itself never moves."""
+        return self.K * 8
+
+    def total_comm_bytes(self):
+        """Round-trip bytes per client per round, uplink + downlink — the
+        paper's 18 KB figure is this at K=1152 (16·1152 = 18 KiB exactly);
+        see ``core.memory.fedkseed_total_comm``."""
+        return self.comm_bytes_per_round() + self.downlink_bytes()

@@ -65,6 +65,7 @@ def plan_state(plan: TrainablePlan) -> dict:
         "grad": plan.grad,
         "grad_cfg": plan.grad_cfg,
         "transform": plan.transform,
+        "opt_bits": plan.opt_bits,
     }
 
 
@@ -79,7 +80,8 @@ def plan_from_state(d: dict) -> TrainablePlan:
         train_embedding=d["train_embedding"],
         layer_masked=d["layer_masked"], rank_masked=d["rank_masked"],
         loss=d["loss"], lam=d["lam"], remat=d["remat"], grad=d["grad"],
-        grad_cfg=d["grad_cfg"], transform=d["transform"])
+        grad_cfg=d["grad_cfg"], transform=d["transform"],
+        opt_bits=d.get("opt_bits"))  # absent in pre-ISSUE-10 checkpoints
 
 
 # ----------------------------------------------------------- pending rows

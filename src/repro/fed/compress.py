@@ -1,0 +1,174 @@
+"""Cohort-update compression with error feedback (ISSUE 10 tentpole §3).
+
+Uplink bytes, not FLOPs, dominate a federated round for edge clients — the
+communication-efficient PEFT line (arXiv:2404.06448) and the federated
+fine-tuning survey (arXiv:2503.12016) both put update compression next to
+optimizer-state memory as the binding client cost.  This module is the
+strategy seam for it: two classic compressors over the *stacked* cohort-axis
+updates (``(C, ...)`` leaves, straight out of ``PlanEngine.cohort_updates``),
+composed with error feedback (Seide et al. 2014; Karimireddy et al. 2019) so
+the bias a lossy compressor injects is carried in per-client residual state
+and re-fed the next time the client is sampled — compressed SGD then
+converges wherever its dense counterpart does.
+
+* ``topk``   — per-client, per-leaf magnitude sparsification: keep the
+  ``ratio`` fraction of largest-|x| entries, zero the rest.  Wire format is
+  (index, value) pairs → 8 bytes per kept entry.
+* ``qsgd``   — per-client, per-leaf absmax int8 *stochastic-rounding*
+  quantization (QSGD, Alistarh et al. 2017): unbiased (the expectation over
+  the rounding draw is the input), 1 byte per entry + one fp32 scale per
+  leaf.
+
+Both are applied *before* the fused FedAvg tensordot and simulated in-graph:
+the aggregation consumes the dequantized/sparsified values, while
+``comm_bytes_per_round`` reports the wire-format bytes
+(:meth:`CompressionConfig.compressed_bytes`).
+
+Attachment follows the ``enable_dp`` pattern (post-construction, refused
+once cohort programs have compiled).  Composition rules:
+
+* secure aggregation — **refused**: the server only ever sees a masked sum,
+  so there is no per-client plaintext update to compress (compress-then-mask
+  changes the field encoding; out of scope).
+* adaptive-clip DP — **refused**: both paths own the unaggregated-wave +
+  host-side-extras slot in ``Strategy.round``; fixed-clip DP composes fine
+  (noise is added by the aggregation wrapper *after* compression, exactly
+  the compress-then-privatize order the DP analysis assumes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..utils.tree import tree_map
+
+QSGD_LEVELS = 127          # symmetric int8 grid
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Declarative compressor choice, hashable (keys jit caches).
+
+    kind            "topk" | "qsgd"
+    ratio           topk: fraction of entries kept per leaf (≥ 1 entry)
+    bits            qsgd: quantization bits (8 is the only wired width —
+                    the int8 grid matches the optimizer-state quantizer)
+    error_feedback  carry the compression residual per client and add it
+                    back before the next compression (EF-SGD)
+    seed            root key for qsgd's stochastic rounding draws
+    """
+    kind: str = "topk"
+    ratio: float = 0.05
+    bits: int = 8
+    error_feedback: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("topk", "qsgd"):
+            raise ValueError(f"unknown compressor {self.kind!r}")
+        if self.kind == "topk" and not 0.0 < self.ratio <= 1.0:
+            raise ValueError(f"topk ratio must be in (0, 1], got {self.ratio}")
+        if self.kind == "qsgd" and self.bits != 8:
+            raise ValueError("qsgd: only 8-bit quantization is wired")
+
+    # ------------------------------------------------------ byte accounting
+    def compressed_bytes(self, fp32_bytes: int) -> int:
+        """Wire bytes for a payload that is ``fp32_bytes`` dense fp32:
+        topk ships (int32 index, fp32 value) pairs for the kept fraction;
+        qsgd ships one byte per entry plus a per-leaf scale (amortized into
+        the entry count: one fp32 per 2¹⁵ entries rounds to zero here)."""
+        n = fp32_bytes // 4
+        if self.kind == "topk":
+            return max(1, int(n * self.ratio)) * 8
+        return n * self.bits // 8 + 4
+
+
+def _topk_leaf(x, ratio):
+    """Keep the top-``ratio`` fraction of |x| per client row (axis 0 is the
+    cohort axis), zero the rest.  Threshold via ``lax.top_k`` on the
+    flattened magnitudes — ties at the threshold all survive, the wire
+    format still budgets exactly k entries."""
+    C = x.shape[0]
+    flat = jnp.abs(x.reshape(C, -1))
+    k = max(1, int(flat.shape[1] * ratio))
+    kth = jax.lax.top_k(flat, k)[0][:, -1]          # (C,)
+    keep = flat >= kth[:, None]
+    return (x.reshape(C, -1) * keep).reshape(x.shape)
+
+
+def _qsgd_leaf(x, key):
+    """Unbiased absmax int8 stochastic rounding per client row: the value
+    grid is ``scale · {-127..127}`` and ``floor(y + u)`` with ``u~U[0,1)``
+    rounds up with probability equal to the fractional part."""
+    C = x.shape[0]
+    flat = x.reshape(C, -1)
+    scale = jnp.max(jnp.abs(flat), axis=1) / QSGD_LEVELS        # (C,)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    y = flat * inv[:, None]
+    u = jax.random.uniform(key, flat.shape)
+    q = jnp.clip(jnp.floor(y + u), -QSGD_LEVELS, QSGD_LEVELS)
+    return (q * scale[:, None]).reshape(x.shape)
+
+
+def make_compress_fn(config: CompressionConfig):
+    """``fn(updates, residuals, rng) -> (compressed, new_residuals)`` over
+    stacked ``(C, ...)`` update trees — traceable, jitted once per plan by
+    the strategy.  With error feedback the compressor sees
+    ``carried = update + residual`` and the new residual is
+    ``carried - compressed``; without, residuals pass through as zeros."""
+
+    def fn(updates, residuals, rng):
+        if config.error_feedback:
+            carried = tree_map(
+                lambda u, r: u.astype(jnp.float32) + r, updates, residuals)
+        else:
+            carried = tree_map(lambda u: u.astype(jnp.float32), updates)
+        if config.kind == "topk":
+            compressed = tree_map(
+                lambda x: _topk_leaf(x, config.ratio), carried)
+        else:
+            leaves, treedef = jax.tree_util.tree_flatten(carried)
+            keys = jax.random.split(rng, len(leaves))
+            compressed = jax.tree_util.tree_unflatten(
+                treedef, [_qsgd_leaf(x, k) for x, k in zip(leaves, keys)])
+        if config.error_feedback:
+            new_res = tree_map(lambda c, q: c - q, carried, compressed)
+        else:
+            new_res = residuals
+        return compressed, new_res
+
+    return fn
+
+
+# ================================================================ attachment
+def enable_compression(strategy, config: Optional[CompressionConfig] = None):
+    """Attach update compression to a constructed strategy (the
+    ``enable_dp`` pattern — bespoke ``__init__`` signatures make a
+    constructor kwarg impractical).  Must run before the first round: the
+    compression branch of ``Strategy.round`` dispatches through
+    ``cohort_updates`` instead of the fused ``cohort_step``, so a cached
+    uncompressed step would silently keep winning."""
+    config = config if config is not None else CompressionConfig()
+    if strategy.engine._cohort or strategy.engine._cohort_updates:
+        raise RuntimeError(
+            "enable_compression after cohort steps compiled: cached "
+            "programs would silently bypass the compressor — enable "
+            "compression before training")
+    if strategy.secure is not None:
+        raise ValueError(
+            "update compression and secure aggregation are mutually "
+            "exclusive: the server never sees per-client plaintext updates "
+            "under masking, so there is nothing to compress server-side")
+    if strategy.dp is not None and strategy.dp.adaptive_clip:
+        raise ValueError(
+            "update compression with adaptive-clip DP is not wired (both "
+            "own the unaggregated-wave slot of Strategy.round); use a "
+            "fixed clip")
+    strategy.compression = config
+    strategy._compress_residuals = {}          # cid → residual tree (host)
+    strategy._compress_key = jax.random.PRNGKey(config.seed)
+    strategy._compress_fn = {}                 # plan → jitted compress fn
+    return strategy

@@ -181,7 +181,7 @@ def run_experiment(strategy: Optional[str] = None, *, spec=None,
                    strategy_opts: Optional[dict] = None,
                    mode: str = "sync",
                    scheduler_opts: Optional[dict] = None,
-                   dp=None, secure_agg=None,
+                   dp=None, secure_agg=None, compress=None,
                    aggregator: Optional[str] = None,
                    aggregator_opts: Optional[dict] = None,
                    faults=None, trace=None,
@@ -275,6 +275,7 @@ def run_experiment(strategy: Optional[str] = None, *, spec=None,
         faults = spec_mod.build_faults(spec)
         trace = spec_mod.build_trace(spec)
         topology = spec_mod.build_topology(spec)
+        compress = spec_mod.build_compression(spec)
     else:
         if strategy is None:
             raise TypeError("run_experiment needs a strategy name or spec=")
@@ -295,7 +296,8 @@ def run_experiment(strategy: Optional[str] = None, *, spec=None,
                     pretrain_steps=pretrain_steps,
                     strategy_opts=strategy_opts, mode=mode,
                     scheduler_opts=scheduler_opts, dp=dp,
-                    secure_agg=secure_agg, aggregator=aggregator,
+                    secure_agg=secure_agg, compress=compress,
+                    aggregator=aggregator,
                     aggregator_opts=aggregator_opts, faults=faults,
                     trace=trace, chain=chain, fed=fed, lazy=lazy,
                     shard_size=shard_size))
@@ -348,6 +350,10 @@ def run_experiment(strategy: Optional[str] = None, *, spec=None,
         if not sa.cohort:
             sa = dataclasses.replace(sa, cohort=sim.fed.clients_per_round)
         enable_secure_agg(strat, sa)
+    if compress is not None:
+        from .compress import CompressionConfig, enable_compression
+        enable_compression(strat, CompressionConfig(**compress)
+                           if isinstance(compress, dict) else compress)
     if faults is not None:
         from .faults import ClientBehavior
         fb = (ClientBehavior(**faults) if isinstance(faults, dict)

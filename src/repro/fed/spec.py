@@ -76,6 +76,12 @@ class RunSpec:
     local_steps: int = 1
     lr: float = 1e-3
     optimizer: str = "adamw"
+    opt_bits: int = 32                  # optimizer-state precision (32 | 8)
+    fused_optim: Optional[bool] = None  # fused update: None backend-aware,
+                                        # True force kernel, False legacy
+    # ---- cohort update compression (fed.compress) ----
+    compress: Optional[str] = None      # None | "topk" | "qsgd"
+    compress_opts: Pairs = ()           # CompressionConfig kwargs
     # ---- population (FedConfig) ----
     n_clients: int = 16
     clients_per_round: int = 4
@@ -187,7 +193,7 @@ class ExperimentSpec:
             if unknown:
                 raise ValueError(
                     f"unknown {name} spec field(s): {sorted(unknown)}")
-            for k in ("strategy_opts", "aggregator_opts"):
+            for k in ("strategy_opts", "aggregator_opts", "compress_opts"):
                 if k in raw and raw[k] is not None:
                     raw[k] = freeze_opts(
                         raw[k] if isinstance(raw[k], dict)
@@ -237,7 +243,8 @@ def build_configs(spec: ExperimentSpec):
     chain = ChainConfig(window=r.window, lam=r.lam,
                         foat_threshold=r.foat_threshold,
                         local_steps=r.local_steps, lr=r.lr,
-                        optimizer=r.optimizer)
+                        optimizer=r.optimizer, opt_bits=r.opt_bits,
+                        fused_optim=r.fused_optim)
     fed = FedConfig(n_clients=r.n_clients,
                     clients_per_round=r.clients_per_round,
                     rounds=r.rounds, iid=r.iid,
@@ -254,6 +261,15 @@ def build_dp(spec: ExperimentSpec) -> Optional[dict]:
             "seed": p.seed if p.seed is not None else spec.run.seed,
             "adaptive_clip": p.adaptive_clip,
             "target_quantile": p.target_quantile, "clip_lr": p.clip_lr}
+
+
+def build_compression(spec: ExperimentSpec) -> Optional[dict]:
+    """kwargs for ``fed.compress.CompressionConfig`` — or None when update
+    compression is off."""
+    r = spec.run
+    if r.compress is None:
+        return None
+    return {"kind": r.compress, **thaw_opts(r.compress_opts)}
 
 
 def build_faults(spec: ExperimentSpec) -> Optional[dict]:
@@ -322,7 +338,8 @@ def spec_from_kwargs(strategy, *, arch="bert_tiny", task="classification",
                      dataset="agnews", batch_size=8, rounds=20, eval_every=5,
                      seed=0, memory_constrained=True, pretrain_steps=0,
                      strategy_opts=None, mode="sync", scheduler_opts=None,
-                     dp=None, secure_agg=None, aggregator=None,
+                     dp=None, secure_agg=None, compress=None,
+                     aggregator=None,
                      aggregator_opts=None, faults=None, trace=None,
                      chain=None, fed=None,
                      lazy=False, shard_size=None) -> Optional[ExperimentSpec]:
@@ -344,11 +361,18 @@ def spec_from_kwargs(strategy, *, arch="bert_tiny", task="classification",
             run_kw.update(window=chain.window, lam=chain.lam,
                           foat_threshold=chain.foat_threshold,
                           local_steps=chain.local_steps, lr=chain.lr,
-                          optimizer=chain.optimizer)
+                          optimizer=chain.optimizer,
+                          opt_bits=getattr(chain, "opt_bits", 32),
+                          fused_optim=getattr(chain, "fused_optim", None))
         if fed is not None:
             run_kw.update(n_clients=fed.n_clients,
                           clients_per_round=fed.clients_per_round,
                           dirichlet_alpha=fed.dirichlet_alpha, iid=fed.iid)
+        if compress is not None:
+            d = dataclasses.asdict(compress) \
+                if dataclasses.is_dataclass(compress) else dict(compress)
+            run_kw["compress"] = d.pop("kind")
+            run_kw["compress_opts"] = freeze_opts(d)
         so = dict(scheduler_opts or {})
         topology = so.pop("topology", None)
         topo_kw = {}

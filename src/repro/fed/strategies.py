@@ -119,6 +119,11 @@ class TrainablePlan:
     grad: str = "ad"                # key into GRAD_PROGRAMS
     grad_cfg: tuple = ()            # frozen (knob, value) pairs for the program
     transform: Optional[str] = None  # key into TRANSFORM_HOOKS (e.g. C2A FiLM)
+    opt_bits: Optional[int] = None  # optimizer-state precision override:
+                                    # None inherits ``chain.opt_bits``; 8
+                                    # stores int8 blockwise moments (keys
+                                    # the jit cache — int8 state has a
+                                    # different structure)
 
     @property
     def grad_options(self) -> dict:
@@ -516,7 +521,23 @@ class PlanEngine:
         self._cohort = {}
         self._cohort_updates = {}
         self._client_updates = {}
+        self._opts = {}             # opt_bits override → Optimizer
         self._eval = None
+
+    def opt_for(self, plan: TrainablePlan):
+        """The optimizer a plan's steps run — ``self.opt`` (built from the
+        chain's ``optimizer``/``opt_bits``/``fused_optim`` knobs) unless the
+        plan overrides ``opt_bits``.  Cached per bits: the plan keys the jit
+        caches, so a plan always meets the same optimizer (and the same
+        state structure) across rounds."""
+        if plan.opt_bits is None:
+            return self.opt
+        if plan.opt_bits not in self._opts:
+            self._opts[plan.opt_bits] = make_optimizer(
+                self.chain.optimizer, self.chain.lr,
+                opt_bits=plan.opt_bits,
+                fused=getattr(self.chain, "fused_optim", None))
+        return self._opts[plan.opt_bits]
 
     # ------------------------------------------------------------ jit cache
     def local_step(self, plan: TrainablePlan):
@@ -532,7 +553,7 @@ class PlanEngine:
             grad_fn = GRAD_PROGRAMS[plan.grad](
                 self.cfg, self.chain, plan,
                 make_loss_fn(self.cfg, self.chain, plan))
-            opt = self.opt
+            opt = self.opt_for(plan)
 
             @jax.jit
             def step(trainable, opt_state, params, frozen_adapters, batch,
@@ -556,7 +577,8 @@ class PlanEngine:
         sequential-path unit of dispatch for whole-client grad programs."""
         if plan not in self._client_updates:
             self._client_updates[plan] = jax.jit(
-                make_client_update(self.cfg, self.chain, plan, self.opt))
+                make_client_update(self.cfg, self.chain, plan,
+                                   self.opt_for(plan)))
         return self._client_updates[plan]
 
     def cohort_step(self, plan: TrainablePlan, aggregate=None):
@@ -601,7 +623,7 @@ class PlanEngine:
         """
         if plan not in self._cohort:
             client_update = make_client_update(self.cfg, self.chain, plan,
-                                               self.opt)
+                                               self.opt_for(plan))
             agg = as_rng_aggregate(aggregate)
             whole = _is_whole_client(plan)
             full_stack = plan.adapters is not None and plan.adapters.is_full
@@ -663,7 +685,7 @@ class PlanEngine:
         applied onto a later one — that is what staleness *is*)."""
         if plan not in self._cohort_updates:
             client_update = make_client_update(self.cfg, self.chain, plan,
-                                               self.opt)
+                                               self.opt_for(plan))
 
             @jax.jit
             def step(trainable0, params, frozen_adapters, batches, masks):
@@ -737,6 +759,9 @@ class Strategy:
     # --- threading constructor kwargs through every strategy)
     dp = None                 # privacy.DPConfig — clip + noise in-graph
     secure = None             # privacy.SecureAggConfig — pairwise masking
+    compression = None        # compress.CompressionConfig — lossy update
+                              # compression + error feedback (attached via
+                              # compress.enable_compression)
     aggregator = "fedavg"     # AGGREGATORS entry when cohort_aggregate is None
     aggregator_opts = None    # kwargs for the aggregator factory
     secure_compatible = True  # False: aggregation is not a linear weighted
@@ -751,7 +776,9 @@ class Strategy:
         self._params = init_lm(k1, cfg)
         self.adapters = init_adapters(k2, cfg)
         self.head = init_cls_head(self._params) if chain.train_head else None
-        self.opt = make_optimizer(chain.optimizer, chain.lr)
+        self.opt = make_optimizer(chain.optimizer, chain.lr,
+                                  opt_bits=getattr(chain, "opt_bits", 32),
+                                  fused=getattr(chain, "fused_optim", None))
         self.engine = PlanEngine(cfg, chain, self.opt)
         self._last_round_loss = None    # device scalar from the latest step
         self._adaptive_agg = {}         # jitted resolve_aggregate per plan
@@ -833,6 +860,11 @@ class Strategy:
                                              self.dp.clip))}
         if self.secure is not None:
             s["secure_sessions"] = int(self._secure_sessions)
+        if self.compression is not None:
+            s["compress"] = {
+                "residuals": {str(cid): r for cid, r
+                              in self._compress_residuals.items()},
+                "key": self._compress_key}
         return s
 
     def load_state_dict(self, s: dict) -> None:
@@ -864,6 +896,17 @@ class Strategy:
                              "enabled on this strategy")
         if self.secure is not None:
             self._secure_sessions = int(s.get("secure_sessions", 0))
+        if self.compression is not None:
+            if "compress" not in s:
+                raise ValueError("strategy has update compression enabled "
+                                 "but the checkpoint was taken without it")
+            cs = s["compress"]
+            self._compress_residuals = {int(cid): r for cid, r
+                                        in cs["residuals"].items()}
+            self._compress_key = jnp.asarray(cs["key"])
+        elif "compress" in s:
+            raise ValueError("checkpoint carries compression residuals but "
+                             "compression is not enabled on this strategy")
         self.load_extra_state(s.get("extra", {}))
 
     # ----------------------------------------------------- scheduler hooks
@@ -994,6 +1037,22 @@ class Strategy:
                     rng)
                 observe_update_norms(self, cohort_norms(updates))
                 self._last_round_loss = jnp.mean(losses)
+            elif self.compression is not None:
+                # lossy compression needs per-client plaintext updates (and
+                # error-feedback residuals keyed by cid) — unaggregated wave,
+                # in-graph compress, then the cached jitted aggregate; fixed-
+                # clip DP noise rides the aggregate *after* compression
+                if _is_whole_client(plan):
+                    raise ValueError(
+                        f"update compression expects delta-style uploads; "
+                        f"grad program {plan.grad!r} uploads a "
+                        "program-defined payload (already compact)")
+                updates, losses = self.engine.cohort_updates(plan)(
+                    tr0, self._params, self.adapters, batches, masks)
+                new = self._compressed_aggregate(plan, cohort, tr0, updates,
+                                                 weights, masks, rng,
+                                                 round_idx)
+                self._last_round_loss = jnp.mean(losses)
             else:
                 step = self.engine.cohort_step(plan,
                                                self.resolve_aggregate(plan))
@@ -1007,6 +1066,46 @@ class Strategy:
             self.dp_accountant.step(
                 self.dp.noise_multiplier,
                 q=len(clients) / max(1, sim.n_clients))
+
+    def _compressed_aggregate(self, plan, cohort, tr0, updates, weights,
+                              masks, rng, round_idx):
+        """Compress the stacked ``(C, ...)`` updates (error feedback against
+        the per-cid residual store), then run the cached jitted aggregation
+        — the compression branch of :meth:`round`."""
+        from .compress import make_compress_fn
+        if plan not in self._compress_fn:
+            self._compress_fn[plan] = jax.jit(
+                make_compress_fn(self.compression))
+        if plan not in self._adaptive_agg:   # same cache slot as adaptive
+            self._adaptive_agg[plan] = jax.jit(   # clip (mutually exclusive)
+                self.resolve_aggregate(plan))
+        template = tree_map(lambda u: jnp.zeros(u.shape[1:], jnp.float32),
+                            updates)
+        tdef = jax.tree_util.tree_structure(template)
+
+        def residual_for(cid):
+            # a residual stored under an older plan (chainfed's window
+            # advances reshape the trainable) is dropped, not reshaped —
+            # error feedback restarts from zero on the new surface
+            r = self._compress_residuals.get(cid)
+            if r is None or jax.tree_util.tree_structure(r) != tdef:
+                return template
+            if any(a.shape != b.shape for a, b in zip(
+                    jax.tree_util.tree_leaves(r),
+                    jax.tree_util.tree_leaves(template))):
+                return template
+            return r
+
+        residuals = tree_map(lambda *rs: jnp.stack(rs),
+                             *[residual_for(c.cid) for c in cohort])
+        crng = jax.random.fold_in(self._compress_key, round_idx)
+        compressed, new_res = self._compress_fn[plan](updates, residuals,
+                                                      crng)
+        if self.compression.error_feedback:
+            for i, c in enumerate(cohort):
+                self._compress_residuals[c.cid] = tree_map(
+                    lambda r: r[i], new_res)
+        return self._adaptive_agg[plan](tr0, compressed, weights, masks, rng)
 
     def sequential_round(self, sim, clients, round_idx):
         """Legacy per-client dispatch loop: one jitted ``local_step`` call per
@@ -1029,7 +1128,7 @@ class Strategy:
                 updates.append(upd)
             else:
                 step = self.engine.local_step(plan)
-                tr, opt_state = tr0, self.opt.init(tr0)
+                tr, opt_state = tr0, self.engine.opt_for(plan).init(tr0)
                 for i, batch in enumerate(
                         sim.client_batches(c, self.chain.local_steps)):
                     tr, opt_state, _, _ = step(tr, opt_state, self._params,
@@ -1081,4 +1180,7 @@ class Strategy:
                                      dp=self.dp is not None)
 
     def comm_bytes_per_round(self) -> int:
-        return self.base_comm_bytes() + self.privacy_comm_bytes()
+        base = self.base_comm_bytes()
+        if self.compression is not None:
+            base = self.compression.compressed_bytes(base)
+        return base + self.privacy_comm_bytes()

@@ -15,6 +15,10 @@ from .flash_attention import flash_attention as _flash_attention
 from .fused_adapter import fused_adapter as _fused_adapter
 from .fused_adapter import fused_adapter_grad as _fused_adapter_grad
 from .fused_adapter import fused_adapter_tenants as _fused_adapter_tenants
+from .fused_optim import fused_adamw as _fused_adamw
+from .fused_optim import fused_adamw8 as _fused_adamw8
+from .fused_optim import fused_sgdm as _fused_sgdm
+from .fused_optim import fused_sgdm8 as _fused_sgdm8
 from .paged_attention import paged_attention as _paged_attention
 from .ssm_scan import ssm_scan as _ssm_scan
 
@@ -44,6 +48,31 @@ def fused_adapter_tenants(h, tenant_ids, w_down, w_up, activation="gelu",
     kw.setdefault("interpret", _interpret())
     return _fused_adapter_tenants(h, tenant_ids, w_down, w_up,
                                   activation=activation, **kw)
+
+
+def fused_adamw(p, g, mu, nu, scalars, **kw):
+    """Fused clip→moments→AdamW update, one HBM pass per leaf — the
+    ``optim.base`` kernel route when ``fused`` resolves to the Pallas path
+    (inference-only: runs post-grad, no VJP)."""
+    kw.setdefault("interpret", _interpret())
+    return _fused_adamw(p, g, mu, nu, scalars, **kw)
+
+
+def fused_adamw8(p, g, mu_q, mu_s, nu_q, nu_s, scalars, **kw):
+    """int8-state variant: blockwise dequant/requant fused into the same
+    tile pass (``opt_bits=8``), fp32 moments never hit HBM."""
+    kw.setdefault("interpret", _interpret())
+    return _fused_adamw8(p, g, mu_q, mu_s, nu_q, nu_s, scalars, **kw)
+
+
+def fused_sgdm(p, g, mu, scalars, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fused_sgdm(p, g, mu, scalars, **kw)
+
+
+def fused_sgdm8(p, g, mu_q, mu_s, scalars, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fused_sgdm8(p, g, mu_q, mu_s, scalars, **kw)
 
 
 def paged_attention(q, k_pool, v_pool, pages, lengths, **kw):

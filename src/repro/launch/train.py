@@ -46,6 +46,12 @@ def spec_from_args(args) -> ExperimentSpec:
             window=args.window, lam=args.lam,
             foat_threshold=args.threshold, local_steps=args.local_steps,
             lr=args.lr, optimizer=args.optimizer,
+            opt_bits=args.opt_bits, fused_optim=args.fused_optim,
+            compress=args.compress,
+            compress_opts=freeze_opts(
+                {} if args.compress is None else
+                {"ratio": args.compress_ratio} if args.compress == "topk"
+                else {}),
             n_clients=args.clients,
             clients_per_round=args.clients_per_round,
             dirichlet_alpha=args.alpha, iid=args.iid,
@@ -216,6 +222,19 @@ def main(argv=None):
     ap.add_argument("--threshold", type=float, default=0.8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--opt-bits", type=int, default=32, choices=[32, 8],
+                    help="optimizer-state precision: 8 = block-wise int8 "
+                         "moments, 4× less resident state per client")
+    ap.add_argument("--fused-optim", default=None,
+                    type=lambda s: {"true": True, "false": False}[s.lower()],
+                    choices=[True, False], metavar="{true,false}",
+                    help="force (true) or disable (false) the single-pass "
+                         "fused optimizer step; default is backend-aware")
+    ap.add_argument("--compress", default=None, choices=["topk", "qsgd"],
+                    help="lossy uplink compression with error feedback "
+                         "(fed.compress)")
+    ap.add_argument("--compress-ratio", type=float, default=0.05,
+                    help="top-k: fraction of update entries kept")
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)

@@ -171,6 +171,12 @@ class ChainConfig:
     advance_every: int = 1          # rounds per window advance (paper: 1)
     cycles: int = 1                 # holistic passes over the chain
     train_head: bool = True         # train the output layer (classification)
+    opt_bits: int = 32              # optimizer-state precision: 32 fp32
+                                    # moments, 8 blockwise-int8 (optim.quant)
+    fused_optim: Optional[bool] = None  # single-pass fused update: None →
+                                    # backend-aware (Pallas kernel on TPU,
+                                    # op-identical XLA elsewhere), True
+                                    # force kernel, False legacy multi-pass
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

@@ -4,6 +4,24 @@ API mirrors optax minimally:
     opt = make_optimizer("adamw", lr=1e-3)
     state = opt.init(params)
     params, state = opt.step(params, grads, state)
+
+ISSUE 10 adds two plan-level knobs, threaded from ``ChainConfig`` /
+``TrainablePlan`` by the engine:
+
+* ``fused`` — ``None`` (default) runs the single-pass update: clip-scale →
+  moment update → bias-corrected parameter update as ONE chain per leaf —
+  the Pallas fused-optimizer kernel on TPU (``kernels/fused_optim.py``), the
+  op-identical XLA fallback elsewhere (XLA fuses the chain into one loop; a
+  CPU interpret-mode kernel would only slow it down).  ``True`` forces the
+  kernel (interpret on CPU — the parity tests' route), ``False`` keeps the
+  legacy multi-``tree_map`` step (the ``bench_round`` unfused baseline).
+* ``opt_bits`` — 32 (fp32 moments, default) or 8: block-wise absmax int8
+  moments + per-128-block fp32 scales (``optim.quant``), dequant/requant
+  fused into the same pass, 4× less resident optimizer state per client
+  (``core.memory.optimizer_state_bytes``).  int8 always runs single-pass.
+  AdamW's ``nu`` is stored as ``√nu`` so the absmax dead zone can't zero
+  small second moments under the ``1/√ν̂`` preconditioner (see
+  ``kernels/fused_optim.py``).
 """
 from __future__ import annotations
 
@@ -14,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from ..utils.tree import global_norm, tree_map
+from .quant import zeros_quantized
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,63 +43,224 @@ class Optimizer:
 
 
 def clip_by_global_norm(grads, max_norm):
+    """Scale ``grads`` so their global norm is at most ``max_norm``.
+
+    The scale is ``jnp.where``-guarded: a zero-gradient (or empty) tree has
+    ``gn == 0`` and yields scale 1.0 *exactly* — the old
+    ``max_norm / (gn + 1e-9)`` form produced a spurious ~1e9 scale there,
+    clamped to 1 only by the ``minimum`` and drifting the no-op case by one
+    ulp whenever ``gn`` was merely tiny rather than zero."""
     gn = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    scale = _clip_scale(gn, max_norm)
     return tree_map(lambda g: g * scale, grads), gn
+
+
+def _clip_scale(gn, max_norm):
+    return jnp.where(gn > max_norm, max_norm / jnp.maximum(gn, 1e-30),
+                     jnp.float32(1.0))
 
 
 def _resolve_lr(lr, count):
     return lr(count) if callable(lr) else lr
 
 
-def sgd(lr, momentum=0.0, clip=None):
+def _check_bits(opt_bits):
+    if opt_bits not in (32, 8):
+        raise ValueError(f"opt_bits must be 32 or 8, got {opt_bits!r}")
+
+
+def _kernel_route(fused) -> bool:
+    """True when the single-pass step should call the Pallas kernel:
+    forced, or backend-aware on TPU (interpret mode on CPU is strictly
+    slower than the op-identical XLA fallback)."""
+    return fused is True or (fused is None
+                             and jax.default_backend() == "tpu")
+
+
+def sgd(lr, momentum=0.0, clip=None, opt_bits=32, fused=None):
+    _check_bits(opt_bits)
+    quantized = opt_bits == 8 and momentum
+    use_kernel = _kernel_route(fused)
+    single_pass = fused is not False or quantized
+
     def init(params):
         st = {"count": jnp.zeros((), jnp.int32)}
-        if momentum:
-            st["mu"] = tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        if quantized:
+            qs = _tuple_tree_map(lambda p: zeros_quantized(p.shape), params)
+            st["mu_q"] = _unzip(qs, params, 0)
+            st["mu_s"] = _unzip(qs, params, 1)
+        elif momentum:
+            st["mu"] = tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                params)
         return st
 
     def step(params, grads, state):
-        if clip is not None:
-            grads, _ = clip_by_global_norm(grads, clip)
         lr_t = _resolve_lr(lr, state["count"])
-        if momentum:
-            mu = tree_map(lambda m, g: momentum * m + g.astype(jnp.float32),
-                          state["mu"], grads)
-            new_p = tree_map(lambda p, m: (p - lr_t * m).astype(p.dtype), params, mu)
-            return new_p, {"count": state["count"] + 1, "mu": mu}
-        new_p = tree_map(lambda p, g: (p - lr_t * g.astype(jnp.float32)).astype(p.dtype),
-                         params, grads)
-        return new_p, {"count": state["count"] + 1}
+        new_state = {"count": state["count"] + 1}
+        if not single_pass:                      # legacy multi-pass baseline
+            if clip is not None:
+                grads, _ = clip_by_global_norm(grads, clip)
+            if momentum:
+                mu = tree_map(
+                    lambda m, g: momentum * m + g.astype(jnp.float32),
+                    state["mu"], grads)
+                new_p = tree_map(lambda p, m: (p - lr_t * m).astype(p.dtype),
+                                 params, mu)
+                return new_p, {**new_state, "mu": mu}
+            new_p = tree_map(
+                lambda p, g: (p - lr_t * g.astype(jnp.float32)
+                              ).astype(p.dtype), params, grads)
+            return new_p, new_state
+        scale = (_clip_scale(global_norm(grads), clip) if clip is not None
+                 else jnp.float32(1.0))
+        if not momentum:
+            new_p = tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr_t * (g.astype(jnp.float32) * scale)
+                              ).astype(p.dtype), params, grads)
+            return new_p, new_state
+        if quantized:
+            if use_kernel:
+                from ..kernels import ops
+                from ..kernels.fused_optim import pack_scalars
+                sc = pack_scalars(scale, lr_t, 1.0, 1.0)
+                out = tree_map(
+                    lambda p, g, mq, ms: ops.fused_sgdm8(
+                        p, g, mq, ms, sc, momentum=momentum),
+                    params, grads, state["mu_q"], state["mu_s"])
+            else:
+                from ..kernels.fused_optim import sgdm8_ref
+                out = tree_map(
+                    lambda p, g, mq, ms: sgdm8_ref(p, g, mq, ms, scale,
+                                                   lr_t, momentum),
+                    params, grads, state["mu_q"], state["mu_s"])
+            return (_unzip(out, params, 0),
+                    {**new_state, "mu_q": _unzip(out, params, 1),
+                     "mu_s": _unzip(out, params, 2)})
+        if use_kernel:
+            from ..kernels import ops
+            from ..kernels.fused_optim import pack_scalars
+            sc = pack_scalars(scale, lr_t, 1.0, 1.0)
+            out = tree_map(
+                lambda p, g, m: ops.fused_sgdm(p, g, m, sc,
+                                               momentum=momentum),
+                params, grads, state["mu"])
+        else:
+            from ..kernels.fused_optim import sgdm_ref
+            out = tree_map(
+                lambda p, g, m: sgdm_ref(p, g, m, scale, lr_t, momentum),
+                params, grads, state["mu"])
+        return (_unzip(out, params, 0),
+                {**new_state, "mu": _unzip(out, params, 1)})
 
     return Optimizer(init, step, "sgd")
 
 
-def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01, clip=1.0):
+def _tuple_tree_map(fn, *trees):
+    """tree_map whose per-leaf results are tuples to be split by
+    :func:`_unzip` (the tuples sit at leaf positions of the input tree)."""
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def _unzip(out, like, i):
+    """Pick component ``i`` out of a tree shaped like ``like`` whose leaves
+    are result tuples from the per-leaf fused step."""
+    del like
+    return jax.tree_util.tree_map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01, clip=1.0,
+          opt_bits=32, fused=None):
+    _check_bits(opt_bits)
+    quantized = opt_bits == 8
+    use_kernel = _kernel_route(fused)
+    single_pass = fused is not False or quantized
+
     def init(params):
+        st = {"count": jnp.zeros((), jnp.int32)}
+        if quantized:
+            qs = _tuple_tree_map(lambda p: zeros_quantized(p.shape), params)
+            for mom in ("mu", "nu"):
+                st[mom + "_q"] = _unzip(qs, params, 0)
+                st[mom + "_s"] = _unzip(qs, params, 1)
+            return st
         z = lambda p: jnp.zeros_like(p, jnp.float32)
-        return {"count": jnp.zeros((), jnp.int32),
-                "mu": tree_map(z, params), "nu": tree_map(z, params)}
+        return {**st, "mu": tree_map(z, params), "nu": tree_map(z, params)}
 
     def step(params, grads, state):
-        if clip is not None:
-            grads, _ = clip_by_global_norm(grads, clip)
         c = state["count"] + 1
         lr_t = _resolve_lr(lr, state["count"])
-        mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                      state["mu"], grads)
-        nu = tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-                      state["nu"], grads)
+        if not single_pass:                      # legacy multi-pass baseline
+            if clip is not None:
+                grads, _ = clip_by_global_norm(grads, clip)
+            mu = tree_map(
+                lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                state["mu"], grads)
+            nu = tree_map(
+                lambda v, g: b2 * v
+                + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                state["nu"], grads)
+            bc1 = 1 - b1 ** c.astype(jnp.float32)
+            bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+            def upd(p, m, v):
+                mhat = m / bc1
+                vhat = v / bc2
+                return (p - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                                    + weight_decay * p.astype(jnp.float32))
+                        ).astype(p.dtype)
+
+            return tree_map(upd, params, mu, nu), {"count": c, "mu": mu,
+                                                   "nu": nu}
+        scale = (_clip_scale(global_norm(grads), clip) if clip is not None
+                 else jnp.float32(1.0))
         bc1 = 1 - b1 ** c.astype(jnp.float32)
         bc2 = 1 - b2 ** c.astype(jnp.float32)
-
-        def upd(p, m, v):
-            mhat = m / bc1
-            vhat = v / bc2
-            return (p - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
-                                + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
-
-        return tree_map(upd, params, mu, nu), {"count": c, "mu": mu, "nu": nu}
+        if quantized:
+            if use_kernel:
+                from ..kernels import ops
+                from ..kernels.fused_optim import pack_scalars
+                sc = pack_scalars(scale, lr_t, bc1, bc2)
+                out = tree_map(
+                    lambda p, g, mq, ms, vq, vs: ops.fused_adamw8(
+                        p, g, mq, ms, vq, vs, sc, b1=b1, b2=b2, eps=eps,
+                        wd=weight_decay),
+                    params, grads, state["mu_q"], state["mu_s"],
+                    state["nu_q"], state["nu_s"])
+            else:
+                from ..kernels.fused_optim import adamw8_ref
+                out = tree_map(
+                    lambda p, g, mq, ms, vq, vs: adamw8_ref(
+                        p, g, mq, ms, vq, vs, scale, lr_t, bc1, bc2, b1, b2,
+                        eps, weight_decay),
+                    params, grads, state["mu_q"], state["mu_s"],
+                    state["nu_q"], state["nu_s"])
+            return (_unzip(out, params, 0),
+                    {"count": c,
+                     "mu_q": _unzip(out, params, 1),
+                     "mu_s": _unzip(out, params, 2),
+                     "nu_q": _unzip(out, params, 3),
+                     "nu_s": _unzip(out, params, 4)})
+        if use_kernel:
+            from ..kernels import ops
+            from ..kernels.fused_optim import pack_scalars
+            sc = pack_scalars(scale, lr_t, bc1, bc2)
+            out = tree_map(
+                lambda p, g, m, v: ops.fused_adamw(p, g, m, v, sc, b1=b1,
+                                                   b2=b2, eps=eps,
+                                                   wd=weight_decay),
+                params, grads, state["mu"], state["nu"])
+        else:
+            from ..kernels.fused_optim import adamw_ref
+            out = tree_map(
+                lambda p, g, m, v: adamw_ref(p, g, m, v, scale, lr_t, bc1,
+                                             bc2, b1, b2, eps,
+                                             weight_decay),
+                params, grads, state["mu"], state["nu"])
+        return (_unzip(out, params, 0),
+                {"count": c, "mu": _unzip(out, params, 1),
+                 "nu": _unzip(out, params, 2)})
 
     return Optimizer(init, step, "adamw")
 

@@ -44,7 +44,10 @@ def _make_plan_train_step(cfg: ModelConfig, chain: ChainConfig,
             f"grad program {plan.grad!r} returns a program-defined upload, "
             "not an adapter delta — the pod step's FedAvg + scatter commit "
             "cannot consume it (use the federated engine's cohort path)")
-    opt = make_optimizer(chain.optimizer, chain.lr)
+    opt = make_optimizer(chain.optimizer, chain.lr,
+                         opt_bits=(plan.opt_bits if plan.opt_bits is not None
+                                   else getattr(chain, "opt_bits", 32)),
+                         fused=getattr(chain, "fused_optim", None))
     client_update = make_client_update(cfg, chain, plan, opt)
 
     def step(params, adapters, batch, key=None):

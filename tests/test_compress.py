@@ -1,0 +1,202 @@
+"""Update compression on the cohort hot path (ISSUE 10): top-k / QSGD
+leaf transforms, error-feedback convergence on a quadratic fixture,
+``comm_bytes_per_round`` accounting, the composition guards in
+``enable_compression``, and bit-identical kill/resume of the residual
+state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.fed.compress import (CompressionConfig, enable_compression,
+                                make_compress_fn)
+from repro.fed.registry import make_strategy, run_experiment
+from repro.models.config import ChainConfig, FedConfig
+
+CFG = get_config("bert_tiny").replace(n_layers=4, d_model=64, d_ff=128)
+CHAIN = ChainConfig(window=2, local_steps=1, lr=3e-3)
+KEY = jax.random.PRNGKey(0)
+
+
+def _run_kw(**over):
+    kw = dict(cfg=CFG, chain=CHAIN,
+              fed=FedConfig(n_clients=6, clients_per_round=3, seed=3),
+              batch_size=4, memory_constrained=False, rounds=3, eval_every=3)
+    kw.update(over)
+    return kw
+
+
+# ================================================================ primitives
+def test_topk_keeps_largest_per_row():
+    fn = make_compress_fn(CompressionConfig(kind="topk", ratio=0.25,
+                                            error_feedback=False))
+    x = jnp.asarray([[1.0, -5.0, 0.1, 3.0, 0.0, -0.2, 2.0, 0.05]])
+    updates = {"w": x}
+    res = {"w": jnp.zeros((8,))}
+    out, new_res = fn(updates, {"w": res["w"][None]}, jax.random.PRNGKey(0))
+    got = np.asarray(out["w"][0])
+    assert np.count_nonzero(got) == 2            # ceil(8 * 0.25)
+    assert got[1] == -5.0 and got[3] == 3.0      # the two largest magnitudes
+    # no EF → residuals stay zero
+    assert np.all(np.asarray(new_res["w"]) == 0.0)
+
+
+def test_error_feedback_carries_the_remainder():
+    fn = make_compress_fn(CompressionConfig(kind="topk", ratio=0.5))
+    x = jnp.asarray([[4.0, 1.0, -3.0, 0.5]])
+    out, res = fn({"w": x}, {"w": jnp.zeros((1, 4))}, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(out["w"] + res["w"]),
+                               np.asarray(x), atol=1e-7)
+
+
+def test_qsgd_unbiased_and_bounded():
+    fn = make_compress_fn(CompressionConfig(kind="qsgd", error_feedback=False))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 129)) * 2.0
+    outs = [np.asarray(fn({"w": x}, {"w": jnp.zeros_like(x)},
+                          jax.random.PRNGKey(s))[0]["w"])
+            for s in range(24)]
+    step = np.abs(np.asarray(x)).max(axis=1, keepdims=True) / 127.0
+    for o in outs:                               # within one quantization step
+        assert np.all(np.abs(o - np.asarray(x)) <= step + 1e-6)
+    # stochastic rounding is unbiased: the mean over draws approaches x
+    err = np.abs(np.mean(outs, axis=0) - np.asarray(x))
+    assert err.mean() < 0.25 * step.mean()
+
+
+def test_ef_compression_converges_on_quadratic():
+    """Aggressive top-k (5%) diverges-or-stalls without error feedback on a
+    rotated quadratic, converges with it — the EF-SGD headline property."""
+    d = 64
+    key = jax.random.PRNGKey(2)
+    A = jax.random.normal(key, (d, d)) / jnp.sqrt(d)
+    H = A @ A.T + 0.1 * jnp.eye(d)
+    loss = lambda w: 0.5 * w @ H @ w
+    gfn = jax.jit(jax.grad(loss))
+
+    def run(error_feedback):
+        fn = make_compress_fn(CompressionConfig(
+            kind="topk", ratio=0.05, error_feedback=error_feedback))
+        w = jnp.ones(d)
+        res = {"g": jnp.zeros((1, d))}
+        for i in range(300):
+            g = {"g": gfn(w)[None]}
+            comp, res = fn(g, res, jax.random.fold_in(key, i))
+            if not error_feedback:
+                res = {"g": jnp.zeros((1, d))}
+            w = w - 0.1 * comp["g"][0]
+        return float(loss(w))
+
+    l0 = float(loss(jnp.ones(d)))
+    with_ef, without_ef = run(True), run(False)
+    assert with_ef < 1e-3 * l0
+    assert with_ef < without_ef * 0.5
+
+
+# ============================================================== byte account
+def test_compressed_bytes_math():
+    n = 1000
+    fp32 = 4 * n
+    topk = CompressionConfig(kind="topk", ratio=0.05)
+    assert topk.compressed_bytes(fp32) == 50 * 8          # (value, index) pairs
+    qsgd = CompressionConfig(kind="qsgd")
+    assert qsgd.compressed_bytes(fp32) == n + 4           # int8 payload + scale
+
+
+def test_comm_bytes_per_round_reflects_compression():
+    dense = run_experiment("chainfed", **_run_kw())
+    comp = run_experiment("chainfed", **_run_kw(
+        compress={"kind": "qsgd", "error_feedback": False}))
+    db = dense.history[-1].comm_bytes
+    cb = comp.history[-1].comm_bytes
+    assert 0 < cb < db
+    # ~4x: fp32 → int8 payload (+1 fp32 scale per leaf)
+    assert cb < db / 3
+
+
+def test_qsgd_loss_close_to_dense():
+    dense = run_experiment("chainfed", **_run_kw(rounds=4))
+    comp = run_experiment("chainfed", **_run_kw(
+        rounds=4, compress={"kind": "qsgd"}))
+    assert abs(comp.history[-1].loss - dense.history[-1].loss) < 0.1
+
+
+# ==================================================================== guards
+def test_config_validation():
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="nope")
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="topk", ratio=0.0)
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="qsgd", bits=4)
+
+
+def test_enable_after_compile_refused():
+    strat = make_strategy("chainfed", CFG, CHAIN, KEY, use_foat=False)
+    strat.engine._cohort["sentinel"] = lambda: None
+    with pytest.raises(RuntimeError, match="compil"):
+        enable_compression(strat)
+
+
+def test_enable_with_secure_agg_refused():
+    from repro.fed.privacy import SecureAggConfig, enable_secure_agg
+    strat = make_strategy("chainfed", CFG, CHAIN, KEY, use_foat=False)
+    enable_secure_agg(strat, SecureAggConfig(cohort=3))
+    with pytest.raises(ValueError, match="secure"):
+        enable_compression(strat)
+
+
+def test_enable_with_adaptive_clip_dp_refused():
+    from repro.fed.privacy import DPConfig, enable_dp
+    strat = make_strategy("chainfed", CFG, CHAIN, KEY, use_foat=False)
+    enable_dp(strat, DPConfig(clip=1.0, noise_multiplier=0.5,
+                              adaptive_clip=True))
+    with pytest.raises(ValueError, match="adaptive"):
+        enable_compression(strat)
+
+
+def test_fixed_clip_dp_composes():
+    res = run_experiment("chainfed", **_run_kw(
+        rounds=2, compress={"kind": "topk", "ratio": 0.25},
+        dp={"clip": 1.0, "noise_multiplier": 0.3}))
+    assert np.isfinite(res.history[-1].loss)
+
+
+def test_whole_client_plan_refused_at_round_time():
+    res_kw = _run_kw(rounds=1, compress={"kind": "topk", "ratio": 0.5})
+    with pytest.raises(ValueError, match="delta-style"):
+        run_experiment("fedkseed", **res_kw)
+
+
+# ================================================================ kill/resume
+def test_compress_kill_resume_bit_identical(tmp_path):
+    """Error-feedback residuals and the compression PRNG key are part of the
+    checkpoint: a halted+resumed run reproduces the uninterrupted one."""
+    kw = _run_kw(rounds=4, eval_every=2,
+                 compress={"kind": "topk", "ratio": 0.25})
+    full = run_experiment("chainfed", **kw)
+    ck = tmp_path / "c.msgpack"
+    run_experiment("chainfed", **kw, checkpoint_every=2, checkpoint_path=ck,
+                   halt_after=2)
+    resumed = run_experiment("chainfed", **kw, resume=ck)
+    assert full.history == resumed.history
+    for x, y in zip(jax.tree_util.tree_leaves(full.strategy.adapters),
+                    jax.tree_util.tree_leaves(resumed.strategy.adapters)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    # the residual store itself round-tripped
+    r_full = full.strategy._compress_residuals
+    r_res = resumed.strategy._compress_residuals
+    assert set(r_full) == set(r_res)
+    for cid in r_full:
+        for x, y in zip(jax.tree_util.tree_leaves(r_full[cid]),
+                        jax.tree_util.tree_leaves(r_res[cid])):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_refuses_config_mismatch(tmp_path):
+    kw = _run_kw(rounds=3, compress={"kind": "topk", "ratio": 0.25})
+    ck = tmp_path / "c.msgpack"
+    run_experiment("chainfed", **kw, checkpoint_every=1, checkpoint_path=ck,
+                   halt_after=1)
+    with pytest.raises(ValueError):
+        run_experiment("chainfed", **_run_kw(rounds=3), resume=ck)

@@ -1,0 +1,243 @@
+"""Fused update+optimizer path (ISSUE 10): every route of the single-pass
+step — forced Pallas kernel (interpret here), backend-aware XLA fallback,
+int8 quantized state — against the legacy multi-``tree_map`` baseline;
+blockwise quantization error bounds; the int8 loss trajectory on a quadratic
+fixture; cohort ≡ sequential parity + one-compile steady state under the
+fused/int8 engine path; and bit-identical kill/resume with ``opt_bits=8``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.synthetic import (DATASETS, classification_batch,
+                                  make_classification)
+from repro.fed.engine import FedSim
+from repro.fed.registry import make_strategy, run_experiment
+from repro.models.config import ChainConfig, FedConfig
+from repro.optim.base import adamw, cosine_schedule, make_optimizer, sgd
+from repro.optim.quant import (QBLOCK, dequantize_blockwise,
+                               quantize_blockwise, zeros_quantized)
+
+CFG = get_config("bert_tiny").replace(n_layers=4, d_model=64, d_ff=128)
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(seed=0, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"a": jax.random.normal(k1, (33, 97)) * scale,
+            "b": jax.random.normal(k2, (130,)) * scale}
+
+
+def _run(opt, params, grads_list):
+    p, st = params, opt.init(params)
+    for g in grads_list:
+        p, st = opt.step(p, g, st)
+    return p, st
+
+
+def _assert_tree_close(a, b, atol=1e-6, rtol=1e-5):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol, rtol=rtol)
+
+
+# ====================================================== fp32 parity per route
+@pytest.mark.parametrize("fused", [None, True])
+def test_fused_adamw_matches_legacy(fused):
+    """Single-pass AdamW (XLA fallback and forced kernel) ≡ the legacy
+    multi-pass step, including clip scaling, weight decay, and the
+    bias-correction ``count`` over several steps."""
+    params = _tree(0)
+    grads = [_tree(s, 3.0) for s in (1, 2, 3)]     # norms > clip → scaling on
+    kw = dict(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01, clip=1.0)
+    ref, st_ref = _run(adamw(1e-2, fused=False, **kw), params, grads)
+    got, st_got = _run(adamw(1e-2, fused=fused, **kw), params, grads)
+    _assert_tree_close(ref, got)
+    _assert_tree_close(st_ref["mu"], st_got["mu"])
+    _assert_tree_close(st_ref["nu"], st_got["nu"])
+    assert int(st_got["count"]) == 3
+
+
+@pytest.mark.parametrize("fused", [None, True])
+@pytest.mark.parametrize("momentum", [0.0, 0.9])
+def test_fused_sgd_matches_legacy(fused, momentum):
+    params = _tree(0)
+    grads = [_tree(s, 3.0) for s in (1, 2)]
+    ref, _ = _run(sgd(1e-2, momentum=momentum, clip=0.5, fused=False),
+                  params, grads)
+    got, _ = _run(sgd(1e-2, momentum=momentum, clip=0.5, fused=fused),
+                  params, grads)
+    _assert_tree_close(ref, got)
+
+
+def test_fused_respects_lr_schedule():
+    """A callable lr resolves against the same ``count`` on every route."""
+    sched = cosine_schedule(1e-2, warmup_steps=2, total_steps=10)
+    params, grads = _tree(0), [_tree(s) for s in (1, 2, 3, 4)]
+    ref, _ = _run(adamw(sched, fused=False), params, grads)
+    got, _ = _run(adamw(sched, fused=True), params, grads)
+    _assert_tree_close(ref, got)
+
+
+# ========================================================== int8 state route
+def test_int8_kernel_matches_ref():
+    """The in-kernel dequant→update→requant ≡ the XLA reference built from
+    ``optim.quant`` primitives, for AdamW and SGD-momentum."""
+    params = _tree(0)
+    grads = [_tree(s, 2.0) for s in (1, 2, 3)]
+    for make in (lambda f: adamw(1e-2, opt_bits=8, fused=f),
+                 lambda f: sgd(1e-2, momentum=0.9, opt_bits=8, fused=f)):
+        ref, st_ref = _run(make(None), params, grads)
+        got, st_got = _run(make(True), params, grads)
+        _assert_tree_close(ref, got, atol=1e-5, rtol=1e-4)
+        for k in st_ref:
+            _assert_tree_close(st_ref[k], st_got[k], atol=1, rtol=0)
+
+
+def test_int8_state_structure_and_dtypes():
+    opt = adamw(1e-2, opt_bits=8)
+    st = opt.init(_tree(0))
+    assert set(st) == {"count", "mu_q", "mu_s", "nu_q", "nu_s"}
+    assert st["mu_q"]["a"].dtype == jnp.int8
+    assert st["mu_q"]["a"].shape == (33, 97)
+    assert st["mu_s"]["a"].dtype == jnp.float32
+    assert st["mu_s"]["a"].shape == ((33 * 97 + QBLOCK - 1) // QBLOCK,)
+
+
+def test_int8_loss_trajectory_tracks_fp32():
+    """Quadratic fixture ½‖w − w*‖²: the int8-state AdamW loss trajectory
+    stays within a few percent of fp32 and reaches the same basin."""
+    target = jax.random.normal(jax.random.PRNGKey(7), (257,))
+    loss = lambda p: 0.5 * jnp.sum((p["w"] - target) ** 2)
+    gfn = jax.jit(jax.value_and_grad(loss))
+
+    def traj(bits):
+        opt = adamw(0.05, clip=None, weight_decay=0.0, opt_bits=bits)
+        p = {"w": jnp.zeros(257)}
+        st = opt.init(p)
+        out = []
+        for _ in range(60):
+            l, g = gfn(p)
+            out.append(float(l))
+            p, st = opt.step(p, g, st)
+        return np.asarray(out)
+
+    l32, l8 = traj(32), traj(8)
+    assert l8[-1] < 0.05 * l8[0]                 # converges
+    np.testing.assert_allclose(l8, l32, rtol=0.15, atol=0.5)
+
+
+# ======================================================= quantizer primitives
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 300)) * 4.0
+    q, s = quantize_blockwise(x)
+    back = dequantize_blockwise(q, s)
+    # per-element error ≤ half a quantization step of its own block
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    step = np.repeat(np.asarray(s), QBLOCK)[:x.size].reshape(x.shape)
+    assert np.all(err <= 0.5 * step + 1e-7)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+
+
+def test_quantize_zero_block_is_exact():
+    x = jnp.zeros((QBLOCK * 2,))
+    q, s = quantize_blockwise(x)
+    assert np.all(np.asarray(s) == 0.0)
+    assert np.all(np.asarray(dequantize_blockwise(q, s)) == 0.0)
+    zq, zs = zeros_quantized((QBLOCK * 2,))
+    assert np.array_equal(np.asarray(zq), np.asarray(q))
+    assert np.array_equal(np.asarray(zs), np.asarray(s))
+
+
+def test_quantize_partial_trailing_block():
+    x = jnp.arange(1.0, QBLOCK + 8.0)            # one full + 7-elem block
+    back = dequantize_blockwise(*quantize_blockwise(x))
+    assert back.shape == x.shape
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               rtol=0.01, atol=0.05)
+
+
+# ================================================= engine-level int8 + fused
+def _build_sim(seed=3):
+    spec = dataclasses.replace(DATASETS["agnews"], vocab=CFG.vocab_size)
+    tokens, labels = make_classification(spec)
+    batch_fn = lambda idx: {k: jnp.asarray(v) for k, v in
+                            classification_batch(spec, tokens, labels,
+                                                 idx).items()}
+    fed = FedConfig(n_clients=6, clients_per_round=3, seed=seed)
+    return FedSim(CFG, fed, tokens, labels, batch_fn, batch_size=4,
+                  memory_constrained=False)
+
+
+@pytest.mark.parametrize("opt_bits", [32, 8])
+def test_cohort_matches_sequential_under_fused(opt_bits):
+    """Cohort ≡ sequential parity holds on the single-pass path (both
+    precisions), and the steady state stays at one compile per plan."""
+    chain = ChainConfig(window=2, local_steps=2, lr=1e-3, opt_bits=opt_bits)
+
+    def run(path):
+        sim = _build_sim()
+        strat = make_strategy("chainfed", CFG, chain, KEY, use_foat=False)
+        strat._foat_done = True
+        for r in range(2):
+            clients = sim.sample_clients(strat.memory_method,
+                                         **strat.memory_kwargs(r))
+            getattr(strat, "round" if path == "cohort"
+                    else "sequential_round")(sim, clients, r)
+        return strat
+
+    a, b = run("cohort"), run("sequential")
+    tol = dict(atol=1e-6, rtol=1e-5) if opt_bits == 32 else \
+        dict(atol=1e-4, rtol=1e-3)
+    _assert_tree_close(a.adapters, b.adapters, **tol)
+    _assert_tree_close(a.head, b.head, **tol)
+    for f in a.engine._cohort.values():
+        if hasattr(f, "_cache_size"):
+            assert f._cache_size() == 1
+
+
+def test_opt_bits8_kill_resume_bit_identical(tmp_path):
+    """int8 optimizer state (and the rest of the run) survives a mid-run
+    kill bit for bit — the ISSUE 10 checkpoint criterion."""
+    chain = ChainConfig(window=2, local_steps=1, lr=3e-3, opt_bits=8)
+    kw = dict(cfg=CFG, chain=chain,
+              fed=FedConfig(n_clients=6, clients_per_round=3, seed=3),
+              batch_size=4, memory_constrained=False, rounds=4, eval_every=2)
+    full = run_experiment("chainfed", **kw)
+    ck = tmp_path / "exp.msgpack"
+    run_experiment("chainfed", **kw, checkpoint_every=2, checkpoint_path=ck,
+                   halt_after=2)
+    resumed = run_experiment("chainfed", **kw, resume=ck)
+    assert full.history == resumed.history
+    for x, y in zip(jax.tree_util.tree_leaves(full.strategy.adapters),
+                    jax.tree_util.tree_leaves(resumed.strategy.adapters)):
+        assert x.dtype == y.dtype and np.array_equal(np.asarray(x),
+                                                     np.asarray(y))
+
+
+def test_int8_moments_round_trip_checkpoint_io(tmp_path):
+    """``ckpt.io`` must carry int8 payloads + fp32 scales losslessly."""
+    from repro.ckpt.io import load_state, save_state
+    opt = adamw(1e-2, opt_bits=8)
+    p = _tree(0)
+    p2, st = _run(opt, p, [_tree(1, 2.0)])
+    save_state(tmp_path / "m.msgpack", {"st": st})
+    got = load_state(tmp_path / "m.msgpack")["st"]
+    for k in ("mu_q", "nu_q"):
+        for x, y in zip(jax.tree_util.tree_leaves(st[k]),
+                        jax.tree_util.tree_leaves(got[k])):
+            assert y.dtype == jnp.int8
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+    for k in ("mu_s", "nu_s"):
+        for x, y in zip(jax.tree_util.tree_leaves(st[k]),
+                        jax.tree_util.tree_leaves(got[k])):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_make_optimizer_rejects_bad_bits():
+    with pytest.raises(ValueError, match="opt_bits"):
+        make_optimizer("adamw", 1e-3, opt_bits=16)

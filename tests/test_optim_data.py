@@ -48,6 +48,27 @@ def test_clip_by_global_norm():
     assert abs(total - 1.0) < 1e-5
 
 
+def test_clip_zero_gradients_scale_exactly_one():
+    """Regression (ISSUE 10): the old ``max_norm / (gn + 1e-9)`` form gave a
+    huge-but-finite scale on an all-zero gradient tree; the ``where``-guarded
+    form must return the gradients bit-exactly unscaled."""
+    g = {"a": jnp.zeros((3, 4)), "b": jnp.zeros((7,))}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == 0.0
+    for x, y in zip(jax.tree_util.tree_leaves(g),
+                    jax.tree_util.tree_leaves(clipped)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_clip_below_threshold_is_identity():
+    """Norms under the bound must not be rescaled at all (the legacy form
+    multiplied by ``min(1, max/(gn+eps))`` ≈ 1 − eps·…, a real perturbation)."""
+    g = {"a": jnp.array([0.3, -0.4])}        # gn = 0.5 < 1.0
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 0.5) < 1e-7
+    assert np.array_equal(np.asarray(clipped["a"]), np.asarray(g["a"]))
+
+
 def test_cosine_schedule_shape():
     sched = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
     assert float(sched(jnp.array(0))) == 0.0
